@@ -1,0 +1,44 @@
+"""Tier-store traffic audit on the live engine: measured LKA savings vs the
+r = α + 2/n' model (paper Fig. 11 / §6.5 time overhead)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.tiers import lka_transfer_ratio
+from repro.models import lm
+from repro.serving.engine import EngineCfg, LeoAMEngine
+from repro.serving.offload import DISK
+
+
+def run() -> None:
+    cfg = get_config("longchat-7b-32k", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                       importance_rate=0.2, early_rate=0.4,
+                                       min_seq_for_sparse=32))
+    params = lm.init(cfg, jax.random.PRNGKey(1))
+    eng = LeoAMEngine(cfg, params, EngineCfg(max_len=256, gpu_chunk_frac=0.1,
+                                             cpu_chunk_frac=0.3,
+                                             selection="tree"))
+    rng = np.random.RandomState(0)
+    eng.generate(rng.randint(2, cfg.vocab_size, 200), 8)
+    log = eng.store.log
+    disk_kv = log.total(src=DISK, kind="kv")
+    disk_abs = log.total(src=DISK, kind="abstract")
+    full_disk = (eng.store.n_chunks * 0.6) * eng.store.chunk_bytes * \
+        len(eng.attn_layers) * 8
+    measured_r = (disk_kv + disk_abs) / max(full_disk, 1)
+    model_r = lka_transfer_ratio(cfg.leoam.importance_rate,
+                                 cfg.leoam.chunk_size)
+    emit("engine/lka_disk_traffic_ratio", 0.0,
+         f"measured={measured_r:.3f} model_r={model_r:.3f}")
+    ev = np.mean([s.evaluations for s in eng.stats])
+    emit("engine/evals_per_step", 0.0,
+         f"n={ev:.0f} token_level_would_be={eng.length * len(eng.attn_layers)}")
+    eng.store.close()

@@ -1,0 +1,45 @@
+"""Paper Fig. 10 (tree-structured evaluation counts) and Fig. 11 / §6.5
+(LKA transfer ratio r = α + 2/n' and abstract storage overhead)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.adaptive import (flat_chunk_select, pyramid_eval_count,
+                                 tree_select)
+from repro.core.tiers import abstract_overhead, lka_transfer_ratio
+
+
+def _clustered(rng, n, n_clusters, width):
+    s = np.abs(rng.randn(n)) * 0.01
+    for _ in range(n_clusters):
+        c = rng.randint(0, n - width)
+        s[c:c + width] += np.abs(rng.randn(width)) * 3 + 1
+    return s + rng.rand(n) * 1e-9
+
+
+def run() -> None:
+    # Fig. 10: evaluations at token / fixed-chunk / tree level
+    for n, label in ((2048, "2k"), (32768, "32k")):
+        evs_tree, evs_flat = [], []
+        for seed in range(10):
+            s = _clustered(np.random.RandomState(seed), n,
+                           n_clusters=max(4, n // 400), width=32)
+            budget = int(0.05 * n)
+            evs_tree.append(tree_select(s, budget, 64).evaluations)
+            evs_flat.append(flat_chunk_select(s, budget, 64).evaluations)
+        emit(f"fig10/evals_token/{label}", 0.0, f"n={n}")
+        emit(f"fig10/evals_chunk64/{label}", 0.0,
+             f"n={int(np.mean(evs_flat))}")
+        emit(f"fig10/evals_leoam_tree/{label}", 0.0,
+             f"n={int(np.mean(evs_tree))} ({n / np.mean(evs_tree):.1f}x fewer than token)")
+        dev = pyramid_eval_count(4, n // 64, int(0.1 * n // 64))
+        emit(f"fig10/evals_pyramid_device/{label}", 0.0, f"n={dev}")
+    # Fig. 11: LKA transfer ratio
+    for alpha in (0.05, 0.1, 0.2):
+        for chunk in (16, 32, 64, 128):
+            emit(f"fig11/lka_ratio/a{alpha}/c{chunk}", 0.0,
+                 f"r={lka_transfer_ratio(alpha, chunk):.4f}")
+    emit("sec6.5/abstract_storage_overhead/c64", 0.0,
+         f"{abstract_overhead(64) * 100:.2f}%(paper:<1.6%)")

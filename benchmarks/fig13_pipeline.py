@@ -1,0 +1,27 @@
+"""Paper Fig. 13: decode-step timelines — serial vs prefetch-pipelined vs
+DTP with dynamic compression (GPU idle time is the paper's target metric)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.pipeline import TierBW, schedule
+from repro.serving.simulator import HWCfg, ServeCfg, decode_step_costs
+
+
+def run() -> None:
+    cfg = get_config("longchat-7b-32k")
+    hw = HWCfg()
+    scfg = ServeCfg(batch=4, prompt=8192)
+    layers = decode_step_costs(cfg, scfg, hw, "leoam_iakm")
+    bw = TierBW(pcie=hw.pcie_bw, disk=hw.disk_bw, kappa=hw.decompress_kappa,
+                delta=hw.int4_ratio)
+    serial = schedule(layers, bw, pipelined=False)
+    pipe = schedule(layers, bw, pipelined=True, dynamic_compression=False)
+    dyn = schedule(layers, bw, pipelined=True, dynamic_compression=True)
+    for label, tl in (("a_serial", serial), ("b_prefetch", pipe),
+                      ("c_dtp_dyncomp", dyn)):
+        emit(f"fig13/{label}", tl.makespan * 1e6,
+             f"gpu_idle={tl.gpu_idle * 1e3:.1f}ms")
+    emit("fig13/theta_mean", 0.0,
+         f"theta={sum(dyn.thetas) / max(len(dyn.thetas), 1):.2f}")

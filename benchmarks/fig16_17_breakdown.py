@@ -1,0 +1,28 @@
+"""Paper Figs. 16/17: individual technique breakdown — latency and
+throughput for H2O-like baseline, +LKA, +IAKM, ALL (batch 2, rate 0.1)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.serving.simulator import ServeCfg, compare_policies
+
+STACK = [("baseline_h2o", "h2o"), ("+LKA", "leoam_lka"),
+         ("+IAKM", "leoam_iakm"), ("ALL", "leoam_all")]
+
+
+def run() -> None:
+    for model in ("longchat-7b-32k", "phi4-mini-3.8b"):
+        cfg = get_config(model)
+        scfg = ServeCfg(batch=2, prompt=8192, output=128, importance_rate=0.1)
+        res = compare_policies(cfg, scfg)
+        base = res["h2o"]
+        for label, pol in STACK:
+            r = res[pol]
+            red = (1 - r["total_s"] / base["total_s"]) * 100
+            tput_x = r["tokens_per_s"] / base["tokens_per_s"]
+            emit(f"fig16/{model}/{label}", r["total_s"] * 1e6,
+                 f"latency_reduction={red:.1f}%")
+            emit(f"fig17/{model}/{label}",
+                 1e6 / max(r["tokens_per_s"], 1e-9),
+                 f"throughput={tput_x:.2f}x")

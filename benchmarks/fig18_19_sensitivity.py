@@ -1,0 +1,29 @@
+"""Paper Fig. 18 (chunk-size sensitivity) and Fig. 19 (batch-size
+latency/throughput)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.serving.simulator import ServeCfg, simulate_request, HWCfg
+
+
+def run() -> None:
+    cfg = get_config("phi4-mini-3.8b")   # OPT-6.7B-class stand-in
+    hw = HWCfg()
+    # Fig. 18: latency falls with chunk size, diminishing past 64
+    prev = None
+    for chunk in (8, 16, 32, 64, 128):
+        r = simulate_request(cfg, ServeCfg(batch=1, prompt=8192, output=128,
+                                           chunk=chunk,
+                                           importance_rate=0.2), hw,
+                             "leoam_all")
+        d = "" if prev is None else f"delta={100 * (prev - r['total_s']) / prev:.1f}%"
+        emit(f"fig18/chunk{chunk}", r["total_s"] * 1e6, d or "-")
+        prev = r["total_s"]
+    # Fig. 19: batch scaling
+    for batch in (1, 2, 4, 8, 16):
+        r = simulate_request(cfg, ServeCfg(batch=batch, prompt=8192,
+                                           output=128), hw, "leoam_all")
+        emit(f"fig19/batch{batch}", r["total_s"] * 1e6,
+             f"tput={r['tokens_per_s']:.2f}tok_s")

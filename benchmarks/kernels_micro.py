@@ -1,0 +1,39 @@
+"""Kernel microbenchmarks: jnp reference vs interpret-mode Pallas (CPU
+timing is NOT TPU-representative — the derived column carries the analytic
+VMEM working set and arithmetic intensity instead)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.chunk_bounds.ops import chunk_bounds
+from repro.kernels.sparse_decode.ops import sparse_decode
+
+
+def run() -> None:
+    rng = np.random.RandomState(0)
+    # chunk_bounds at decode_32k geometry (per shard)
+    B, Hkv, G, hd, nc = 8, 8, 12, 128, 128
+    q = jnp.asarray(rng.randn(B, Hkv, G, hd).astype(np.float32))
+    km = jnp.asarray(rng.randn(B, Hkv, nc, hd).astype(np.float32))
+    kn = km - 1.0
+    t_ref = time_fn(jax.jit(lambda *a: chunk_bounds(*a, impl="ref")), q, km, kn)
+    flops = 4 * B * Hkv * G * nc * hd * 2
+    emit("kernel/chunk_bounds/ref_jit", t_ref,
+         f"flops={flops:.2e} vmem_tile={(G * hd + 2 * 128 * hd) * 4 / 2**10:.0f}KiB")
+    # sparse_decode at long_500k per-shard geometry
+    B, Hkv, G, hd, S, chunk, nsel = 1, 8, 12, 128, 1024, 64, 8
+    q = jnp.asarray(rng.randn(B, Hkv, G, hd).astype(np.float32))
+    k = jnp.asarray(rng.randn(B, S, Hkv, hd).astype(np.float32))
+    v = jnp.asarray(rng.randn(B, S, Hkv, hd).astype(np.float32))
+    ids = jnp.asarray(rng.randint(0, S // chunk, (B, Hkv, nsel)), jnp.int32)
+    t_ref = time_fn(jax.jit(
+        lambda *a: sparse_decode(*a, chunk=chunk, impl="ref")),
+        q, k, v, ids, jnp.int32(S))
+    moved = nsel * chunk * hd * 2 * 2
+    emit("kernel/sparse_decode/ref_jit", t_ref,
+         f"hbm_bytes_per_bh={moved / 2**10:.0f}KiB "
+         f"vmem_tile={(chunk * hd * 2 * 4) / 2**10:.0f}KiB")

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Roofline terms come from the dry-run artifacts — see
+``python -m repro.launch.roofline`` (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (engine_audit, fig4_5_overheads, fig7_8_desert,
+                            fig10_11_evals, fig13_pipeline, fig14_quality,
+                            fig15_latency, fig16_17_breakdown,
+                            fig18_19_sensitivity, kernels_micro)
+    print("name,us_per_call,derived")
+    modules = [
+        ("fig4_5", fig4_5_overheads), ("fig7_8", fig7_8_desert),
+        ("fig10_11", fig10_11_evals), ("fig13", fig13_pipeline),
+        ("fig14", fig14_quality), ("fig15", fig15_latency),
+        ("fig16_17", fig16_17_breakdown), ("fig18_19", fig18_19_sensitivity),
+        ("kernels", kernels_micro), ("engine", engine_audit),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = []
+    for name, mod in modules:
+        if only and only not in name:
+            continue
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

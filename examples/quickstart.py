@@ -1,0 +1,58 @@
+"""Quickstart: LeoAM sparse decode on a small model, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the public API surface: config registry → model init → prefill →
+LeoAM decode (abstract pyramid + adaptive selection) vs dense decode, and
+how close the budgeted output stays to the full-cache output.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+
+
+def main() -> None:
+    # 1. pick an architecture (any of the ten assigned ids works)
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                       importance_rate=0.15,
+                                       min_seq_for_sparse=64))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+
+    # 2. prefill a prompt; the cache carries KV + the LKA abstract pyramid
+    rng = np.random.RandomState(0)
+    prompt = jnp.asarray(rng.randint(2, cfg.vocab_size, (1, 255)), jnp.int32)
+    logits, cache = lm.prefill(params, cfg, {"tokens": prompt}, max_len=256)
+    tok = int(jnp.argmax(logits[0]))
+    print(f"prefill done; first token {tok}")
+    print("cache leaves:", sorted(cache["prologue"][0].keys()))
+
+    # 3. decode with LeoAM adaptive selection (15% budget + sink/recent)
+    logits_sparse, _ = lm.decode_step(params, cfg, cache,
+                                      {"token": jnp.asarray([tok])},
+                                      jnp.int32(255))
+
+    # 4. compare against dense decode (full cache attended)
+    dense = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, min_seq_for_sparse=10**9))
+    logits_dense, _ = lm.decode_step(params, dense, cache,
+                                     {"token": jnp.asarray([tok])},
+                                     jnp.int32(255))
+    a, b = np.asarray(logits_sparse[0]), np.asarray(logits_dense[0])
+    cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)))
+    print(f"sparse-vs-dense logits: cos={cos:.4f} "
+          f"argmax_agree={a.argmax() == b.argmax()}")
+    print("note: random-init attention is near-uniform (the technique's "
+          "worst case); on attention-concentrated caches the same budget "
+          "gives <1% error — see tests/test_sparse_attention.py")
+
+
+if __name__ == "__main__":
+    main()

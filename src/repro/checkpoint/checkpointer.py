@@ -1,0 +1,132 @@
+"""Checkpointing: atomic step directories, async save, reshard-on-restore.
+
+Layout::
+
+    <root>/step_000100.tmp/   (written, then atomically renamed)
+    <root>/step_000100/
+        meta.json             (step, tree structure, shapes/dtypes)
+        <flat..path>.npy      (one file per leaf, host-gathered)
+
+Restore accepts a *different* mesh/sharding than the save used: leaves are
+loaded on host and ``jax.device_put`` with the new sharding — this is the
+elastic-rescale path (``runtime.elastic``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, root: str, *, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[Any] = None
+        os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def save(self, step: int, tree: Any, *, block: bool = False) -> None:
+        """Host-gather then write; async by default (double-buffered)."""
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        fut = self._pool.submit(self._write, step, host_tree)
+        self._pending = fut
+        if block or not self.async_save:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_tree)
+        meta = {"step": step, "leaves": {}}
+        for key, leaf in flat:
+            fname = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fname), leaf)
+            meta["leaves"][key] = {"file": fname,
+                                   "shape": list(np.shape(leaf)),
+                                   "dtype": str(np.asarray(leaf).dtype)}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[len("step_"):]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Tuple[Any, int]:
+        """Load into the structure of ``template``; device_put with
+        ``shardings`` when given (elastic reshard)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        flat_t = _flatten(template)
+        shard_flat = _flatten(shardings) if shardings is not None else None
+        leaves = []
+        for i, (key, leaf) in enumerate(flat_t):
+            info = meta["leaves"][key]
+            arr = np.load(os.path.join(d, info["file"]))
+            want = tuple(np.shape(leaf)) if hasattr(leaf, "shape") else None
+            if want is not None and tuple(arr.shape) != want:
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {want}")
+            if shard_flat is not None:
+                arr = jax.device_put(arr, shard_flat[i][1])
+            leaves.append(arr)
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,299 @@
+"""IAKM — Importance-aware Adaptive KV Management (paper §4.2).
+
+Two implementations of the same tree semantics:
+
+* :func:`tree_select` — the paper's exact host-side algorithm: a max-heap of
+  variable-size chunks ordered by upper bound; pop → confirm / split; desert
+  runs merge into coarse chunks.  Used by the serving engine and by the
+  fidelity/eval-count benchmarks (Fig. 10).  Exact top-T with provably
+  correct confirmation rules; evaluation count is the paper's cost metric.
+
+* :func:`pyramid_select_gqa` / :func:`pyramid_select_mla` — the TPU-native
+  fixed-shape equivalent: descend the abstract pyramid coarse→fine keeping a
+  bounded candidate beam per level (`lax.top_k`).  Staying coarse == merge,
+  descending == split.  jit/pjit-able, used inside the decode step.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abstracts import Pyramid
+from repro.core.bounds import (chunk_bounds_gqa_matmul, chunk_bounds_mla,
+                               positive_negative_split)
+
+# ---------------------------------------------------------------------------
+# Host-side exact tree selection (paper Fig. 10)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TreeSelectResult:
+    selected: np.ndarray            # sorted token indices, len == budget
+    evaluations: int                # chunk-bound evaluations performed
+    partition: List[Tuple[int, int, bool]]  # (lo, hi, important) final chunks
+    transfer_tokens: int            # tokens fetched (selected segments only)
+
+    @property
+    def transfer_ratio(self) -> float:
+        """Fraction of fetched tokens that are truly wanted (paper's metric)."""
+        return len(self.selected) / max(1, self.transfer_tokens)
+
+
+def tree_select(scores: np.ndarray, budget: int, chunk: int,
+                max_merge_span: Optional[int] = None) -> TreeSelectResult:
+    """Exact top-``budget`` token selection with minimal chunk evaluations.
+
+    ``scores`` are per-token importance values (attention-mass proxy); one
+    "evaluation" computes a chunk's (ub, lb) from its abstract.  Branch and
+    bound: the max-ub segment on the heap either (a) is a single token →
+    confirmed, (b) has lb >= every other segment's ub → wholly confirmed
+    (the paper's "at least 4 important tokens in Chunk₇¹" step), or (c) is
+    split in two (two new evaluations).  Unpopped segments form the
+    attention desert and are merged for the next step's partition.
+    """
+    n = len(scores)
+    budget = min(budget, n)
+    n_chunks = math.ceil(n / chunk)
+    evals = 0
+
+    # heap of (-ub, lo, hi, lb); ub/lb from the chunk "abstract"
+    heap: List[Tuple[float, int, int, float]] = []
+    for c in range(n_chunks):
+        lo, hi = c * chunk, min((c + 1) * chunk, n)
+        seg = scores[lo:hi]
+        evals += 1
+        heapq.heappush(heap, (-float(seg.max()), lo, hi, float(seg.min())))
+
+    selected: List[int] = []
+    confirmed_segs: List[Tuple[int, int]] = []
+    while len(selected) < budget and heap:
+        nub, lo, hi, lb = heapq.heappop(heap)
+        size = hi - lo
+        remaining = budget - len(selected)
+        next_ub = -heap[0][0] if heap else -np.inf
+        if size == 1:
+            selected.append(lo)
+            confirmed_segs.append((lo, hi))
+            continue
+        if lb >= next_ub and size <= remaining:
+            # whole segment provably in the top set
+            selected.extend(range(lo, hi))
+            confirmed_segs.append((lo, hi))
+            continue
+        mid = lo + size // 2
+        for a, b in ((lo, mid), (mid, hi)):
+            seg = scores[a:b]
+            evals += 1
+            heapq.heappush(heap, (-float(seg.max()), a, b, float(seg.min())))
+
+    selected_arr = np.array(sorted(selected), dtype=np.int64)
+
+    # Final partition: confirmed segments + merged desert runs.
+    span_cap = max_merge_span or (chunk * 8)
+    important = np.zeros(n, dtype=bool)
+    important[selected_arr] = True
+    partition: List[Tuple[int, int, bool]] = []
+    i = 0
+    while i < n:
+        j = i
+        flag = bool(important[i])
+        cap = n if flag else min(n, i + span_cap)
+        while j < cap and (j == i or important[j] == flag):
+            j += 1
+            if flag and j < n and not important[j]:
+                break
+        partition.append((i, j, flag))
+        i = j
+    transfer = sum(hi - lo for lo, hi, imp in partition if imp)
+    return TreeSelectResult(selected_arr, evals, partition, transfer)
+
+
+def flat_chunk_select(scores: np.ndarray, budget: int, chunk: int
+                      ) -> TreeSelectResult:
+    """Quest-like fixed-chunk baseline: score every chunk, take top chunks."""
+    n = len(scores)
+    n_chunks = math.ceil(n / chunk)
+    ubs = np.array([scores[c * chunk: (c + 1) * chunk].max() for c in range(n_chunks)])
+    order = np.argsort(-ubs)
+    picked: List[int] = []
+    transfer = 0
+    top_tokens = set(np.argsort(-scores)[:budget].tolist())
+    chosen = []
+    for c in order:
+        if len(picked) >= budget:
+            break
+        lo, hi = c * chunk, min((c + 1) * chunk, n)
+        chosen.append((lo, hi, True))
+        transfer += hi - lo
+        picked.extend(t for t in range(lo, hi) if t in top_tokens)
+    hit = np.array(sorted(set(picked)), dtype=np.int64)
+    res = TreeSelectResult(hit, n_chunks, chosen, transfer)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Device-side pyramid refinement (fixed shapes)
+# ---------------------------------------------------------------------------
+
+
+def _beam_sizes(levels: int, budget: int, nc: Sequence[int], rf: int,
+                forced: int) -> List[int]:
+    """Candidates kept per level (index 0 = finest)."""
+    out = []
+    for lvl in range(levels):
+        want = rf * max(1, -(-budget // (1 << lvl))) + forced
+        out.append(min(nc[lvl], want))
+    return out
+
+
+def _ub_gathered(q4: jax.Array, km: jax.Array, kn: jax.Array) -> jax.Array:
+    """ub for gathered boxes.  q4: (B,Hkv,G,hd); km/kn: (B,Hkv,C,hd)."""
+    qp, qn = positive_negative_split(q4.astype(jnp.float32))
+    ub = (jnp.einsum("bkgd,bkcd->bkgc", qp, km.astype(jnp.float32))
+          + jnp.einsum("bkgd,bkcd->bkgc", qn, kn.astype(jnp.float32)))
+    return jnp.sum(ub, axis=2)
+
+
+def _force_bias(ub: jax.Array, ids: jax.Array, lvl: int, nc0: int,
+                sink_chunks: int, recent_chunks: int,
+                n_valid0, chunk_offset=0) -> jax.Array:
+    """+inf bias for sink/recent nodes so they always survive the beam.
+
+    ``chunk_offset``/``n_valid0`` are in GLOBAL base-chunk units: under
+    sequence sharding only the shard owning the global sink (or the tail)
+    forces those chunks — naive per-shard forcing burned ~40% of every
+    shard's budget on non-sink chunks (§Perf C3).
+    """
+    span = 1 << lvl
+    gids = ids * span + chunk_offset            # global base-chunk of node
+    forced = jnp.zeros_like(ub, dtype=bool)
+    if sink_chunks:
+        forced = forced | (gids < sink_chunks)
+    if recent_chunks:
+        # node covers [gids, gids+span): force if it overlaps the tail
+        forced = forced | ((gids + span) > (n_valid0 - recent_chunks))
+    forced = forced & (gids < n_valid0)
+    return jnp.where(forced, jnp.inf, ub)
+
+
+def pyramid_select_gqa(q: jax.Array, pyr: Pyramid, budget: int, *,
+                       rf: int = 2, sink_chunks: int = 1,
+                       recent_chunks: int = 2,
+                       n_valid0: Optional[jax.Array] = None,
+                       chunk_offset=0) -> jax.Array:
+    """Select ``budget`` base chunks per (batch, kv-head).
+
+    q: (B, H, hd) scaled+roped query.  Returns int32 ids (B, Hkv, budget).
+    ``n_valid0``: GLOBAL valid base-chunk count; ``chunk_offset``: this
+    shard's global base-chunk offset (0 when unsharded).
+    """
+    L = pyr.levels
+    B, H, hd = q.shape
+    Hkv = pyr.kmax[0].shape[2]
+    nc = [pyr.kmax[l].shape[1] for l in range(L)]
+    budget = min(budget, nc[0])
+    if n_valid0 is None:
+        n_valid0 = nc[0]
+    forced = sink_chunks + recent_chunks
+    beams = _beam_sizes(L, budget, nc, rf, forced)
+    q4 = q.reshape(B, Hkv, H // Hkv, hd)
+
+    # coarsest level: score everything
+    ub, _ = chunk_bounds_gqa_matmul(q, pyr.kmax[L - 1], pyr.kmin[L - 1])
+    ids = jnp.broadcast_to(jnp.arange(nc[L - 1], dtype=jnp.int32),
+                           ub.shape)                     # (B,Hkv,ncL)
+    ub = _force_bias(ub, ids, L - 1, nc[0], sink_chunks, recent_chunks,
+                     n_valid0, chunk_offset)
+    _, sel = jax.lax.top_k(ub, beams[L - 1])
+    ids = jnp.take_along_axis(ids, sel, axis=-1)         # (B,Hkv,beamL)
+
+    for lvl in range(L - 2, -1, -1):
+        ids = jnp.concatenate([ids * 2, ids * 2 + 1], axis=-1)  # children
+        km = jnp.swapaxes(pyr.kmax[lvl], 1, 2)           # (B,Hkv,nc,hd)
+        kn = jnp.swapaxes(pyr.kmin[lvl], 1, 2)
+        gkm = jnp.take_along_axis(km, ids[..., None], axis=2)
+        gkn = jnp.take_along_axis(kn, ids[..., None], axis=2)
+        ub = _ub_gathered(q4, gkm, gkn)                  # (B,Hkv,2*beam)
+        ub = _force_bias(ub, ids, lvl, nc[0], sink_chunks, recent_chunks,
+                         n_valid0, chunk_offset)
+        width = beams[lvl] if lvl > 0 else budget
+        _, sel = jax.lax.top_k(ub, min(width, ids.shape[-1]))
+        ids = jnp.take_along_axis(ids, sel, axis=-1)
+    return ids.astype(jnp.int32)
+
+
+def flat_select_gqa(q: jax.Array, kmax0: jax.Array, kmin0: jax.Array,
+                    budget: int, *, sink_chunks: int = 1,
+                    recent_chunks: int = 2,
+                    n_valid0=None, chunk_offset=0) -> jax.Array:
+    """Quest-like baseline: score all base chunks, top-k.  Same interface."""
+    ub, _ = chunk_bounds_gqa_matmul(q, kmax0, kmin0)
+    nc0 = ub.shape[-1]
+    if n_valid0 is None:
+        n_valid0 = nc0
+    ids = jnp.broadcast_to(jnp.arange(nc0, dtype=jnp.int32), ub.shape)
+    ub = _force_bias(ub, ids, 0, nc0, sink_chunks, recent_chunks, n_valid0,
+                     chunk_offset)
+    _, sel = jax.lax.top_k(ub, min(budget, nc0))
+    return sel.astype(jnp.int32)
+
+
+def pyramid_select_mla(q_lat: jax.Array, q_rope: jax.Array, pyr_c: Pyramid,
+                       pyr_r: Pyramid, budget: int, *, rf: int = 2,
+                       sink_chunks: int = 1, recent_chunks: int = 2,
+                       n_valid0=None, chunk_offset=0) -> jax.Array:
+    """MLA variant: boxes over the compressed latent (+rope key).
+
+    pyr_c levels: (B, nc, 1, r); pyr_r: (B, nc, 1, rr).  Returns (B, 1, k).
+    """
+    L = pyr_c.levels
+    B, H, r = q_lat.shape
+    nc = [pyr_c.kmax[l].shape[1] for l in range(L)]
+    budget = min(budget, nc[0])
+    if n_valid0 is None:
+        n_valid0 = nc[0]
+    beams = _beam_sizes(L, budget, nc, rf, sink_chunks + recent_chunks)
+
+    def score(lvl, ids=None):
+        cm, cn = pyr_c.kmax[lvl][:, :, 0], pyr_c.kmin[lvl][:, :, 0]  # (B,nc,r)
+        rm, rn = pyr_r.kmax[lvl][:, :, 0], pyr_r.kmin[lvl][:, :, 0]
+        if ids is not None:
+            take = lambda a: jnp.take_along_axis(a, ids[:, 0, :, None], axis=1)
+            cm, cn, rm, rn = take(cm), take(cn), take(rm), take(rn)
+        ub, _ = chunk_bounds_mla(q_lat, q_rope, cm, cn, rm, rn)
+        return ub[:, None]                               # (B,1,nc)
+
+    ub = score(L - 1)
+    ids = jnp.broadcast_to(jnp.arange(nc[L - 1], dtype=jnp.int32), ub.shape)
+    ub = _force_bias(ub, ids, L - 1, nc[0], sink_chunks, recent_chunks,
+                     n_valid0, chunk_offset)
+    _, sel = jax.lax.top_k(ub, beams[L - 1])
+    ids = jnp.take_along_axis(ids, sel, axis=-1)
+    for lvl in range(L - 2, -1, -1):
+        ids = jnp.concatenate([ids * 2, ids * 2 + 1], axis=-1)
+        ub = score(lvl, ids)
+        ub = _force_bias(ub, ids, lvl, nc[0], sink_chunks, recent_chunks,
+                         n_valid0, chunk_offset)
+        width = beams[lvl] if lvl > 0 else budget
+        _, sel = jax.lax.top_k(ub, min(width, ids.shape[-1]))
+        ids = jnp.take_along_axis(ids, sel, axis=-1)
+    return ids.astype(jnp.int32)
+
+
+def pyramid_eval_count(levels: int, nc0: int, budget: int, rf: int = 2,
+                       forced: int = 3) -> int:
+    """Analytic number of chunk-bound evaluations for the pyramid descent."""
+    nc = [max(1, nc0 >> l) for l in range(levels)]
+    beams = _beam_sizes(levels, budget, nc, rf, forced)
+    total = nc[levels - 1]
+    for lvl in range(levels - 2, -1, -1):
+        total += 2 * beams[lvl + 1]
+    return total

@@ -1,0 +1,118 @@
+"""Chunk importance bounds from KV abstracts (paper §4.2–4.3).
+
+For a chunk whose keys lie in the axis-aligned box [kmin, kmax], the dot
+product q·k for any k in the box is bounded by
+
+    ub = Σ_d max(q_d·kmax_d, q_d·kmin_d)
+    lb = Σ_d min(q_d·kmax_d, q_d·kmin_d)
+
+(the linear function q·k over a box attains its extrema at corners chosen
+per-coordinate by sign(q_d)).  These are *sound* bounds: lb <= q·k <= ub —
+property-tested in tests/test_bounds.py.
+
+GQA aggregation: per-chunk scores are per q-head; a KV chunk is fetched per
+kv-head, so group scores are summed over the q-heads of the group (total
+attention-mass proxy, the paper's §4.1 column-sum metric).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def box_bounds(q: jax.Array, kmax: jax.Array, kmin: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Generic box bound.
+
+    q: (..., H, hd); kmax/kmin: (..., nc, hd) broadcastable against q's
+    batch dims.  Returns (ub, lb): (..., H, nc).
+    """
+    q = q.astype(jnp.float32)
+    hi = jnp.einsum("...hd,...cd->...hcd", q, kmax.astype(jnp.float32))
+    lo = jnp.einsum("...hd,...cd->...hcd", q, kmin.astype(jnp.float32))
+    ub = jnp.sum(jnp.maximum(hi, lo), axis=-1)
+    lb = jnp.sum(jnp.minimum(hi, lo), axis=-1)
+    return ub, lb
+
+
+def chunk_bounds_gqa(q: jax.Array, kmax: jax.Array, kmin: jax.Array,
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """GQA chunk bounds.
+
+    q: (B, H, hd) scaled query (already divided by sqrt(hd), roped);
+    kmax/kmin: (B, nc, Hkv, hd).
+    Returns (ub, lb): (B, Hkv, nc) — group-summed scores.
+    """
+    B, H, hd = q.shape
+    Hkv = kmax.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    km = jnp.swapaxes(kmax, 1, 2).astype(jnp.float32)   # (B, Hkv, nc, hd)
+    kn = jnp.swapaxes(kmin, 1, 2).astype(jnp.float32)
+    hi = jnp.einsum("bkgd,bkcd->bkgcd", qg, km)          # per-coordinate
+    lo = jnp.einsum("bkgd,bkcd->bkgcd", qg, kn)
+    ub = jnp.sum(jnp.maximum(hi, lo), axis=(-1, 2))      # Σ_d then Σ_group
+    lb = jnp.sum(jnp.minimum(hi, lo), axis=(-1, 2))
+    return ub, lb
+
+
+def chunk_bounds_mla(q_lat: jax.Array, q_rope: jax.Array,
+                     cmax: jax.Array, cmin: jax.Array,
+                     rmax: jax.Array, rmin: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Sound MLA chunk bounds in latent space (DESIGN.md §4).
+
+    q_lat: (B, H, r) = q_nope @ W_UK (absorbed query); q_rope: (B, H, rr);
+    cmax/cmin: (B, nc, r) latent boxes; rmax/rmin: (B, nc, rr) rope-key boxes.
+    Uses the q⁺/q⁻ split so the bound is two matmuls per part.
+    Returns (ub, lb): (B, nc) summed over heads (single logical kv head).
+    """
+    def part(qq, hi_box, lo_box):
+        qq = qq.astype(jnp.float32)
+        qp, qn = positive_negative_split(qq)
+        hi_box = hi_box.astype(jnp.float32)
+        lo_box = lo_box.astype(jnp.float32)
+        ub = (jnp.einsum("bhr,bcr->bhc", qp, hi_box)
+              + jnp.einsum("bhr,bcr->bhc", qn, lo_box))
+        lb = (jnp.einsum("bhr,bcr->bhc", qp, lo_box)
+              + jnp.einsum("bhr,bcr->bhc", qn, hi_box))
+        return ub, lb
+    ub_c, lb_c = part(q_lat, cmax, cmin)
+    ub_r, lb_r = part(q_rope, rmax, rmin)
+    ub = jnp.sum(ub_c + ub_r, axis=1)                    # sum over heads
+    lb = jnp.sum(lb_c + lb_r, axis=1)
+    return ub, lb
+
+
+def positive_negative_split(q: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """q = q⁺ + q⁻ decomposition: ub = q⁺·kmax + q⁻·kmin (matmul-friendly).
+
+    Identical value to the per-coordinate corner rule but expressed as two
+    einsums over (possibly large) chunk axes — this is the form the Pallas
+    kernel uses on the MXU.
+    """
+    qp = jnp.maximum(q, 0.0)
+    qn = jnp.minimum(q, 0.0)
+    return qp, qn
+
+
+def chunk_bounds_gqa_matmul(q: jax.Array, kmax: jax.Array, kmin: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """MXU-friendly equivalent of :func:`chunk_bounds_gqa`.
+
+    max(q_d·kmax_d, q_d·kmin_d) == max(q_d,0)·kmax_d + min(q_d,0)·kmin_d
+    elementwise, so the ub reduces to two dense matmuls.
+    """
+    B, H, hd = q.shape
+    Hkv = kmax.shape[2]
+    G = H // Hkv
+    q32 = q.astype(jnp.float32).reshape(B, Hkv, G, hd)
+    qp, qn = positive_negative_split(q32)
+    km = jnp.swapaxes(kmax, 1, 2).astype(jnp.float32)
+    kn = jnp.swapaxes(kmin, 1, 2).astype(jnp.float32)
+    ub = jnp.einsum("bkgd,bkcd->bkgc", qp, km) + jnp.einsum("bkgd,bkcd->bkgc", qn, kn)
+    lb = jnp.einsum("bkgd,bkcd->bkgc", qp, kn) + jnp.einsum("bkgd,bkcd->bkgc", qn, km)
+    return jnp.sum(ub, axis=2), jnp.sum(lb, axis=2)

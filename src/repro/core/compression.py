@@ -1,0 +1,83 @@
+"""KV transit compression (paper §4.4 "Dynamic KV compression").
+
+The paper stores KV in FP16 and compresses to INT4 for transmission.  We
+implement symmetric per-(chunk, channel) int8 and int4 quantization; int4
+packs two nibbles per byte.  ``repro.kernels.kv_quant`` provides the fused
+dequantize-on-load Pallas kernel; this module is the reference/runtime codec
+used by the offload engine.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuantizedKV(NamedTuple):
+    data: jax.Array       # int8 payload (packed for int4)
+    scale: jax.Array      # f32 per-(group, channel) scales
+    codec: str            # "int8" | "int4"
+    shape: Tuple[int, ...]  # original shape
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.data.shape)) + int(np.prod(self.scale.shape)) * 4
+
+
+def _group_reshape(x: jax.Array, group: int) -> jax.Array:
+    """(..., S, d) -> (..., S//group, group, d)."""
+    *lead, S, d = x.shape
+    assert S % group == 0, (S, group)
+    return x.reshape(*lead, S // group, group, d)
+
+
+def quantize(x: jax.Array, codec: str = "int4", group: int = 64) -> QuantizedKV:
+    orig_shape = tuple(x.shape)
+    g = _group_reshape(x.astype(jnp.float32), group)
+    amax = jnp.max(jnp.abs(g), axis=-2, keepdims=True)          # per channel
+    qmax = 127.0 if codec == "int8" else 7.0
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+    q = q.reshape(orig_shape)
+    scale = scale[..., 0, :]                                    # (..., S/g, d)
+    if codec == "int4":
+        # pack along the channel dim: two nibbles per byte
+        *lead, S, d = orig_shape
+        assert d % 2 == 0
+        q = q.reshape(*lead, S, d // 2, 2)
+        lo = (q[..., 0] & 0xF).astype(jnp.uint8)
+        hi = ((q[..., 1] & 0xF) << 4).astype(jnp.uint8)
+        q = (lo | hi).astype(jnp.int8)
+    return QuantizedKV(q, scale.astype(jnp.float32), codec, orig_shape)
+
+
+def dequantize(qkv: QuantizedKV, group: int = 64,
+               dtype=jnp.bfloat16) -> jax.Array:
+    q = qkv.data
+    if qkv.codec == "int4":
+        u = q.astype(jnp.uint8)
+        lo = (u & 0xF).astype(jnp.int8)
+        hi = ((u >> 4) & 0xF).astype(jnp.int8)
+        # sign-extend 4-bit two's complement
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=-1).reshape(qkv.shape)
+    g = _group_reshape(q.astype(jnp.float32), group)
+    out = g * qkv.scale[..., None, :]
+    return out.reshape(qkv.shape).astype(dtype)
+
+
+def codec_ratio(codec: str) -> float:
+    """Compressed bytes / fp16 bytes (scales amortized over group=64)."""
+    payload = {"int8": 0.5, "int4": 0.25}[codec]
+    scale_overhead = 4.0 / (64 * 2.0)   # f32 scale per 64 fp16 values
+    return payload + scale_overhead
+
+
+def quantization_rmse(x: np.ndarray, codec: str = "int4",
+                      group: int = 64) -> float:
+    xq = dequantize(quantize(jnp.asarray(x), codec, group), group, jnp.float32)
+    return float(np.sqrt(np.mean((np.asarray(xq) - x) ** 2)))

@@ -1,0 +1,226 @@
+"""Functional LeoAM sparse decode attention (pure JAX; kernels plug in via
+``repro.kernels.*.ops``).
+
+The decode path is: score chunk abstracts → adaptive (pyramid) selection →
+gather selected chunks → flash attention over the gathered working set.
+All functions return stable partial-softmax triples (num, den, m) so they
+compose across sequence shards (``combine_partials`` psums them) — this is
+the sequence-parallel decode used for every decode shape on the production
+mesh (DESIGN.md §2/§5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abstracts import Pyramid
+from repro.core.adaptive import pyramid_select_gqa, pyramid_select_mla, flat_select_gqa
+
+NEG_INF = float("-inf")
+
+
+class Partials(NamedTuple):
+    num: jax.Array    # (B, H, vd) un-normalized weighted values
+    den: jax.Array    # (B, H) softmax denominator (relative to m)
+    m: jax.Array      # (B, H) running max logit
+
+
+def _finish(p: Partials) -> jax.Array:
+    den = jnp.where(p.den == 0.0, 1.0, p.den)
+    return (p.num / den[..., None])
+
+
+def combine_partials(p: Partials, axes: Sequence[str]) -> jax.Array:
+    """Merge per-shard partial softmax over mesh ``axes`` (inside shard_map)."""
+    if not axes:
+        return _finish(p)
+    gm = p.m
+    for ax in axes:
+        gm = jax.lax.pmax(gm, ax)
+    gm_safe = jnp.where(jnp.isfinite(gm), gm, 0.0)
+    w = jnp.where(jnp.isfinite(p.m), jnp.exp(p.m - gm_safe), 0.0)
+    num = p.num * w[..., None]
+    den = p.den * w
+    num = jax.lax.psum(num, tuple(axes))
+    den = jax.lax.psum(den, tuple(axes))
+    den = jnp.where(den == 0.0, 1.0, den)
+    return num / den[..., None]
+
+
+def _masked_softmax_partials(scores: jax.Array, v: jax.Array,
+                             mask: jax.Array) -> Partials:
+    """scores: (B,Hkv,G,T) f32; v: (B,Hkv,T,vd); mask: (B,Hkv,1,T) bool.
+
+    v stays in its storage dtype — the einsum accumulates in f32 via
+    preferred_element_type (an explicit .astype(f32) here made XLA
+    materialize f32 copies of the full KV cache inside the decode layer
+    loop: +160 GiB/step of converts on decode_32k; §Perf C1).
+    """
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                                  # (B,Hkv,G)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(scores - m_safe[..., None])
+    e = jnp.where(mask, e, 0.0)
+    den = jnp.sum(e, axis=-1)
+    num = jnp.einsum("bkgt,bktv->bkgv", e.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    B, Hkv, G = m.shape
+    return Partials(num.reshape(B, Hkv * G, -1), den.reshape(B, Hkv * G),
+                    m.reshape(B, Hkv * G))
+
+
+def gather_chunk_tokens(ids: jax.Array, chunk: int) -> jax.Array:
+    """(B,Hkv,k) chunk ids -> (B,Hkv,k*chunk) token positions."""
+    tok = ids[..., None] * chunk + jnp.arange(chunk, dtype=ids.dtype)
+    return tok.reshape(*ids.shape[:-1], -1)
+
+
+def sparse_decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array,
+                      ids: jax.Array, chunk: int, *,
+                      length, attn_softcap: Optional[float] = None,
+                      base_pos: int | jax.Array = 0) -> Partials:
+    """Attention over selected chunks.
+
+    q: (B,H,hd) scaled+roped; k/v: (B,S,Hkv,hd) (local shard);
+    ids: (B,Hkv,nsel) base-chunk ids local to this shard;
+    length: valid token count within this shard (scalar or (B,));
+    base_pos: global position offset of this shard (for masking only).
+    """
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    tok = gather_chunk_tokens(ids, chunk)                         # (B,Hkv,T)
+    tok_c = jnp.minimum(tok, S - 1)
+    # gather along the sequence axis directly — transposing the (tiny)
+    # index array instead of the multi-GiB cache (§Perf C1)
+    idx = jnp.swapaxes(tok_c, 1, 2)                               # (B,T,Hkv)
+    kg = jnp.take_along_axis(k, idx[..., None], axis=1)           # (B,T,Hkv,hd)
+    vg = jnp.take_along_axis(v, idx[..., None], axis=1)
+    kg = jnp.swapaxes(kg, 1, 2)                                   # (B,Hkv,T,hd)
+    vg = jnp.swapaxes(vg, 1, 2)
+    qg = q.reshape(B, Hkv, G, hd)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qg.astype(kg.dtype), kg,
+                        preferred_element_type=jnp.float32)
+    if attn_softcap is not None:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    len_b = jnp.reshape(jnp.asarray(length), (-1, 1, 1))          # (B,1,1)
+    valid = (tok < len_b) & (tok < S)
+    return _masked_softmax_partials(scores, vg, valid[:, :, None, :])
+
+
+def dense_decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     length, attn_softcap: Optional[float] = None,
+                     window: Optional[int] = None,
+                     base_pos: int | jax.Array = 0,
+                     query_pos=None) -> Partials:
+    """Full (or sliding-window) decode attention over a local KV shard."""
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    qg = q.reshape(B, Hkv, G, hd)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        kt.astype(jnp.float32))
+    if attn_softcap is not None:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    local_pos = jnp.arange(S)[None, None, :]
+    len_b = jnp.reshape(jnp.asarray(length), (-1, 1, 1))          # local count
+    valid = local_pos < len_b
+    if window is not None:
+        qp = jnp.reshape(jnp.asarray(query_pos if query_pos is not None
+                                     else length), (-1, 1, 1))
+        valid = valid & ((local_pos + base_pos) > (qp - window))  # global pos
+    return _masked_softmax_partials(scores, vt, valid)
+
+
+def sparse_decode_mla(q_lat: jax.Array, q_rope: jax.Array,
+                      ckv: jax.Array, krope: jax.Array, ids: jax.Array,
+                      chunk: int, *, length) -> Partials:
+    """Absorbed-MLA sparse decode in latent space.
+
+    q_lat: (B,H,r); q_rope: (B,H,rr); ckv: (B,S,r); krope: (B,S,rr);
+    ids: (B,1,nsel).  Returns Partials with num in latent space (B,H,r) —
+    the caller applies W_UV afterwards (absorbed value projection).
+    """
+    B, H, r = q_lat.shape
+    S = ckv.shape[1]
+    tok = gather_chunk_tokens(ids[:, 0], chunk)                   # (B,T)
+    tok_c = jnp.minimum(tok, S - 1)
+    cg = jnp.take_along_axis(ckv, tok_c[..., None], axis=1)       # (B,T,r)
+    rg = jnp.take_along_axis(krope, tok_c[..., None], axis=1)     # (B,T,rr)
+    scores = (jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32),
+                         cg.astype(jnp.float32))
+              + jnp.einsum("bhr,btr->bht", q_rope.astype(jnp.float32),
+                           rg.astype(jnp.float32)))
+    len_b = jnp.reshape(jnp.asarray(length), (-1, 1))
+    valid = (tok < len_b) & (tok < S)                             # (B,T)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(scores - m_safe[..., None])
+    e = jnp.where(valid[:, None, :], e, 0.0)
+    den = jnp.sum(e, axis=-1)
+    num = jnp.einsum("bht,btr->bhr", e, cg.astype(jnp.float32))
+    return Partials(num, den, m)
+
+
+def dense_decode_mla(q_lat, q_rope, ckv, krope, *, length) -> Partials:
+    B, H, r = q_lat.shape
+    S = ckv.shape[1]
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                         ckv.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                           krope.astype(jnp.float32)))
+    valid = (jnp.arange(S)[None, :] < jnp.reshape(jnp.asarray(length), (-1, 1)))
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(scores - m_safe[..., None])
+    e = jnp.where(valid[:, None, :], e, 0.0)
+    den = jnp.sum(e, axis=-1)
+    num = jnp.einsum("bhs,bsr->bhr", e, ckv.astype(jnp.float32))
+    return Partials(num, den, m)
+
+
+# ---------------------------------------------------------------------------
+# High-level entry: select + attend on one (possibly sequence-sharded) shard
+# ---------------------------------------------------------------------------
+
+
+def leoam_decode_shard(q: jax.Array, k: jax.Array, v: jax.Array,
+                       pyr: Pyramid, *, chunk: int, budget: int,
+                       length, attn_softcap: Optional[float] = None,
+                       sink_chunks: int = 1, recent_chunks: int = 2,
+                       rf: int = 2, adaptive: bool = True,
+                       n_valid_chunks=None, chunk_offset=0) -> Partials:
+    """One shard's worth of LeoAM decode: pyramid-select then attend.
+
+    ``n_valid_chunks``/``chunk_offset`` are global base-chunk coordinates
+    (sink/recent forcing is global under sequence sharding; §Perf C3)."""
+    if adaptive and pyr.levels > 1:
+        ids = pyramid_select_gqa(q, pyr, budget, rf=rf,
+                                 sink_chunks=sink_chunks,
+                                 recent_chunks=recent_chunks,
+                                 n_valid0=n_valid_chunks if n_valid_chunks
+                                 is not None else pyr.base_chunks,
+                                 chunk_offset=chunk_offset)
+    else:
+        ids = flat_select_gqa(q, pyr.kmax[0], pyr.kmin[0], budget,
+                              sink_chunks=sink_chunks,
+                              recent_chunks=recent_chunks,
+                              n_valid0=n_valid_chunks if n_valid_chunks
+                              is not None else pyr.base_chunks,
+                              chunk_offset=chunk_offset)
+    return sparse_decode_gqa(q, k, v, ids, chunk, length=length,
+                             attn_softcap=attn_softcap)
+
+
+def decode_budget_chunks(seq_len: int, chunk: int, rate: float,
+                         sink_chunks: int, recent_chunks: int) -> int:
+    nc = seq_len // chunk
+    return max(1, min(nc, int(math.ceil(nc * rate)) + sink_chunks + recent_chunks))

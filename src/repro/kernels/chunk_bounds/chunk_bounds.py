@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: chunk importance bounds from KV abstracts (LKA).
+
+Grid: (B, Hkv, nc/TC).  Per step the kernel holds one query group
+(G, hd) and one abstract tile (TC, hd) in VMEM and issues two MXU matmuls
+per bound (the q⁺/q⁻ decomposition turns the per-coordinate corner rule
+into dense dots; see repro.core.bounds).  TC is a multiple of the 128-lane
+MXU; hd (128/192/256 across the assigned archs) is contiguous in lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bounds_kernel(q_ref, kmax_ref, kmin_ref, ub_ref, lb_ref):
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, hd)
+    km = kmax_ref[0, 0].astype(jnp.float32)             # (TC, hd)
+    kn = kmin_ref[0, 0].astype(jnp.float32)
+    qp = jnp.maximum(q, 0.0)
+    qn = jnp.minimum(q, 0.0)
+    # (G, hd) x (hd, TC) on the MXU; group-sum afterwards
+    hi = jnp.dot(qp, km.T, preferred_element_type=jnp.float32) \
+        + jnp.dot(qn, kn.T, preferred_element_type=jnp.float32)
+    lo = jnp.dot(qp, kn.T, preferred_element_type=jnp.float32) \
+        + jnp.dot(qn, km.T, preferred_element_type=jnp.float32)
+    ub_ref[0, 0] = jnp.sum(hi, axis=0)
+    lb_ref[0, 0] = jnp.sum(lo, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+def chunk_bounds_pallas(q: jax.Array, kmax: jax.Array, kmin: jax.Array,
+                        *, tile_c: int = 128, interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """q: (B, Hkv, G, hd); kmax/kmin: (B, Hkv, nc, hd) -> (ub, lb) (B,Hkv,nc).
+
+    nc is padded to a multiple of ``tile_c`` by the caller (ops.py).
+    """
+    B, Hkv, G, hd = q.shape
+    nc = kmax.shape[2]
+    assert nc % tile_c == 0, (nc, tile_c)
+    grid = (B, Hkv, nc // tile_c)
+    out_shape = [jax.ShapeDtypeStruct((B, Hkv, nc), jnp.float32),
+                 jax.ShapeDtypeStruct((B, Hkv, nc), jnp.float32)]
+    return pl.pallas_call(
+        _bounds_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, tile_c, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, tile_c, hd), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tile_c), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, tile_c), lambda b, h, c: (b, h, c)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, kmax, kmin)

@@ -1,0 +1,41 @@
+"""Dispatching wrapper: Pallas on TPU, interpret-mode for validation,
+jnp reference otherwise."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunk_bounds.chunk_bounds import chunk_bounds_pallas
+from repro.kernels.chunk_bounds.ref import chunk_bounds_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def chunk_bounds(q: jax.Array, kmax: jax.Array, kmin: jax.Array, *,
+                 impl: Optional[str] = None, tile_c: int = 128
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """q: (B, Hkv, G, hd); kmax/kmin: (B, Hkv, nc, hd) -> (ub, lb).
+
+    impl: None (auto) | "pallas" | "interpret" | "ref".
+    """
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return chunk_bounds_ref(q, kmax, kmin)
+    nc = kmax.shape[2]
+    tile = min(tile_c, max(8, nc))
+    pad = (-nc) % tile
+    if pad:
+        fill = jnp.zeros((*kmax.shape[:2], pad, kmax.shape[3]), kmax.dtype)
+        kmax = jnp.concatenate([kmax, fill - 1e30], axis=2)
+        kmin = jnp.concatenate([kmin, fill + 1e30], axis=2)
+    ub, lb = chunk_bounds_pallas(q, kmax, kmin, tile_c=tile,
+                                 interpret=(impl == "interpret"))
+    if pad:
+        ub, lb = ub[:, :, :nc], lb[:, :, :nc]
+    return ub, lb

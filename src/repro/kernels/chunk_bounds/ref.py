@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the chunk_bounds kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_bounds_ref(q: jax.Array, kmax: jax.Array, kmin: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """q: (B, Hkv, G, hd); kmax/kmin: (B, Hkv, nc, hd) (f32).
+
+    Returns (ub, lb): (B, Hkv, nc) — group-summed box bounds:
+        ub = Σ_g Σ_d max(q_d·kmax_d, q_d·kmin_d)
+           = Σ_g (q⁺·kmax + q⁻·kmin)
+    """
+    q = q.astype(jnp.float32)
+    kmax = kmax.astype(jnp.float32)
+    kmin = kmin.astype(jnp.float32)
+    qp = jnp.maximum(q, 0.0)
+    qn = jnp.minimum(q, 0.0)
+    ub = (jnp.einsum("bkgd,bkcd->bkgc", qp, kmax)
+          + jnp.einsum("bkgd,bkcd->bkgc", qn, kmin)).sum(axis=2)
+    lb = (jnp.einsum("bkgd,bkcd->bkgc", qp, kmin)
+          + jnp.einsum("bkgd,bkcd->bkgc", qn, kmax)).sum(axis=2)
+    return ub, lb

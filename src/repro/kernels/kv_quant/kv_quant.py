@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused KV transit decompression (paper §4.4).
+
+KV chunks arrive from the host tier int4/int8-packed (the DTP codec); this
+kernel unpacks + rescales them on-chip so the decompression cost t(Dθ) the
+paper's θ-balance trades against never touches HBM bandwidth twice — the
+packed bytes are read once, bf16 output lands directly in VMEM for the
+attention kernel.
+
+Grid: one program per KV chunk; pure VPU (no MXU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_int8_kernel(d_ref, s_ref, o_ref, *, out_dtype):
+    d = d_ref[0].astype(jnp.float32)                    # (c, d)
+    s = s_ref[0].astype(jnp.float32)                    # (1, d)
+    o_ref[0] = (d * s).astype(out_dtype)
+
+
+def _dequant_int4_kernel(d_ref, s_ref, o_ref, *, out_dtype):
+    u = d_ref[0].astype(jnp.int32) & 0xFF               # (c, d//2)
+    lo = u & 0xF
+    hi = (u >> 4) & 0xF
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    c, half = u.shape
+    q = jnp.stack([lo, hi], axis=-1).reshape(c, half * 2).astype(jnp.float32)
+    s = s_ref[0].astype(jnp.float32)
+    o_ref[0] = (q * s).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "out_dtype", "interpret"))
+def kv_dequant_pallas(data: jax.Array, scale: jax.Array, *, codec: str,
+                      out_dtype=jnp.bfloat16, interpret: bool = False
+                      ) -> jax.Array:
+    """data: (N, c, dp) int8 (dp = d or d//2); scale: (N, d) f32."""
+    N, c, dp = data.shape
+    d = scale.shape[-1]
+    kern = (_dequant_int4_kernel if codec == "int4" else _dequant_int8_kernel)
+    return pl.pallas_call(
+        functools.partial(kern, out_dtype=out_dtype),
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, c, dp), lambda n: (n, 0, 0)),
+            pl.BlockSpec((1, d), lambda n: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, c, d), out_dtype),
+        interpret=interpret,
+    )(data, scale)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the kv_dequant kernel (int4/int8 transit codec)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_int8_ref(data: jax.Array, scale: jax.Array,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """data: (N, c, d) int8; scale: (N, d) f32 -> (N, c, d)."""
+    return (data.astype(jnp.float32) * scale[:, None, :]).astype(dtype)
+
+
+def dequant_int4_ref(data: jax.Array, scale: jax.Array,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """data: (N, c, d//2) int8 packed nibbles; scale: (N, d) f32 -> (N, c, d).
+
+    Packing: byte = lo | (hi << 4); values are 4-bit two's complement.
+    """
+    u = data.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int8)
+    hi = ((u >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    q = jnp.stack([lo, hi], axis=-1).reshape(*data.shape[:-1],
+                                             data.shape[-1] * 2)
+    return (q.astype(jnp.float32) * scale[:, None, :]).astype(dtype)

@@ -1,0 +1,28 @@
+"""Dispatching wrapper for sparse decode attention."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_decode.ref import sparse_decode_ref
+from repro.kernels.sparse_decode.sparse_decode import sparse_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sparse_decode(q: jax.Array, k: jax.Array, v: jax.Array, ids: jax.Array,
+                  length, *, chunk: int, impl: Optional[str] = None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial-softmax sparse decode.  See ref.py for the contract."""
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "ref"
+    length = jnp.asarray(length, jnp.int32).reshape(())
+    if impl == "ref":
+        return sparse_decode_ref(q, k, v, ids, length, chunk=chunk)
+    return sparse_decode_pallas(q, k, v, ids.astype(jnp.int32), length,
+                                chunk=chunk, interpret=(impl == "interpret"))

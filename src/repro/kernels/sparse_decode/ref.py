@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the sparse_decode kernel (gather + flash decode)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = float("-inf")
+
+
+def sparse_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      ids: jax.Array, length: jax.Array, *, chunk: int
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """q: (B, Hkv, G, hd) scaled; k/v: (B, S, Hkv, hd); ids: (B, Hkv, nsel);
+    length: scalar valid token count.
+
+    Returns partial-softmax triple (num, den, m):
+      num (B, Hkv, G, hd) f32; den/m (B, Hkv, G).
+    """
+    B, Hkv, G, hd = q.shape
+    S = k.shape[1]
+    tok = ids[..., None] * chunk + jnp.arange(chunk)        # (B,Hkv,nsel,c)
+    tok = tok.reshape(B, Hkv, -1)
+    tok_c = jnp.minimum(tok, S - 1)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    kg = jnp.take_along_axis(kt, tok_c[..., None], axis=2).astype(jnp.float32)
+    vg = jnp.take_along_axis(vt, tok_c[..., None], axis=2).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32), kg)
+    valid = (tok < length) & (tok < S)
+    s = jnp.where(valid[:, :, None], s, NEG)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(valid[:, :, None], jnp.exp(s - m_safe[..., None]), 0.0)
+    den = jnp.sum(e, axis=-1)
+    num = jnp.einsum("bkgt,bktd->bkgd", e, vg)
+    return num, den, m

@@ -1,0 +1,487 @@
+"""Post-optimization HLO text analysis with while-loop trip-count scaling.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE (verified
+empirically — a scanned 8x matmul reports 1/8 the flops of its unrolled
+twin), which would silently undercount every scan-over-layers model by its
+depth.  This parser rebuilds the cost bottom-up from ``compiled.as_text()``:
+
+  cost(computation) = Σ instruction costs
+                      + cost(while body+cond) × known_trip_count
+                      + cost(called fusions/calls)
+
+and extracts per-collective byte counts (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute) with replica-group sizes,
+which cost_analysis does not expose at all.  All numbers are *per device*
+(the input is the SPMD-partitioned module).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1, "s4": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-\$]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-\$]+)")
+_TRIP_RE = re.compile(r"known_trip_count\D*(\d+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "log", "tanh", "rsqrt", "sqrt", "power", "negate", "abs", "floor", "compare",
+    "select", "and", "or", "xor", "not", "sign", "cosine", "sine", "atan2",
+    "exponential-minus-one", "log-plus-one", "logistic", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "clamp",
+}
+
+
+def _parse_shape_bytes_elems(type_str: str) -> Tuple[int, int]:
+    """Total (bytes, elements) of a possibly-tuple HLO type string."""
+    total_b = total_e = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_b += elems * _DTYPE_BYTES[dt]
+        total_e += elems
+    return total_b, total_e
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+    @property
+    def out_bytes(self) -> int:
+        return _parse_shape_bytes_elems(self.type_str)[0]
+
+    @property
+    def out_elems(self) -> int:
+        return _parse_shape_bytes_elems(self.type_str)[1]
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0                      # operand+result traffic
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + int(v * mult)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def to_json(self) -> Dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_counts": dict(self.collective_counts),
+                "total_collective_bytes": self.total_collective_bytes}
+
+
+def _is_comp_header(line: str) -> Optional[str]:
+    """Computation headers are top-level lines ending in '{' with '->'.
+
+    Parameter lists may contain arbitrarily nested tuple types, so we only
+    key on the leading name token rather than parsing the signature.
+    """
+    s = line.rstrip()
+    if not s.endswith("{") or "->" not in s or line[:1].isspace():
+        return None
+    m = _COMP_NAME_RE.match(s)
+    return m.group(1) if m else None
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            name = _is_comp_header(line)
+            if name:
+                cur = name
+                comps[cur] = []
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    return Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+
+
+def _operands(rest: str) -> List[str]:
+    """Operand instruction names from the call-paren contents."""
+    depth, out, cur = 0, [], []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    names = []
+    for tok in out:
+        mm = re.search(r"%([\w\.\-]+)", tok)
+        if mm:
+            names.append(mm.group(1))
+    return names
+
+
+def _called(rest: str) -> List[str]:
+    out = []
+    for key in ("body=", "condition=", "calls=", "to_apply="):
+        for m in re.finditer(re.escape(key) + r"\{?%?([\w\.\-]+)", rest):
+            val = m.group(1)
+            out.append((key[:-1], val))
+    return out
+
+
+def _dot_flops(inst: Instr, symtab: Dict[str, str]) -> float:
+    ops = _operands(inst.rest)
+    _, out_elems = _parse_shape_bytes_elems(inst.type_str)
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+    if not ops or cdims is None:
+        return 2.0 * out_elems  # degenerate
+    lhs_type = symtab.get(ops[0], "")
+    m = _SHAPE_RE.search(lhs_type)
+    if not m:
+        return 2.0 * out_elems
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    contract = 1
+    for i in (int(x) for x in cdims.group(1).split(",") if x):
+        if i < len(dims):
+            contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _group_size(rest: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(rest)              # e.g. [32,16]<=[512]
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)         # e.g. {{0,1},{2,3}}
+    if m:
+        first = m.group(1).split("}")[0].strip("{ ")
+        if first:
+            return len(first.split(","))
+    return n_devices
+
+
+class HloCost:
+    """Whole-module cost with while-trip scaling; all values per-device."""
+
+    def __init__(self, hlo_text: str, n_devices: int = 1):
+        self.n_devices = n_devices
+        self.comps = _split_computations(hlo_text)
+        self.entry = self._find_entry(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------
+    def collective_detail(self) -> List[Tuple[float, float, str, str, str]]:
+        """(wire_bytes_total, multiplier, op, shape, comp) per collective,
+        with while-loop multipliers applied.  Sorted descending."""
+        mults: Dict[str, float] = {self.entry: 1.0}
+        order = [self.entry]
+        seen = {self.entry}
+        i = 0
+        while i < len(order):
+            comp = order[i]
+            i += 1
+            for line in self.comps.get(comp, ()):
+                inst = _parse_instr(line)
+                if inst is None:
+                    continue
+                mult = mults[comp]
+                if inst.op == "while":
+                    m = _TRIP_RE.search(inst.rest)
+                    trip = int(m.group(1)) if m else 1
+                    mult = mult * trip
+                for kind, name in _called(inst.rest):
+                    if name in self.comps:
+                        mults[name] = mults.get(name, 0.0) + (
+                            mult if inst.op != "while" or kind in
+                            ("body", "condition") else mults[comp])
+                        if name not in seen:
+                            seen.add(name)
+                            order.append(name)
+        out = []
+        for comp, lines in self.comps.items():
+            if comp not in mults:
+                continue
+            symtab: Dict[str, str] = {}
+            for line in lines:
+                inst = _parse_instr(line)
+                if inst is None:
+                    continue
+                symtab[inst.name] = inst.type_str
+                if inst.op in COLLECTIVES:
+                    c = self._instr_cost(inst, symtab)
+                    wire = c.total_collective_bytes
+                    out.append((wire * mults[comp], mults[comp], inst.op,
+                                inst.type_str[:60], comp[:40]))
+        out.sort(reverse=True)
+        return out
+
+    def _find_entry(self, hlo: str) -> str:
+        for line in hlo.splitlines():
+            if line.startswith("ENTRY"):
+                name = _is_comp_header(line)
+                if name:
+                    return name
+        return next(iter(self.comps))
+
+    # ------------------------------------------------------------------
+    def _effective_param_bytes(self, comp: str
+                               ) -> Tuple[Dict[int, int], Optional[int]]:
+        """(per-parameter effective reads, effective output bytes) for a
+        fused computation.
+
+        * a parameter consumed ONLY by dynamic-slice/gather reads just the
+          slice (stacked layer weights / scan xs would otherwise be charged
+          fully per loop iteration);
+        * a parameter that is the in-place TARGET of a root
+          dynamic-update-slice costs no read, and the fusion's output is
+          the written slice, not the full buffer (scan ys accumulation).
+        """
+        if not hasattr(self, "_eff_memo"):
+            self._eff_memo: Dict[str, Tuple[Dict[int, int], Optional[int]]] = {}
+        if comp in self._eff_memo:
+            return self._eff_memo[comp]
+        PASS = ("bitcast", "convert", "copy", "transpose", "reshape")
+        params: Dict[str, int] = {}
+        insts: List[Instr] = []
+        by_name: Dict[str, Instr] = {}
+        root = None
+        for line in self.comps.get(comp, ()):
+            inst = _parse_instr(line)
+            if inst is None:
+                continue
+            if inst.op == "parameter":
+                m = re.match(r"\s*(\d+)\)", inst.rest)
+                if m:
+                    params[inst.name] = int(m.group(1))
+                continue
+            insts.append(inst)
+            by_name[inst.name] = inst
+            if "ROOT" in line:
+                root = inst
+
+        consumers: Dict[str, List[Instr]] = {}
+        for i2 in insts:
+            for o in _operands(i2.rest):
+                consumers.setdefault(o, []).append(i2)
+
+        def peel_root(r: Optional[Instr]) -> Optional[Instr]:
+            seen = 0
+            while r is not None and r.op in PASS and seen < 8:
+                ops_ = _operands(r.rest)
+                r = by_name.get(ops_[0]) if ops_ else None
+                seen += 1
+            return r
+
+        out_override: Optional[int] = None
+        dus_roots: List[Instr] = []
+        true_root = peel_root(root)
+        if true_root is not None and true_root.op == "dynamic-update-slice":
+            dus_roots.append(true_root)
+            ops_ = _operands(true_root.rest)
+            upd = by_name.get(ops_[1]) if len(ops_) > 1 else None
+            out_override = (upd.out_bytes if upd is not None
+                            else true_root.out_bytes)
+
+        def classify(name: str, depth: int = 0) -> Optional[int]:
+            """Effective read bytes for a value consumed downstream, or
+            None if it is read in full by some consumer."""
+            if depth > 8:
+                return None
+            total = 0
+            for u in consumers.get(name, ()):
+                if u.op in ("dynamic-slice", "gather"):
+                    total += u.out_bytes
+                elif u.op == "dynamic-update-slice":
+                    ops_ = _operands(u.rest)
+                    if ops_ and ops_[0] == name:
+                        total += 0          # in-place target: no read
+                    else:
+                        total += u.out_bytes
+                elif u.op in PASS:
+                    sub = classify(u.name, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                else:
+                    return None
+            return total
+
+        out: Dict[int, int] = {}
+        for pname, idx in params.items():
+            eff = classify(pname)
+            if eff is not None:
+                out[idx] = eff
+        self._eff_memo[comp] = (out, out_override)
+        return out, out_override
+
+    def cost(self, comp: Optional[str] = None) -> Cost:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()            # cycle guard
+        total = Cost()
+        symtab: Dict[str, str] = {}
+        for line in self.comps.get(comp, ()):
+            inst = _parse_instr(line)
+            if inst is None:
+                continue
+            symtab[inst.name] = inst.type_str
+            total.add(self._instr_cost(inst, symtab))
+        self._memo[comp] = total
+        return total
+
+    def _instr_cost(self, inst: Instr, symtab: Dict[str, str]) -> Cost:
+        c = Cost()
+        op = inst.op
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(inst.rest)
+            if m:
+                trip = int(m.group(1))
+            for kind, name in _called(inst.rest):
+                if kind in ("body", "condition") and name in self.comps:
+                    c.add(self.cost(name), trip)
+            return c
+        if op in ("fusion", "call"):
+            inner = Cost()
+            called_names = []
+            for kind, name in _called(inst.rest):
+                if kind == "calls" and name in self.comps:
+                    inner.add(self.cost(name))
+                    called_names.append(name)
+            # fusion traffic = operands + result ONLY; ops inside the fused
+            # computation are VMEM/register-local — counting their operand
+            # bytes (as cost() does for top-level ops) would overstate HBM
+            # traffic by the fusion's internal op count
+            c.flops += inner.flops
+            for k, v in inner.collective_bytes.items():
+                c.collective_bytes[k] = c.collective_bytes.get(k, 0.0) + v
+            for k, v in inner.collective_counts.items():
+                c.collective_counts[k] = c.collective_counts.get(k, 0) + v
+            eff, out_override = (self._effective_param_bytes(called_names[0])
+                                 if called_names else ({}, None))
+            b = inst.out_bytes if out_override is None else out_override
+            for i, o in enumerate(_operands(inst.rest)):
+                full = _parse_shape_bytes_elems(symtab.get(o, ""))[0]
+                b += min(full, eff.get(i, full))
+            c.bytes += b
+            return c
+        if op == "conditional":
+            branches = [self.cost(n) for _, n in _called(inst.rest)
+                        if n in self.comps]
+            if branches:
+                worst = max(branches, key=lambda x: x.flops + x.bytes)
+                c.add(worst)
+            return c
+        if op in COLLECTIVES:
+            b = 0
+            for o in _operands(inst.rest):
+                b += _parse_shape_bytes_elems(symtab.get(o, ""))[0]
+            b = max(b, inst.out_bytes if op == "all-gather" else 0)
+            g = _group_size(inst.rest, self.n_devices)
+            # ring wire-traffic factor per participant
+            if op == "all-reduce":
+                wire = 2.0 * b * (g - 1) / max(g, 1)
+            elif op in ("all-gather", "reduce-scatter"):
+                wire = 1.0 * max(b, inst.out_bytes) * (g - 1) / max(g, 1)
+            elif op == "all-to-all":
+                wire = b * (g - 1) / max(g, 1)
+            else:  # collective-permute
+                wire = b
+            c.collective_bytes[op] = c.collective_bytes.get(op, 0.0) + wire
+            c.collective_counts[op] = c.collective_counts.get(op, 0) + 1
+            c.bytes += b + inst.out_bytes
+            return c
+        if op == "dynamic-update-slice":
+            # in-place: traffic is the written slice (read+write), not the
+            # full buffer — crucial for per-layer KV-cache updates in loops
+            ops_ = _operands(inst.rest)
+            upd = _parse_shape_bytes_elems(symtab.get(ops_[1], ""))[0] \
+                if len(ops_) > 1 else inst.out_bytes
+            c.bytes += 2 * upd
+            return c
+        if op in ("dynamic-slice", "gather"):
+            c.bytes += 2 * inst.out_bytes
+            return c
+        if op == "scatter":
+            ops_ = _operands(inst.rest)
+            upd = _parse_shape_bytes_elems(symtab.get(ops_[-1], ""))[0] \
+                if ops_ else inst.out_bytes
+            c.bytes += 2 * upd
+            return c
+        if op == "dot":
+            c.flops += _dot_flops(inst, symtab)
+        elif op == "convolution":
+            # rough: 2 * out_elems * (kernel elems) — kernels are rare here
+            ops = _operands(inst.rest)
+            kb = _parse_shape_bytes_elems(symtab.get(ops[1], ""))[1] if len(ops) > 1 else 1
+            c.flops += 2.0 * inst.out_elems * max(kb, 1)
+        elif op in _ELEMENTWISE or op.startswith("reduce"):
+            c.flops += float(inst.out_elems)
+            if op.startswith("reduce"):
+                for o in _operands(inst.rest):
+                    c.flops += _parse_shape_bytes_elems(symtab.get(o, ""))[1]
+        # memory traffic: result + operands.  `copy` is excluded: the CPU
+        # backend sinks layout copies of loop-invariant tensors INTO while
+        # bodies (observed: ~60 full-sequence copies per xLSTM time step),
+        # an artifact absent from TPU codegen — counting them would swamp
+        # the memory term with backend noise.
+        b = inst.out_bytes
+        for o in _operands(inst.rest):
+            b += _parse_shape_bytes_elems(symtab.get(o, ""))[0]
+        if op not in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "copy"):
+            c.bytes += b
+        return c
+
+
+def analyze(hlo_text: str, n_devices: int = 1) -> Dict:
+    hc = HloCost(hlo_text, n_devices)
+    return hc.cost().to_json()

@@ -1,0 +1,34 @@
+"""Re-run HLO cost analysis over saved dry-run artifacts (no recompilation).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --dir results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.hlo_costing import analyze
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for fn in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(fn))
+        hlo_file = rec.get("hlo_file")
+        if not hlo_file or not os.path.exists(hlo_file):
+            continue
+        rec["hlo_cost"] = analyze(open(hlo_file).read(), rec["n_devices"])
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=2)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Serving driver: LeoAM three-tier engine over a (smoke) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch longchat-7b-32k \
+        --prompt-len 200 --gen 16
+
+Prints generated tokens plus the tier-traffic audit (the live analogue of
+the paper's Fig. 11/16 numbers).  Production decode on the pod mesh uses
+``launch.steps.make_jitted_decode`` (see dryrun.py / EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving.engine import EngineCfg, LeoAMEngine
+from repro.serving.offload import DISK, HOST
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="longchat-7b-32k")
+    ap.add_argument("--prompt-len", type=int, default=200)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--rate", type=float, default=0.2)
+    ap.add_argument("--selection", default="tree", choices=["tree", "flat"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                       importance_rate=args.rate,
+                                       min_seq_for_sparse=32))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    eng = LeoAMEngine(cfg, params,
+                      EngineCfg(max_len=args.max_len,
+                                selection=args.selection))
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(2, cfg.vocab_size, args.prompt_len)
+    t0 = time.perf_counter()
+    toks = eng.generate(prompt, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"generated {len(toks)} tokens in {dt:.2f}s: {toks}")
+    log = eng.store.log
+    print("tier traffic (MiB):")
+    for (src, dst, kind), b in sorted(log.bytes.items()):
+        print(f"  {src:>6s} -> {dst:6s} [{kind:10s}] {b / 2**20:8.3f}")
+    ev = np.mean([s.evaluations for s in eng.stats]) if eng.stats else 0
+    print(f"mean evaluations/step: {ev:.0f} "
+          f"(token-level would be {eng.length * len(eng.attn_layers)})")
+    eng.store.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Step builders: jit-able train / prefill / decode steps with full sharding
+specs, plus ``input_specs`` (ShapeDtypeStruct stand-ins) for every
+(arch × shape) dry-run cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import lm
+from repro.models.attention import DecodeCtx
+from repro.models.params import axes_tree
+from repro.optim import adamw
+from repro.optim.schedule import SCHEDULES
+from repro.sharding import partition as pt
+from repro.sharding.ctx import sharding_ctx
+
+
+@dataclass(frozen=True)
+class TrainCfg:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "warmup_cosine"
+    adam: adamw.AdamWCfg = dataclasses.field(default_factory=adamw.AdamWCfg)
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh):
+    defs = lm.param_defs(cfg)
+    shapes = lm.abstract_params(cfg)
+    return pt.spec_tree(axes_tree(defs), shapes, mesh, pt.rules_for(cfg))
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        param_specs(cfg, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_specs(cfg: ArchConfig, mesh: Mesh, tcfg: TrainCfg):
+    ps = param_specs(cfg, mesh)
+    return {"params": ps, "opt": {"m": ps, "v": ps, "step": P()}}
+
+
+def decode_rules(cfg: ArchConfig, mesh: Mesh, shape: ShapeCfg) -> Dict:
+    seq_axes = pt.seq_shard_axes(mesh, shape.global_batch)
+    batch_axes = pt.decode_batch_axes(mesh, shape.global_batch)
+    return pt.rules_for(cfg, {"kv_seq": seq_axes, "batch": batch_axes})
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeCfg):
+    rules = decode_rules(cfg, mesh, shape)
+    defs = lm.cache_defs(cfg, shape.global_batch, shape.seq_len)
+    shapes = lm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    return pt.spec_tree(axes_tree(defs), shapes, mesh, rules)
+
+
+def decode_ctx(cfg: ArchConfig, mesh: Optional[Mesh], shape: ShapeCfg) -> DecodeCtx:
+    if mesh is None:
+        return DecodeCtx()
+    return DecodeCtx(mesh=mesh,
+                     seq_axes=pt.seq_shard_axes(mesh, shape.global_batch),
+                     batch_axes=pt.decode_batch_axes(mesh, shape.global_batch))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one (arch, shape) cell's step inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {}
+        if cfg.embed_inputs and not cfg.is_encdec:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+            if cfg.rope == "mrope":
+                batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.is_encdec:
+            enc_len = lm.encoder_len(cfg, S)
+            batch["embeds"] = jax.ShapeDtypeStruct((B, enc_len, cfg.d_model), dt)
+        batch["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embed_inputs and not cfg.is_encdec:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+            if cfg.rope == "mrope":
+                batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.is_encdec:
+            enc_len = lm.encoder_len(cfg, S)
+            batch["embeds"] = jax.ShapeDtypeStruct((B, enc_len, cfg.d_model), dt)
+        return {"batch": batch}
+    # decode: one new token against a cache of S
+    cache = lm.abstract_cache(cfg, B, S)
+    return {
+        "cache": cache,
+        "batch": {"token": jax.ShapeDtypeStruct((B,), i32)},
+        "length": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def batch_specs_tree(cfg: ArchConfig, mesh: Mesh, batch: Dict[str, Any],
+                     batch_axes: Tuple[str, ...]) -> Dict[str, P]:
+    """PartitionSpecs for a train/prefill batch dict."""
+    out = {}
+    for k, v in batch.items():
+        if k == "positions":              # (3, B, S)
+            out[k] = P(None, batch_axes or None, None)
+        else:
+            out[k] = P(batch_axes or None, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainCfg, mesh: Optional[Mesh] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    sched = SCHEDULES[tcfg.schedule]
+    nm = max(1, cfg.runtime.microbatches)
+
+    def loss_fn(params, mb):
+        return lm.forward_train(params, cfg, mb)
+
+    def train_step_body(state, batch):
+        params = state["params"]
+
+        def reshape_mb(x):
+            return x.reshape(nm, x.shape[0] // nm, *x.shape[1:])
+
+        def reshape_pos(x):                      # (3, B, S) -> (nm, 3, b, S)
+            return jnp.swapaxes(
+                x.reshape(x.shape[0], nm, x.shape[1] // nm, *x.shape[2:]), 0, 1)
+
+        mbs = {k: (reshape_pos(v) if k == "positions" else reshape_mb(v))
+               for k, v in batch.items()}
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.runtime.adam_dtype)
+                                if cfg.runtime.adam_dtype != "float32"
+                                else jnp.float32), params)
+        mzero = {"loss": jnp.zeros((), jnp.float32),
+                 "accuracy": jnp.zeros((), jnp.float32)}
+
+        def micro(carry, mb):
+            gsum, msum = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            gsum = jax.tree.map(lambda a, g: a + g.astype(a.dtype), gsum, grads)
+            msum = {k: msum[k] + metrics[k].astype(jnp.float32) for k in msum}
+            return (gsum, msum), None
+
+        if nm > 1:
+            (gsum, msum), _ = jax.lax.scan(micro, (gzero, mzero), mbs)
+        else:
+            (gsum, msum), _ = micro((gzero, mzero),
+                                    jax.tree.map(lambda x: x[0], mbs))
+        lr = sched(state["opt"]["step"], peak_lr=tcfg.lr,
+                   warmup_steps=tcfg.warmup_steps,
+                   total_steps=tcfg.total_steps)
+        params_new, opt_new, om = adamw.apply_updates(
+            params, gsum, state["opt"], tcfg.adam, lr, grad_scale=1.0 / nm)
+        metrics = {k: v / nm for k, v in msum.items()}
+        metrics.update(om)
+        metrics["lr"] = lr
+        return {"params": params_new, "opt": opt_new}, metrics
+
+    if mesh is None:
+        return train_step_body
+
+    def train_step(state, batch):
+        with sharding_ctx(mesh, pt.rules_for(cfg)):
+            return train_step_body(state, batch)
+
+    return train_step
+
+
+def make_jitted_train_step(cfg: ArchConfig, mesh: Mesh, tcfg: TrainCfg,
+                           shape: ShapeCfg):
+    """AOT-shardable train step + its (state, batch) in_shardings."""
+    adam = dataclasses.replace(tcfg.adam, state_dtype=cfg.runtime.adam_dtype)
+    tcfg = dataclasses.replace(tcfg, adam=adam)
+    step = make_train_step(cfg, tcfg, mesh)
+    ss = state_specs(cfg, mesh, tcfg)
+    batch = input_specs(cfg, shape)["batch"]
+    bspec = batch_specs_tree(cfg, mesh, batch, pt.batch_axes(mesh))
+    in_sh = (jax.tree.map(lambda p: NamedSharding(mesh, p), ss,
+                          is_leaf=lambda x: isinstance(x, P)),
+             jax.tree.map(lambda p: NamedSharding(mesh, p), bspec,
+                          is_leaf=lambda x: isinstance(x, P)))
+    out_sh = (in_sh[0], None)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+    return jitted, ss, bspec
+
+
+def abstract_state(cfg: ArchConfig, tcfg: TrainCfg):
+    adam = dataclasses.replace(tcfg.adam, state_dtype=cfg.runtime.adam_dtype)
+    params = lm.abstract_params(cfg)
+    return {"params": params, "opt": adamw.abstract_opt_state(params, adam)}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode steps
+# ---------------------------------------------------------------------------
+
+
+def make_jitted_prefill(cfg: ArchConfig, mesh: Mesh, shape: ShapeCfg):
+    ctx = decode_ctx(cfg, mesh, shape)
+    rules = decode_rules(cfg, mesh, shape)
+
+    def prefill_step(params, batch):
+        with sharding_ctx(mesh, rules):
+            return lm.prefill(params, cfg, batch, max_len=shape.seq_len, ctx=ctx)
+
+    psh = param_shardings(cfg, mesh)
+    batch = input_specs(cfg, shape)["batch"]
+    bspec = batch_specs_tree(cfg, mesh, batch, pt.batch_axes(mesh))
+    bsh = jax.tree.map(lambda p: NamedSharding(mesh, p), bspec,
+                       is_leaf=lambda x: isinstance(x, P))
+    csh = jax.tree.map(lambda p: NamedSharding(mesh, p),
+                       cache_specs(cfg, mesh, shape),
+                       is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(prefill_step, in_shardings=(psh, bsh),
+                     out_shardings=(None, csh))
+    return jitted
+
+
+def make_jitted_decode(cfg: ArchConfig, mesh: Mesh, shape: ShapeCfg):
+    ctx = decode_ctx(cfg, mesh, shape)
+    rules = decode_rules(cfg, mesh, shape)
+
+    def decode_step(params, cache, batch, length):
+        with sharding_ctx(mesh, rules):
+            return lm.decode_step(params, cfg, cache, batch, length, ctx=ctx)
+
+    psh = param_shardings(cfg, mesh)
+    csh = jax.tree.map(lambda p: NamedSharding(mesh, p),
+                       cache_specs(cfg, mesh, shape),
+                       is_leaf=lambda x: isinstance(x, P))
+    db = pt.decode_batch_axes(mesh, shape.global_batch)
+    bsh = {"token": NamedSharding(mesh, P(db or None))}
+    lsh = NamedSharding(mesh, P())
+    jitted = jax.jit(decode_step, in_shardings=(psh, csh, bsh, lsh),
+                     out_shardings=(None, csh), donate_argnums=(1,))
+    return jitted

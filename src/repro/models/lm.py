@@ -1,0 +1,554 @@
+"""Model assembly: decoder-only LMs, hybrids, recurrent stacks, and
+encoder-decoder — one functional API for all ten architectures.
+
+Layer organisation: ``prologue`` layers (first ``cfg.prologue()``) are
+unrolled — they carry the per-layer LeoAM early budgets and first-dense
+MLPs — and the remaining layers form a pattern-periodic ``body`` that is
+``lax.scan``-ned with parameters stacked per period position (compile time
+independent of depth).
+
+Entry points:
+  init(cfg, rng) / param_defs(cfg) / abstract_params(cfg)
+  forward_train(params, cfg, batch)          -> (loss, metrics)
+  prefill(params, cfg, batch, max_len, ctx)  -> (logits, cache)
+  decode_step(params, cfg, cache, batch, length, ctx) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import DecodeCtx, LOCAL_CTX
+from repro.models.common import cross_entropy, positions_for, rms_norm, softcap
+from repro.models.params import (ParamDef, abstract_tree, axes_tree,
+                                 init_tree, is_def)
+from repro.sharding.ctx import constrain
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+
+def _layer_plan(cfg: ArchConfig):
+    """(prologue [(idx, kind, mlp)], body period [(kind, mlp)], repeats)."""
+    kinds, mlps = cfg.layer_kinds(), cfg.mlp_kinds()
+    pro_n = cfg.prologue()
+    period = cfg.period()
+    body = list(zip(kinds, mlps))[pro_n:]
+    repeats = len(body) // period if body else 0
+    assert repeats * period == len(body), (cfg.name, pro_n, period, len(body))
+    prologue = [(i, kinds[i], mlps[i]) for i in range(pro_n)]
+    return prologue, body[:period], repeats
+
+
+def _core_params(cfg: ArchConfig, kind: str) -> Dict[str, ParamDef]:
+    if kind.startswith("attn"):
+        return attn.attn_params(cfg)
+    if kind == "mamba":
+        return ssm_mod.mamba_params(cfg)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_params(cfg)
+    if kind == "slstm":
+        return xlstm_mod.slstm_params(cfg)
+    raise ValueError(kind)
+
+
+def _block_defs(cfg: ArchConfig, kind: str, mlp_kind: str,
+                cross: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    blk: Dict[str, Any] = {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "core": _core_params(cfg, kind),
+    }
+    if mlp_kind == "dense":
+        ff = cfg.d_ff_dense if mlp_kind == "dense" and cfg.d_ff_dense else None
+        blk["ln2"] = ParamDef((d,), (None,), init="ones")
+        blk["mlp"] = mlp_mod.dense_params(cfg, ff=ff)
+    elif mlp_kind == "moe":
+        blk["ln2"] = ParamDef((d,), (None,), init="ones")
+        blk["mlp"] = mlp_mod.moe_params(cfg)
+    if cross:
+        blk["ln_x"] = ParamDef((d,), (None,), init="ones")
+        blk["cross"] = attn.gqa_params(cfg)
+    return blk
+
+
+def _stack_defs(defs: Dict[str, Any], n: int) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), ("layer", *d.axes), d.init, d.dtype),
+        defs, is_leaf=is_def)
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def _constrain_block_params(cfg: ArchConfig, period, layer_params):
+    """Pin per-layer weight slices to their sharded layout inside the scan.
+
+    Without this, XLA's sharding propagation is free to replicate the whole
+    stacked body-weight tensor over the data axes before the loop — observed
+    as a 42 GiB/device all-gather on nemotron-340b.  Constraining the slice
+    keeps FSDP gathers per-layer and inside the loop.
+    """
+    cross = cfg.is_encdec and cfg.cross_attn
+    out = []
+    for pi, (kind, mlpk) in enumerate(period):
+        axes = axes_tree(_block_defs(cfg, kind, mlpk, cross))
+        out.append(jax.tree.map(lambda ax, w: constrain(w, ax), axes,
+                                layer_params[pi], is_leaf=_is_axes))
+    return tuple(out)
+
+
+def param_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_size
+    prologue, period, repeats = _layer_plan(cfg)
+    cross = cfg.is_encdec and cfg.cross_attn
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), init="embed"),
+        "final_norm": ParamDef((d,), (None,), init="ones"),
+        "prologue": [_block_defs(cfg, k, m, cross) for (_, k, m) in prologue],
+        "body": [_stack_defs(_block_defs(cfg, k, m, cross), repeats)
+                 for (k, m) in period] if repeats else [],
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    if cfg.is_encdec:
+        enc_blk = _block_defs(cfg, "attn", "dense")
+        defs["encoder"] = {
+            "body": _stack_defs(enc_blk, cfg.enc_layers),
+            "final_norm": ParamDef((d,), (None,), init="ones"),
+        }
+    return defs
+
+
+def init(cfg: ArchConfig, rng: jax.Array) -> Params:
+    return init_tree(param_defs(cfg), rng, jnp.dtype(cfg.dtype))
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    return abstract_tree(param_defs(cfg), jnp.dtype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Cache structure
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_defs(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      cross: bool = False) -> Optional[Dict[str, ParamDef]]:
+    c: Dict[str, ParamDef] = {}
+    if kind.startswith("attn"):
+        c.update(attn.cache_defs(cfg, kind, batch, max_len) or {})
+        if cross:
+            Hkv, hd = cfg.n_kv_heads, cfg.hd
+            enc_len = encoder_len(cfg, max_len)
+            c["cross_k"] = ParamDef((batch, enc_len, Hkv, hd),
+                                    ("batch", None, "kv", None), init="zeros")
+            c["cross_v"] = ParamDef((batch, enc_len, Hkv, hd),
+                                    ("batch", None, "kv", None), init="zeros")
+    elif kind == "mamba":
+        c.update(ssm_mod.mamba_cache_defs(cfg, batch))
+    elif kind == "mlstm":
+        c.update(xlstm_mod.mlstm_cache_defs(cfg, batch))
+    elif kind == "slstm":
+        c.update(xlstm_mod.slstm_cache_defs(cfg, batch))
+    return c or None
+
+
+def cache_defs(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    prologue, period, repeats = _layer_plan(cfg)
+    cross = cfg.is_encdec and cfg.cross_attn
+    return {
+        "prologue": [_block_cache_defs(cfg, k, batch, max_len, cross)
+                     for (_, k, m) in prologue],
+        "body": [_stack_defs(_block_cache_defs(cfg, k, batch, max_len, cross),
+                             repeats)
+                 for (k, m) in period] if repeats else [],
+    }
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return abstract_tree(cache_defs(cfg, batch, max_len), jnp.dtype(cfg.dtype))
+
+
+def encoder_len(cfg: ArchConfig, dec_len: int) -> int:
+    """Static encoder length for enc-dec decode shapes (DESIGN.md §4)."""
+    return min(4096, max(256, dec_len // 8))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_mlp(blk, cfg: ArchConfig, mlp_kind: str, x, aux):
+    if mlp_kind == "none" or "mlp" not in blk:
+        return x, aux
+    h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+    if mlp_kind == "moe":
+        y, a = mlp_mod.moe_apply(blk["mlp"], cfg, h)
+        aux = {k: aux.get(k, 0.0) + v for k, v in a.items()} if aux is not None else None
+    else:
+        y = mlp_mod.dense_apply(blk["mlp"], cfg, h)
+    return x + y, aux
+
+
+def _block_train(blk, cfg: ArchConfig, kind: str, mlp_kind: str, x, pos,
+                 enc_out=None, aux=None, causal: bool = True):
+    h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+    if kind.startswith("attn"):
+        if cfg.mla is not None:
+            y = attn.mla_train(blk["core"], cfg, kind, h, pos)
+        else:
+            y = attn.gqa_train(blk["core"], cfg, kind, h, pos, causal=causal)
+    elif kind == "mamba":
+        y = ssm_mod.mamba_train(blk["core"], cfg, h)
+    elif kind == "mlstm":
+        y = xlstm_mod.mlstm_train(blk["core"], cfg, h)
+    elif kind == "slstm":
+        y = xlstm_mod.slstm_train(blk["core"], cfg, h)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if enc_out is not None and "cross" in blk:
+        hx = rms_norm(x, blk["ln_x"], cfg.norm_eps)
+        ckv = attn.cross_kv(blk["cross"], cfg, enc_out)
+        y = attn.gqa_train(blk["cross"], cfg, "attn", hx, pos, cross_kv=ckv)
+        x = x + y
+    return _apply_mlp(blk, cfg, mlp_kind, x, aux)
+
+
+def _block_decode(blk, cfg: ArchConfig, kind: str, mlp_kind: str, x, cache,
+                  length, *, layer_idx: int, ctx: DecodeCtx, aux=None):
+    h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+    new_cache = dict(cache) if cache else {}
+    if kind.startswith("attn"):
+        sub = {k: v for k, v in cache.items() if not k.startswith("cross_")}
+        if cfg.mla is not None:
+            y, sub = attn.mla_decode(blk["core"], cfg, kind, h, sub, length,
+                                     layer_idx=layer_idx, ctx=ctx)
+        else:
+            y, sub = attn.gqa_decode(blk["core"], cfg, kind, h, sub, length,
+                                     layer_idx=layer_idx, ctx=ctx)
+        new_cache.update(sub)
+    elif kind == "mamba":
+        y, sub = ssm_mod.mamba_decode(blk["core"], cfg, h, cache)
+        new_cache.update(sub)
+    elif kind == "mlstm":
+        y, sub = xlstm_mod.mlstm_decode(blk["core"], cfg, h, cache)
+        new_cache.update(sub)
+    elif kind == "slstm":
+        y, sub = xlstm_mod.slstm_decode(blk["core"], cfg, h, cache)
+        new_cache.update(sub)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "cross" in blk and "cross_k" in cache:
+        hx = rms_norm(x, blk["ln_x"], cfg.norm_eps)
+        y, _ = attn.gqa_decode(blk["cross"], cfg, "attn", hx, {}, length,
+                               layer_idx=layer_idx, ctx=LOCAL_CTX,
+                               cross_kv_cache=(cache["cross_k"], cache["cross_v"]))
+        x = x + y
+    x, aux = _apply_mlp(blk, cfg, mlp_kind, x, aux)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec archs)
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg: ArchConfig, embeds: jax.Array) -> jax.Array:
+    enc = params["encoder"]
+    B, S, d = embeds.shape
+    pos = positions_for(cfg, B, S)
+    x = embeds.astype(jnp.dtype(cfg.dtype))
+
+    def step(x, blk):
+        x, _ = _block_train(blk, cfg, "attn", "dense", x, pos, causal=False)
+        return x, None
+
+    if cfg.runtime.remat == "block":
+        step = jax.checkpoint(step,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(step, x, enc["body"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Train forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    if "embeds" in batch and not cfg.is_encdec:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        B, S = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("batch", None, None))
+    return x, B, S
+
+
+def _logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["lm_head"]
+    # keep the vocab dim model-sharded through softmax/loss
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def forward_train(params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    prologue, period, repeats = _layer_plan(cfg)
+    x, B, S = _embed_in(params, cfg, batch)
+    pos = batch.get("positions")
+    if pos is None:
+        pos = positions_for(cfg, B, S)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, batch["embeds"])
+    aux: Dict[str, jax.Array] = {}
+
+    pro_fn = _block_train
+    if cfg.runtime.remat == "block":
+        pro_fn = jax.checkpoint(
+            _block_train, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(1, 2, 3))
+    for blk, (idx, kind, mlpk) in zip(params["prologue"], prologue):
+        x, aux = pro_fn(blk, cfg, kind, mlpk, x, pos, enc_out, aux)
+
+    if repeats:
+        def step(carry, layer_params):
+            x, aux = carry
+            layer_params = _constrain_block_params(cfg, period, layer_params)
+            for pi, (kind, mlpk) in enumerate(period):
+                x, aux = _block_train(layer_params[pi], cfg, kind, mlpk, x,
+                                      pos, enc_out, aux)
+            return (x, aux), None
+
+        aux0 = dict(aux)
+        for k in ("moe_lb_loss", "moe_z_loss", "moe_drop_frac"):
+            if any(m == "moe" for _, m in period) and k not in aux0:
+                aux0[k] = jnp.array(0.0, jnp.float32)
+        body_fn = step
+        if cfg.runtime.remat == "block":
+            body_fn = jax.checkpoint(
+                step, policy=jax.checkpoint_policies.nothing_saveable)
+        G = cfg.runtime.remat_groups
+        if (cfg.runtime.remat == "block" and G and G > 1
+                and repeats % G == 0):
+            # sqrt-N recursive remat: only G outer carries + L/G inner
+            # carries are ever live (fits 340B-class loop-carry memory)
+            k_in = repeats // G
+            grouped = jax.tree.map(
+                lambda a: a.reshape(G, k_in, *a.shape[1:]),
+                tuple(params["body"]))
+
+            def outer(carry, group_params):
+                c, _ = jax.lax.scan(body_fn, carry, group_params)
+                return c, None
+
+            outer_fn = jax.checkpoint(
+                outer, policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux), _ = jax.lax.scan(outer_fn, (x, aux0), grouped)
+        else:
+            (x, aux), _ = jax.lax.scan(body_fn, (x, aux0),
+                                       tuple(params["body"]))
+
+    logits = _logits(params, cfg, x)
+    loss, metrics = cross_entropy(logits, batch["targets"])
+    if cfg.moe is not None and "moe_lb_loss" in aux:
+        loss = loss + mlp_mod.moe_loss(aux, cfg)
+        metrics.update({k: v for k, v in aux.items()})
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill: run the full prompt, build the decode cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            max_len: int, ctx: DecodeCtx = LOCAL_CTX
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Returns (last-position logits (B, V), cache)."""
+    prologue, period, repeats = _layer_plan(cfg)
+    x, B, S = _embed_in(params, cfg, batch)
+    pos = batch.get("positions")
+    if pos is None:
+        pos = positions_for(cfg, B, S)
+    length = batch.get("length", S)
+    enc_out = _encode(params, cfg, batch["embeds"]) if cfg.is_encdec else None
+    cross = cfg.is_encdec and cfg.cross_attn
+
+    def block_prefill(blk, kind, mlpk, x, layer_idx):
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        cache = {}
+        if kind.startswith("attn"):
+            if cfg.mla is not None:
+                y = attn.mla_train(blk["core"], cfg, kind, h, pos)
+                cache = attn.mla_prefill_cache(blk["core"], cfg, h, pos,
+                                               max_len, length)
+            else:
+                q, k, v = attn._qkv(blk["core"], cfg, h, pos)
+                window = cfg.window if kind == "attn_local" else None
+                o = attn.blocked_attention(
+                    q * (1.0 / math.sqrt(cfg.hd)), k, v, causal=True,
+                    window=window, attn_softcap=cfg.attn_softcap,
+                    block_q=cfg.runtime.attn_block_q,
+                    block_kv=cfg.runtime.attn_block_kv)
+                y = o.reshape(B, S, -1) @ blk["core"]["wo"]
+                cache = attn.gqa_prefill_cache(cfg, k, v, max_len, length)
+            x = x + y
+            if cross:
+                hx = rms_norm(x, blk["ln_x"], cfg.norm_eps)
+                ckv = attn.cross_kv(blk["cross"], cfg, enc_out)
+                x = x + attn.gqa_train(blk["cross"], cfg, "attn", hx, pos,
+                                       cross_kv=ckv)
+                cache["cross_k"], cache["cross_v"] = ckv
+        elif kind == "mamba":
+            y, st = _mamba_prefill(blk["core"], cfg, h)
+            x, cache = x + y, st
+        elif kind == "mlstm":
+            y, st = _scan_prefill(xlstm_mod.mlstm_train,
+                                  xlstm_mod.mlstm_decode, blk["core"], cfg, h)
+            x, cache = x + y, st
+        elif kind == "slstm":
+            y, st = _scan_prefill(xlstm_mod.slstm_train,
+                                  xlstm_mod.slstm_decode, blk["core"], cfg, h)
+            x, cache = x + y, st
+        x, _ = _apply_mlp(blk, cfg, mlpk, x, None)
+        return x, cache
+
+    caches_pro = []
+    for blk, (idx, kind, mlpk) in zip(params["prologue"], prologue):
+        x, c = block_prefill(blk, kind, mlpk, x, idx)
+        caches_pro.append(c or None)
+
+    caches_body = []
+    if repeats:
+        def step(x, layer_params):
+            cs = []
+            for pi, (kind, mlpk) in enumerate(period):
+                # body layers use the standard (non-early) LeoAM budget
+                x, c = block_prefill(layer_params[pi], kind, mlpk, x, 10**6)
+                cs.append(c)
+            return x, tuple(cs)
+
+        x, caches = jax.lax.scan(step, x, tuple(params["body"]))
+        caches_body = list(caches)
+
+    logits_last = _logits(params, cfg, x[:, -1:])[:, 0]
+    return logits_last, {"prologue": caches_pro, "body": caches_body}
+
+
+def _mamba_prefill(p, cfg, x):
+    """Run mamba over the prompt AND produce the decode state."""
+    y = ssm_mod.mamba_train(p, cfg, x)
+    # recompute final state by stepping the last d_conv tokens (cheap)
+    B, S, d = x.shape
+    d_in, ds, dc, _ = ssm_mod._dims(cfg)
+    cache = {"conv": jnp.zeros((B, dc - 1, d_in), x.dtype),
+             "state": jnp.zeros((B, d_in, ds), jnp.float32)}
+    def step(c, xt):
+        _, c2 = ssm_mod.mamba_decode(p, cfg, xt[:, None], c)
+        return c2, None
+    cache, _ = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
+    return y, cache
+
+
+def _scan_prefill(train_fn, decode_fn, p, cfg, x):
+    y = train_fn(p, cfg, x)
+    names_cache = None
+    B, S, d = x.shape
+    if train_fn is xlstm_mod.mlstm_train:
+        defs = xlstm_mod.mlstm_cache_defs(cfg, B)
+    else:
+        defs = xlstm_mod.slstm_cache_defs(cfg, B)
+    cache = {k: jnp.zeros(v.shape, jnp.dtype(v.dtype or cfg.dtype))
+             for k, v in defs.items()}
+    def step(c, xt):
+        _, c2 = decode_fn(p, cfg, xt[:, None], c)
+        return c2, None
+    cache, _ = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ArchConfig, cache: Dict[str, Any],
+                batch: Dict[str, jax.Array], length: jax.Array,
+                ctx: DecodeCtx = LOCAL_CTX
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence.  batch: {"token": (B,)} or
+    {"embeds": (B, 1, d)}.  length: current cache fill (scalar int32)."""
+    prologue, period, repeats = _layer_plan(cfg)
+    if "token" in batch:
+        x = jnp.take(params["embed"], batch["token"][:, None], axis=0)
+    else:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    aux: Dict[str, jax.Array] = {}
+
+    new_pro = []
+    for blk, (idx, kind, mlpk), c in zip(params["prologue"], prologue,
+                                         cache["prologue"]):
+        x, c2, aux = _block_decode(blk, cfg, kind, mlpk, x, c or {}, length,
+                                   layer_idx=idx, ctx=ctx, aux=aux)
+        new_pro.append(c2 if c is not None else None)
+
+    new_body = []
+    if repeats:
+        # The stacked cache rides in the scan CARRY (sliced/updated per
+        # iteration) rather than as xs/ys — the ys path double-buffers the
+        # whole multi-GiB cache, the carry path updates it in place.
+        body_cache = tuple(cache["body"])
+
+        def step(carry, layer_params):
+            x, caches, li = carry
+            new_cs = []
+            for pi, (kind, mlpk) in enumerate(period):
+                layer_cache = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, li, 0, keepdims=False), caches[pi])
+                xx, c2, _ = _block_decode(layer_params[pi], cfg, kind, mlpk,
+                                          x, layer_cache, length,
+                                          layer_idx=10**6, ctx=ctx)
+                x = xx
+                new_cs.append(c2)
+            caches = tuple(
+                jax.tree.map(
+                    lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                        a, u.astype(a.dtype), li, 0), caches[pi], new_cs[pi])
+                for pi in range(len(period)))
+            return (x, caches, li + 1), None
+
+        (x, new_caches, _), _ = jax.lax.scan(
+            step, (x, body_cache, jnp.int32(0)), tuple(params["body"]))
+        new_body = list(new_caches)
+
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"prologue": new_pro, "body": new_body}

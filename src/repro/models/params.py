@@ -1,0 +1,79 @@
+"""Module-free parameter system.
+
+A model is described by a pytree (nested dicts) of :class:`ParamDef`; the same
+tree yields initialized arrays (``init_tree``) and logical
+``PartitionSpec``s (``spec_tree``).  Logical axis names are resolved to mesh
+axes by ``repro.sharding.partition.logical_to_mesh`` with divisibility
+fallback, so one rule set serves every architecture.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axes used across the zoo:
+#   "embed"  — d_model dims              (FSDP-sharded)
+#   "ffn"    — mlp hidden dims           (TP-sharded)
+#   "heads"  — q-head dims               (TP-sharded)
+#   "kv"     — kv-head dims              (TP if divisible, else replicated)
+#   "vocab"  — vocabulary dim            (TP-sharded)
+#   "expert" — MoE expert dim            (EP = TP axis)
+#   "layer"  — stacked-layer dim         (never sharded)
+#   None     — replicated
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim
+    init: str = "fan_in"                      # fan_in | embed | zeros | ones
+    dtype: Optional[str] = None               # override model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    return shape[-2] if len(shape) >= 2 else shape[-1]
+
+
+def init_leaf(rng: jax.Array, d: ParamDef, dtype: Any) -> jax.Array:
+    dt = jnp.dtype(d.dtype) if d.dtype else dtype
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "embed":
+        return (jax.random.normal(rng, d.shape, jnp.float32) * 0.02).astype(dt)
+    if d.init == "fan_in":
+        scale = 1.0 / np.sqrt(max(1, _fan_in(d.shape)))
+        return (jax.random.normal(rng, d.shape, jnp.float32) * scale).astype(dt)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs: Any, rng: jax.Array, dtype: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    rngs = jax.random.split(rng, len(leaves))
+    out = [init_leaf(r, d, dtype) for r, d in zip(rngs, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_tree(defs: Any, dtype: Any) -> Any:
+    """ShapeDtypeStruct mirror (for dry-run lowering without allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, jnp.dtype(d.dtype) if d.dtype else dtype),
+        defs, is_leaf=is_def)
+
+
+def axes_tree(defs: Any) -> Any:
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)

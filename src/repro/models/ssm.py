@@ -1,0 +1,115 @@
+"""Mamba (selective SSM) block — Jamba's recurrent layer.
+
+Train/prefill uses a parallel associative scan over time; decode is a
+single-step recurrence on carried (conv window, SSM state).  The d_inner
+dimension is TP-sharded (logical axis "ffn"), which also keeps the
+(B, S, d_inner, d_state) scan intermediate shard-local.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamDef
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_in, m.d_state, m.d_conv, dt_rank
+
+
+def mamba_params(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_in, ds, dc, dtr = _dims(cfg)
+    return {
+        "in_proj": ParamDef((d, 2 * d_in), ("embed", "ffn")),
+        "conv_w": ParamDef((dc, d_in), (None, "ffn")),
+        "conv_b": ParamDef((d_in,), ("ffn",), init="zeros"),
+        "x_proj": ParamDef((d_in, dtr + 2 * ds), ("ffn", None)),
+        "dt_proj": ParamDef((dtr, d_in), (None, "ffn")),
+        "dt_bias": ParamDef((d_in,), ("ffn",), init="zeros"),
+        "a_log": ParamDef((d_in, ds), ("ffn", None), init="ones", dtype="float32"),
+        "d_skip": ParamDef((d_in,), ("ffn",), init="ones", dtype="float32"),
+        "out_proj": ParamDef((d_in, d), ("ffn", "embed")),
+    }
+
+
+def mamba_cache_defs(cfg: ArchConfig, batch: int) -> Dict[str, ParamDef]:
+    d_in, ds, dc, _ = _dims(cfg)
+    return {
+        "conv": ParamDef((batch, dc - 1, d_in), ("batch", None, "ffn"),
+                         init="zeros"),
+        "state": ParamDef((batch, d_in, ds), ("batch", "ffn", None),
+                          init="zeros", dtype="float32"),
+    }
+
+
+def _ssm_inputs(p, cfg: ArchConfig, xc: jax.Array):
+    """xc: post-conv activations (..., d_in) -> (dt, Bc, Cc, A)."""
+    d_in, ds, _, dtr = _dims(cfg)
+    proj = xc @ p["x_proj"]
+    dt, Bc, Cc = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])       # (..., d_in)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                 # (d_in, ds)
+    return dt, Bc, Cc, A
+
+
+def mamba_train(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d) via parallel associative scan."""
+    B, S, d = x.shape
+    d_in, ds, dc, _ = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)                            # (B,S,d_in)
+
+    # causal depthwise conv over time
+    xpad = jnp.pad(xr, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i: i + S] * p["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_b"])
+
+    dt, Bc, Cc, A = _ssm_inputs(p, cfg, xc)
+    dt32 = dt.astype(jnp.float32)
+    # discretize: a_t = exp(dt*A); b_t = dt * B_t * x_t
+    a = jnp.exp(dt32[..., None] * A)                             # (B,S,d_in,ds)
+    bx = (dt32 * xc.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[..., None, :]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    y = jnp.einsum("bsdz,bsz->bsd", h, Cc.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(p, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step.  x: (B, 1, d); cache: {"conv","state"}."""
+    B, _, d = x.shape
+    d_in, ds, dc, _ = _dims(cfg)
+    xz = (x @ p["in_proj"])[:, 0]
+    xr, z = jnp.split(xz, 2, axis=-1)                            # (B,d_in)
+
+    window = jnp.concatenate([cache["conv"], xr[:, None]], axis=1)  # (B,dc,d_in)
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, Bc, Cc, A = _ssm_inputs(p, cfg, xc)
+    dt32 = dt.astype(jnp.float32)
+    a = jnp.exp(dt32[..., None] * A)                             # (B,d_in,ds)
+    bx = (dt32 * xc.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, None, :]
+    h = cache["state"] * a + bx
+    y = jnp.einsum("bdz,bz->bd", h, Cc.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": window[:, 1:], "state": h}

@@ -1,0 +1,185 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallelizable) and sLSTM
+(scalar-memory, strictly sequential) [arXiv:2405.04517].
+
+Baseline train path runs the exact stabilized recurrences with ``lax.scan``
+over time; the chunkwise-parallel mLSTM is a recorded §Perf hillclimb
+candidate.  Decode carries fixed-size state — these archs have no KV cache,
+so the paper's technique is N/A (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    d_in = 2 * cfg.d_model
+    return d_in, d_in // cfg.n_heads
+
+
+def mlstm_params(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_in, dh = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    return {
+        "in_proj": ParamDef((d, 2 * d_in), ("embed", "ffn")),
+        "wq": ParamDef((d_in, d_in), ("ffn", None)),
+        "wk": ParamDef((d_in, d_in), ("ffn", None)),
+        "wv": ParamDef((d_in, d_in), ("ffn", None)),
+        "w_if": ParamDef((d_in, 2 * H), ("ffn", None)),   # input+forget gates
+        "b_if": ParamDef((2 * H,), (None,), init="zeros"),
+        "out_proj": ParamDef((d_in, d), ("ffn", "embed")),
+    }
+
+
+def mlstm_cache_defs(cfg: ArchConfig, batch: int) -> Dict[str, ParamDef]:
+    d_in, dh = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    return {
+        "C": ParamDef((batch, H, dh, dh), ("batch", "kv", None, None),
+                      init="zeros", dtype="float32"),
+        "n": ParamDef((batch, H, dh), ("batch", "kv", None),
+                      init="zeros", dtype="float32"),
+        "m": ParamDef((batch, H), ("batch", "kv"), init="zeros",
+                      dtype="float32"),
+    }
+
+
+def _mlstm_qkvg(p, cfg: ArchConfig, x: jax.Array):
+    """x: (..., d) -> q,k,v (..., H, dh), gates (..., H), z (..., d_in)."""
+    d_in, dh = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = (xi @ p["wq"]).reshape(*xi.shape[:-1], H, dh)
+    k = (xi @ p["wk"]).reshape(*xi.shape[:-1], H, dh) / jnp.sqrt(dh)
+    v = (xi @ p["wv"]).reshape(*xi.shape[:-1], H, dh)
+    gates = (xi @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)                 # (..., H)
+    return q, k, v, i_raw, f_raw, z
+
+
+def _mlstm_step(carry, qkvif):
+    """Stabilized mLSTM recurrence (paper eq. 19-27)."""
+    C, n, m = carry
+    q, k, v, i_raw, f_raw = qkvif
+    logf = jax.nn.log_sigmoid(f_raw)                            # (B,H)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    k32, v32, q32 = (a.astype(jnp.float32) for a in (k, v, q))
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        k32[..., :, None] * v32[..., None, :])                  # (B,H,dk,dv)
+    n = f_g[..., None] * n + i_g[..., None] * k32
+    num = jnp.einsum("bhkv,bhk->bhv", C, q32)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q32)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_train(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    d_in, dh = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(p, cfg, x)
+    init = (jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_raw, f_raw))
+    _, hs = jax.lax.scan(_mlstm_step, init, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_in).astype(x.dtype)
+    return (h * jax.nn.silu(z)) @ p["out_proj"]
+
+
+def mlstm_decode(p, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array]):
+    B, _, d = x.shape
+    d_in, dh = _mlstm_dims(cfg)
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(p, cfg, x[:, 0])
+    carry = (cache["C"], cache["n"], cache["m"])
+    carry, h = _mlstm_step(carry, (q, k, v, i_raw, f_raw))
+    h = h.reshape(B, d_in).astype(x.dtype)
+    out = ((h * jax.nn.silu(z)) @ p["out_proj"])[:, None]
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_params(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ffp = int(d * 4 / 3)
+    return {
+        "w_in": ParamDef((d, 4 * d), ("embed", "ffn")),          # z,i,f,o
+        "r_in": ParamDef((H, dh, 4 * dh), ("kv", None, None)),   # block-diag R
+        "b_in": ParamDef((4 * d,), (None,), init="zeros"),
+        "ff_gate": ParamDef((d, ffp), ("embed", "ffn")),
+        "ff_up": ParamDef((d, ffp), ("embed", "ffn")),
+        "ff_down": ParamDef((ffp, d), ("ffn", "embed")),
+    }
+
+
+def slstm_cache_defs(cfg: ArchConfig, batch: int) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    return {nm: ParamDef((batch, d), ("batch", None), init="zeros",
+                         dtype="float32") for nm in ("h", "c", "n", "m")}
+
+
+def _slstm_step(p, cfg: ArchConfig, carry, x_t):
+    """x_t: (B, d).  Stabilized sLSTM (paper eq. 8-18)."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    B, d = x_t.shape
+    H = cfg.n_heads
+    dh = d // H
+    rec = jnp.einsum("bhk,hkj->bhj", h_prev.reshape(B, H, dh).astype(x_t.dtype),
+                     p["r_in"])                                  # (B,H,4*dh)
+    # regroup per-head [z,i,f,o] blocks into gate-major (B, 4d) to match w_in
+    rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    pre = (x_t @ p["w_in"] + p["b_in"]).astype(jnp.float32)
+    pre = pre + rec.astype(jnp.float32)
+    z_r, i_r, f_r, o_r = jnp.split(pre, 4, axis=-1)             # (B, d)
+    logf = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(logf + m_prev, i_r)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(logf + m_prev - m_new)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    c = f_g * c_prev + i_g * z
+    n = f_g * n_prev + i_g
+    h = o * c / jnp.maximum(n, 1.0)
+    return (h, c, n, m_new), h
+
+
+def slstm_train(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    init = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    step = lambda c, xt: _slstm_step(p, cfg, c, xt)
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    g = jax.nn.gelu((x + h) @ p["ff_gate"], approximate=True)
+    return (g * ((x + h) @ p["ff_up"])) @ p["ff_down"] + h
+
+
+def slstm_decode(p, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array]):
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    carry, h = _slstm_step(p, cfg, carry, x[:, 0])
+    h = h[:, None].astype(x.dtype)
+    g = jax.nn.gelu((x + h) @ p["ff_gate"], approximate=True)
+    out = (g * ((x + h) @ p["ff_up"])) @ p["ff_down"] + h
+    return out, dict(zip(("h", "c", "n", "m"), carry))

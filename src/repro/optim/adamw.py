@@ -1,0 +1,105 @@
+"""AdamW with dtype-configurable moment states and global-norm clipping.
+
+Moment dtype matters at frontier scale: f32 m/v for a 340B model is 2.7 TB of
+optimizer state; bf16 moments halve it (the nemotron/jamba configs opt in via
+``runtime.adam_dtype``).  States are sharded exactly like their parameters
+(FSDP), so the optimizer update is fully local — no optimizer collectives.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWCfg:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"
+
+
+def init_opt_state(params: Any, cfg: AdamWCfg) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(params: Any, cfg: AdamWCfg) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+    sd = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "m": jax.tree.map(sd, params),
+        "v": jax.tree.map(sd, params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def apply_updates(params: Any, grads: Any, state: Dict[str, Any],
+                  cfg: AdamWCfg, lr: jax.Array, grad_scale=1.0
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  ``lr`` is the scheduled learning rate (traced).
+
+    ``grad_scale`` (e.g. 1/num_microbatches) and the clip rescale are folded
+    into the per-leaf update so no full-tree f32 gradient copy is ever
+    materialized — at 340B that copy alone is 5.3 GiB/device.
+    """
+    metrics: Dict[str, jax.Array] = {}
+    scale = jnp.asarray(grad_scale, jnp.float32)
+    if cfg.clip_norm is not None:
+        gnorm = global_norm(grads) * grad_scale
+        scale = scale * jnp.minimum(1.0, cfg.clip_norm
+                                    / jnp.maximum(gnorm, 1e-12))
+        metrics["grad_norm"] = gnorm
+    step = state["step"] + 1
+    sdt = jnp.dtype(cfg.state_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    params_new = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    metrics["param_norm"] = global_norm(params_new)
+    return params_new, {"m": m_new, "v": v_new, "step": step}, metrics

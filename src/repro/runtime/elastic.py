@@ -1,0 +1,52 @@
+"""Elastic scaling: rebuild the mesh from the live device set and reshard.
+
+When a pod drops out (or joins), the controller calls ``remesh`` with the
+surviving device list; parameters/optimizer state are re-laid-out onto the
+new mesh from host buffers or the latest checkpoint.  Works with any device
+count whose factorization supports a (data, model) grid.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.partition import spec_for
+
+
+def choose_grid(n_devices: int, *, prefer_model: int = 16
+                ) -> Tuple[int, int]:
+    """(data, model) factorization: keep model parallelism near the target
+    width, give the rest to data."""
+    model = math.gcd(n_devices, prefer_model)
+    while model > 1 and n_devices % model:
+        model //= 2
+    return n_devices // max(model, 1), max(model, 1)
+
+
+def make_mesh_from_devices(devices: Optional[Sequence] = None,
+                           *, prefer_model: int = 16) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    data, model = choose_grid(len(devices), prefer_model=prefer_model)
+    arr = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_tree(tree: Any, axes_tree: Any, new_mesh: Mesh) -> Any:
+    """Host-round-trip reshard of an arbitrary state tree onto a new mesh."""
+    def one(leaf, axes):
+        host = np.asarray(leaf)
+        spec = spec_for(tuple(host.shape), axes, new_mesh)
+        return jax.device_put(host, NamedSharding(new_mesh, spec))
+    return jax.tree.map(one, tree, axes_tree,
+                        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+
+
+def shrink_batch_for(global_batch: int, new_mesh: Mesh) -> int:
+    """Largest batch <= global_batch divisible by the new data extent."""
+    d = new_mesh.shape.get("data", 1)
+    return max(d, (global_batch // d) * d)

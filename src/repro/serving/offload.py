@@ -1,0 +1,190 @@
+"""Three-tier KV store: device / host / disk with byte-accurate accounting.
+
+The unit of placement is the (layer, chunk) pair, matching IAKM.  The disk
+tier holds FULL REPLICAS of every chunk plus its LKA abstract (paper §4.3):
+demotions are metadata-only (no write I/O), promotions read either the
+abstract (2 key vectors) or the chunk payload, optionally through the INT4
+transit codec.  All traffic is tallied per (src, dst, kind) so benchmarks
+and the simulator can audit exactly what LeoAM saves.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import compression
+
+DEVICE, HOST, DISK = "device", "host", "disk"
+
+
+@dataclass
+class TrafficLog:
+    bytes: Dict[Tuple[str, str, str], float] = field(
+        default_factory=lambda: defaultdict(float))
+    ops: Dict[Tuple[str, str, str], int] = field(
+        default_factory=lambda: defaultdict(int))
+
+    def record(self, src: str, dst: str, kind: str, nbytes: float) -> None:
+        self.bytes[(src, dst, kind)] += nbytes
+        self.ops[(src, dst, kind)] += 1
+
+    def total(self, src: Optional[str] = None, kind: Optional[str] = None
+              ) -> float:
+        return sum(v for (s, d, k), v in self.bytes.items()
+                   if (src is None or s == src) and (kind is None or k == kind))
+
+
+class TieredKVStore:
+    """Per-layer chunked K/V with GPU/CPU/disk placement.
+
+    K/V chunks are (chunk, Hkv, hd) numpy arrays.  ``disk`` is a real
+    memory-mapped file (so promotion latency is a genuine read on whatever
+    machine this runs on); device tier is represented by pinned host arrays
+    handed to jax at attention time.
+    """
+
+    def __init__(self, n_layers: int, n_chunks: int, chunk: int, kv_heads: int,
+                 head_dim: int, *, dtype=np.float16, transit_codec="int4",
+                 root: Optional[str] = None):
+        self.n_layers, self.n_chunks, self.chunk = n_layers, n_chunks, chunk
+        self.kv_heads, self.head_dim = kv_heads, head_dim
+        self.dtype = np.dtype(dtype)
+        self.transit_codec = transit_codec
+        self.tier: np.ndarray = np.full((n_layers, n_chunks), HOST, object)
+        self.access: np.ndarray = np.zeros((n_layers, n_chunks))
+        self.log = TrafficLog()
+        self._host_k: Dict[Tuple[int, int], np.ndarray] = {}
+        self._host_v: Dict[Tuple[int, int], np.ndarray] = {}
+        self._dev_k: Dict[Tuple[int, int], np.ndarray] = {}
+        self._dev_v: Dict[Tuple[int, int], np.ndarray] = {}
+        self._abstracts: Dict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]] = {}
+        shape = (n_layers, n_chunks, 2, chunk, kv_heads, head_dim)
+        self._root = root or tempfile.mkdtemp(prefix="leoam_kv_")
+        self._disk = np.memmap(os.path.join(self._root, "kv.bin"),
+                               dtype=self.dtype, mode="w+", shape=shape)
+
+    # ------------------------------------------------------------------
+    @property
+    def chunk_bytes(self) -> int:
+        return 2 * self.chunk * self.kv_heads * self.head_dim * self.dtype.itemsize
+
+    @property
+    def abstract_bytes(self) -> int:
+        return 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
+
+    def ingest(self, layer: int, k: np.ndarray, v: np.ndarray,
+               placement: Dict[int, str]) -> None:
+        """Store prefill KV.  k/v: (S, Hkv, hd).  Every chunk is replicated
+        to disk (with its abstract); ``placement`` assigns the hot tier."""
+        S = k.shape[0]
+        for c in range(min(self.n_chunks, (S + self.chunk - 1) // self.chunk)):
+            kc = k[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
+            vc = v[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
+            if kc.shape[0] < self.chunk:
+                pad = self.chunk - kc.shape[0]
+                kc = np.pad(kc, ((0, pad), (0, 0), (0, 0)))
+                vc = np.pad(vc, ((0, pad), (0, 0), (0, 0)))
+            self._disk[layer, c, 0] = kc
+            self._disk[layer, c, 1] = vc
+            self._abstracts[(layer, c)] = (kc.max(0), kc.min(0))
+            self.log.record(HOST, DISK, "kv_replica", self.chunk_bytes)
+            self.log.record(HOST, DISK, "abstract", self.abstract_bytes)
+            where = placement.get(c, HOST)
+            self.tier[layer, c] = where
+            if where in (HOST, DEVICE):
+                self._host_k[(layer, c)], self._host_v[(layer, c)] = kc, vc
+            if where == DEVICE:
+                self._dev_k[(layer, c)], self._dev_v[(layer, c)] = kc, vc
+
+    # ------------------------------------------------------------------
+    def read_abstracts(self, layer: int, chunks: List[int]
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """LKA: fetch (kmax, kmin) for chunks; disk chunks cost abstract I/O."""
+        kmaxs, kmins = [], []
+        for c in chunks:
+            if self.tier[layer, c] == DISK:
+                self.log.record(DISK, HOST, "abstract", self.abstract_bytes)
+            km, kn = self._abstracts[(layer, c)]
+            kmaxs.append(km)
+            kmins.append(kn)
+        return np.stack(kmaxs), np.stack(kmins)
+
+    def fetch_chunks(self, layer: int, chunks: List[int], *,
+                     to_device: bool = True
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Promote chunks to the device working set; returns stacked K/V
+        (n, chunk, Hkv, hd).  Disk promotions go through the transit codec."""
+        ks, vs = [], []
+        for c in chunks:
+            key = (layer, c)
+            self.access[layer, c] += 1
+            tier = self.tier[layer, c]
+            if key in self._dev_k:
+                ks.append(self._dev_k[key])
+                vs.append(self._dev_v[key])
+                continue
+            if tier == DISK or key not in self._host_k:
+                kc = np.asarray(self._disk[layer, c, 0])
+                vc = np.asarray(self._disk[layer, c, 1])
+                nbytes = self.chunk_bytes
+                if self.transit_codec:
+                    nbytes *= compression.codec_ratio(self.transit_codec)
+                self.log.record(DISK, HOST, "kv", nbytes)
+                self._host_k[key], self._host_v[key] = kc, vc
+            kc, vc = self._host_k[key], self._host_v[key]
+            nbytes = self.chunk_bytes
+            if self.transit_codec:
+                nbytes *= compression.codec_ratio(self.transit_codec)
+            self.log.record(HOST, DEVICE, "kv", nbytes)
+            if to_device:
+                self._dev_k[key], self._dev_v[key] = kc, vc
+                self.tier[layer, c] = DEVICE
+            ks.append(kc)
+            vs.append(vc)
+        return np.stack(ks), np.stack(vs)
+
+    def demote(self, layer: int, chunks: List[int], to: str = HOST) -> None:
+        """Eviction is free toward disk (replicas, §4.3)."""
+        for c in chunks:
+            key = (layer, c)
+            self._dev_k.pop(key, None)
+            self._dev_v.pop(key, None)
+            if to == DISK:
+                self._host_k.pop(key, None)
+                self._host_v.pop(key, None)
+            self.tier[layer, c] = to
+
+    def append_token(self, layer: int, pos: int, k_new: np.ndarray,
+                     v_new: np.ndarray) -> None:
+        """Decode-step cache append: update chunk + abstract in place."""
+        c, off = pos // self.chunk, pos % self.chunk
+        self._disk[layer, c, 0, off] = k_new.astype(self.dtype)
+        self._disk[layer, c, 1, off] = v_new.astype(self.dtype)
+        km, kn = self._abstracts.get((layer, c),
+                                     (np.full((self.kv_heads, self.head_dim),
+                                              -np.inf, self.dtype),
+                                      np.full((self.kv_heads, self.head_dim),
+                                              np.inf, self.dtype)))
+        self._abstracts[(layer, c)] = (np.maximum(km, k_new),
+                                       np.minimum(kn, k_new))
+        key = (layer, c)
+        if key in self._host_k:
+            self._host_k[key][off] = k_new
+            self._host_v[key][off] = v_new
+        if key in self._dev_k:
+            self._dev_k[key][off] = k_new
+            self._dev_v[key][off] = v_new
+        self.log.record(HOST, DISK, "kv_append",
+                        2 * self.kv_heads * self.head_dim * self.dtype.itemsize)
+
+    def device_bytes(self) -> int:
+        return len(self._dev_k) * self.chunk_bytes
+
+    def close(self) -> None:
+        del self._disk

@@ -1,0 +1,120 @@
+"""Continuous-batching request scheduler for the LeoAM serving engine.
+
+Admission is KV-budget-aware across the three tiers: a request is admitted
+when its max_len worth of chunks fits the configured device+host budget
+(disk replicas are assumed plentiful, per the paper).  Decode proceeds in
+rounds over all active requests; finished requests retire immediately and
+the queue backfills — the standard continuous-batching loop, driven here by
+per-request LeoAM engines (production decode batches inside one jitted
+``decode_step``; see launch/steps.make_jitted_decode).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    eos_id: Optional[int] = None
+    out: List[int] = field(default_factory=list)
+    t_submit: float = field(default_factory=time.perf_counter)
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        if self.out and self.eos_id is not None and self.out[-1] == self.eos_id:
+            return True
+        return len(self.out) >= self.max_new
+
+
+@dataclass
+class SchedulerCfg:
+    max_active: int = 4
+    device_chunk_budget: int = 512     # total device-resident chunks
+    chunk: int = 64
+
+
+class ContinuousBatcher:
+    """Round-robin continuous batching over engine-backed sequences."""
+
+    def __init__(self, make_engine: Callable[[], "object"],
+                 cfg: SchedulerCfg):
+        self.make_engine = make_engine
+        self.cfg = cfg
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, tuple] = {}     # rid -> (request, engine, tok)
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _chunks_needed(self, req: Request) -> int:
+        return (len(req.prompt) + req.max_new + self.cfg.chunk - 1) \
+            // self.cfg.chunk
+
+    def _device_chunks_used(self) -> int:
+        return sum(self._chunks_needed(r) for r, _, _ in self.active.values())
+
+    def _admit(self) -> None:
+        while (self.queue and len(self.active) < self.cfg.max_active
+               and (self._device_chunks_used()
+                    + self._chunks_needed(self.queue[0]))
+               <= self.cfg.device_chunk_budget):
+            req = self.queue.popleft()
+            eng = self.make_engine()
+            tok = eng.prefill(req.prompt)
+            req.t_first = time.perf_counter()
+            req.out.append(tok)
+            self.active[req.rid] = (req, eng, tok)
+
+    def step(self) -> int:
+        """One decode round over all active requests; returns #active."""
+        self._admit()
+        retired = []
+        for rid, (req, eng, tok) in list(self.active.items()):
+            if req.done:
+                retired.append(rid)
+                continue
+            tok = eng.decode_step(tok)
+            req.out.append(tok)
+            self.active[rid] = (req, eng, tok)
+            if req.done:
+                retired.append(rid)
+        for rid in retired:
+            req, eng, _ = self.active.pop(rid)
+            req.t_done = time.perf_counter()
+            self.finished.append(req)
+            if hasattr(eng, "store") and eng.store is not None:
+                eng.store.close()
+        self._admit()
+        return len(self.active)
+
+    def run(self, max_rounds: int = 10_000) -> List[Request]:
+        rounds = 0
+        while (self.queue or self.active) and rounds < max_rounds:
+            self.step()
+            rounds += 1
+        return self.finished
+
+    def stats(self) -> Dict[str, float]:
+        if not self.finished:
+            return {}
+        ttft = [r.t_first - r.t_submit for r in self.finished]
+        lat = [r.t_done - r.t_submit for r in self.finished]
+        toks = sum(len(r.out) for r in self.finished)
+        span = max(r.t_done for r in self.finished) - min(
+            r.t_submit for r in self.finished)
+        return {"requests": len(self.finished),
+                "mean_ttft_s": float(np.mean(ttft)),
+                "mean_latency_s": float(np.mean(lat)),
+                "throughput_tok_s": toks / max(span, 1e-9)}

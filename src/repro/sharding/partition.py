@@ -1,0 +1,134 @@
+"""Logical-axis -> mesh-axis resolution with divisibility fallback.
+
+One rule table serves all ten architectures; when a tensor dim is not
+divisible by the mesh extent of its mapped axes (e.g. 8 KV heads on a 16-way
+``model`` axis) the mapping silently degrades to replication on that dim —
+the scheme every fixed-mesh production system needs for heterogeneous archs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Logical axis -> mesh axes.  "fsdp" below means the composed batch axes
+# (("pod","data") on the multi-pod mesh, ("data",) on a single pod).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("fsdp",),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "batch": ("fsdp",),
+    "seq": (),               # activations: sequence replicated by default
+    "act_seq": ("model",),   # sequence-parallel activations (SP / CP)
+    "act_embed": (),         # activations: d_model replicated (TP collects)
+    "kv_seq": ("model",),    # decode KV cache: sequence sharded over model
+    "layer": (),
+}
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def rules_for(cfg, extra: Optional[Dict[str, Tuple[str, ...]]] = None
+              ) -> Dict[str, Tuple[str, ...]]:
+    """Arch-specific rules: small archs replicate params over data (pure
+    TP+DP, no per-layer weight gathers); frontier archs FSDP-shard them."""
+    rules = dict(DEFAULT_RULES)
+    if not cfg.runtime.fsdp_params:
+        rules["embed"] = ()
+    if extra:
+        rules.update(extra)
+    return rules
+
+
+def _resolve(axis: Optional[str], mesh: Mesh,
+             rules: Dict[str, Tuple[str, ...]]) -> Tuple[str, ...]:
+    if axis is None:
+        return ()
+    out: Tuple[str, ...] = ()
+    for a in rules.get(axis, ()):
+        out += fsdp_axes(mesh) if a == "fsdp" else ((a,) if a in mesh.axis_names else ())
+    return out
+
+def mesh_extent(mesh: Mesh, axes: Sequence[str]) -> int:
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> P:
+    """PartitionSpec for one tensor; drops mesh axes that don't divide."""
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        maxes = _resolve(ax, mesh, rules)
+        # trim to divisible prefix, skipping axes already used by another dim
+        keep: Tuple[str, ...] = ()
+        ext = 1
+        for m in maxes:
+            if m in used:
+                continue
+            if dim % (ext * mesh.shape[m]) == 0:
+                keep += (m,)
+                ext *= mesh.shape[m]
+        used.update(keep)
+        entries.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*entries)
+
+
+def spec_tree(axes_tree: Any, shape_tree: Any, mesh: Mesh,
+              rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> Any:
+    """Map (axes, shapes) trees -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda ax, s: spec_for(tuple(s.shape), ax, mesh, rules),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def sharding_tree(axes_tree: Any, shape_tree: Any, mesh: Mesh,
+                  rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> Any:
+    specs = spec_tree(axes_tree, shape_tree, mesh, rules)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes a training/prefill global batch shards over."""
+    return fsdp_axes(mesh)
+
+
+def seq_shard_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """Axes the decode KV sequence shards over.
+
+    Batch takes as much of the fsdp product as it can; whatever batch cannot
+    absorb (plus the model axis) shards the KV sequence — for ``long_500k``
+    (batch 1) the sequence is sharded over every mesh axis.
+    """
+    axes = ["model"] if "model" in mesh.axis_names else []
+    b = global_batch
+    for a in reversed(fsdp_axes(mesh)):      # consume inner axes for batch first
+        if b % mesh.shape[a] == 0:
+            b //= mesh.shape[a]
+        else:
+            axes.append(a)
+    return tuple(axes)
+
+
+def decode_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    axes = []
+    b = global_batch
+    for a in reversed(fsdp_axes(mesh)):
+        if b % mesh.shape[a] == 0:
+            b //= mesh.shape[a]
+            axes.append(a)
+    return tuple(reversed(axes))

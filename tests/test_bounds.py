@@ -1,0 +1,90 @@
+"""Soundness of the LKA chunk bounds (paper §4.3) — property-based."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.abstracts import build_pyramid, chunk_minmax, update_pyramid
+from repro.core.bounds import (chunk_bounds_gqa, chunk_bounds_gqa_matmul,
+                               chunk_bounds_mla)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([8, 16, 32]),
+       st.sampled_from([(4, 2), (8, 4), (6, 1)]))
+def test_bounds_contain_true_scores(seed, chunk, heads):
+    """For every chunk: lb <= (group-summed) q·k <= ub for all its tokens."""
+    H, Hkv = heads
+    rng = np.random.RandomState(seed)
+    B, S, hd = 2, 4 * chunk, 16
+    q = rng.randn(B, H, hd).astype(np.float32)
+    k = (rng.randn(B, S, Hkv, hd) * rng.uniform(0.5, 3)).astype(np.float32)
+    kmax, kmin = chunk_minmax(jnp.asarray(k), chunk)
+    ub, lb = chunk_bounds_gqa(jnp.asarray(q), kmax, kmin)
+    G = H // Hkv
+    scores = np.einsum("bkgd,bskd->bkgs", q.reshape(B, Hkv, G, hd), k).sum(2)
+    per_chunk = scores.reshape(B, Hkv, S // chunk, chunk)
+    assert np.all(np.asarray(ub)[..., None] >= per_chunk - 1e-3)
+    assert np.all(np.asarray(lb)[..., None] <= per_chunk + 1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_matmul_form_equals_corner_form(seed):
+    rng = np.random.RandomState(seed)
+    B, Hkv, G, hd, nc = 2, 3, 2, 8, 5
+    q = jnp.asarray(rng.randn(B, Hkv * G, hd).astype(np.float32))
+    km = jnp.asarray(rng.randn(B, nc, Hkv, hd).astype(np.float32))
+    kn = km - jnp.asarray(np.abs(rng.randn(B, nc, Hkv, hd)).astype(np.float32))
+    ub1, lb1 = chunk_bounds_gqa(q, km, kn)
+    ub2, lb2 = chunk_bounds_gqa_matmul(q, km, kn)
+    np.testing.assert_allclose(ub1, ub2, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(lb1, lb2, rtol=1e-5, atol=1e-4)
+
+
+def test_mla_bounds_sound(rng):
+    B, H, r, rr, S, chunk = 2, 4, 32, 8, 128, 16
+    q_lat = rng.randn(B, H, r).astype(np.float32)
+    q_rope = rng.randn(B, H, rr).astype(np.float32)
+    ckv = rng.randn(B, S, r).astype(np.float32)
+    krope = rng.randn(B, S, rr).astype(np.float32)
+    cm, cn = chunk_minmax(jnp.asarray(ckv[:, :, None]), chunk)
+    rm, rn = chunk_minmax(jnp.asarray(krope[:, :, None]), chunk)
+    ub, lb = chunk_bounds_mla(jnp.asarray(q_lat), jnp.asarray(q_rope),
+                              cm[:, :, 0], cn[:, :, 0], rm[:, :, 0], rn[:, :, 0])
+    scores = (np.einsum("bhr,bsr->bhs", q_lat, ckv)
+              + np.einsum("bhr,bsr->bhs", q_rope, krope)).sum(1)
+    per_chunk = scores.reshape(B, S // chunk, chunk)
+    assert np.all(np.asarray(ub)[..., None] >= per_chunk - 1e-3)
+    assert np.all(np.asarray(lb)[..., None] <= per_chunk + 1e-3)
+
+
+def test_pyramid_parents_contain_children(rng):
+    B, S, Hkv, hd, chunk = 2, 256, 2, 8, 16
+    k = jnp.asarray(rng.randn(B, S, Hkv, hd).astype(np.float32))
+    pyr = build_pyramid(k, chunk, 3)
+    assert pyr.levels == 3
+    for lvl in range(pyr.levels - 1):
+        km, kn = np.asarray(pyr.kmax[lvl]), np.asarray(pyr.kmin[lvl])
+        pm, pn = np.asarray(pyr.kmax[lvl + 1]), np.asarray(pyr.kmin[lvl + 1])
+        child_max = km.reshape(B, -1, 2, Hkv, hd).max(2)
+        child_min = kn.reshape(B, -1, 2, Hkv, hd).min(2)
+        np.testing.assert_allclose(pm, child_max)
+        np.testing.assert_allclose(pn, child_min)
+
+
+def test_incremental_update_matches_rebuild(rng):
+    B, S, Hkv, hd, chunk = 1, 64, 2, 8, 8
+    k = rng.randn(B, S, Hkv, hd).astype(np.float32)
+    length = 37
+    pyr = build_pyramid(jnp.asarray(k), chunk, 3, length=length)
+    k_new = rng.randn(B, Hkv, hd).astype(np.float32)
+    k2 = k.copy()
+    k2[:, length] = k_new
+    pyr_inc = update_pyramid(pyr, jnp.asarray(k_new), jnp.int32(length), chunk)
+    pyr_re = build_pyramid(jnp.asarray(k2), chunk, 3, length=length + 1)
+    for a, b in zip(pyr_inc.kmax, pyr_re.kmax):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    for a, b in zip(pyr_inc.kmin, pyr_re.kmin):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

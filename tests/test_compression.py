@@ -1,0 +1,36 @@
+"""Transit-codec properties (paper §4.4 dynamic compression)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (codec_ratio, dequantize, quantize,
+                                    quantization_rmse)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["int8", "int4"]))
+def test_roundtrip_error_bound(seed, codec):
+    """Per-channel symmetric quantization error <= scale/2 elementwise."""
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(2, 128, 32) * rng.uniform(0.1, 5)).astype(np.float32)
+    q = quantize(jnp.asarray(x), codec, group=64)
+    xq = np.asarray(dequantize(q, group=64, dtype=jnp.float32))
+    qmax = 127.0 if codec == "int8" else 7.0
+    scale = np.asarray(q.scale)                      # (2, 2, 32)
+    bound = scale.repeat(64, axis=1)[:, :128] / 2 + 1e-6
+    assert np.all(np.abs(xq - x) <= bound)
+
+
+def test_int4_packing_halves_bytes(rng):
+    x = jnp.asarray(rng.randn(2, 64, 64).astype(np.float32))
+    q8 = quantize(x, "int8", group=64)
+    q4 = quantize(x, "int4", group=64)
+    assert q4.data.size * 2 == q8.data.size
+    assert codec_ratio("int4") < codec_ratio("int8") < 1.0
+
+
+def test_rmse_ordering(rng):
+    x = rng.randn(4, 128, 64).astype(np.float32)
+    assert quantization_rmse(x, "int8") < quantization_rmse(x, "int4") < 0.2

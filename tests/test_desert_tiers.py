@@ -1,0 +1,69 @@
+"""Eq.(2) chunk-size policy, desert-rate statistics, and tier placement."""
+
+import numpy as np
+import pytest
+
+from repro.core.desert import (chunk_size_schedule, desert_rate, eval_cost,
+                               optimal_chunk_count, optimal_chunk_size)
+from repro.core.tiers import (AccessTable, TierSpec, abstract_overhead,
+                              kv_bytes, lka_transfer_ratio, plan_placement)
+
+
+def test_eval_cost_token_level_limit():
+    assert eval_cost(1024, 1024, 0.1) == 1024.0
+
+
+def test_dense_layers_get_finer_chunks():
+    """Insight 2: high ρ (dense early layers) → more initial chunks."""
+    m_dense = optimal_chunk_count(4096, 0.5)
+    m_sparse = optimal_chunk_count(4096, 0.05)
+    assert m_dense >= m_sparse
+    s_dense = optimal_chunk_size(4096, 0.5)
+    s_sparse = optimal_chunk_size(4096, 0.05)
+    assert s_dense <= s_sparse
+
+
+def test_chunk_size_schedule_shape():
+    sched = chunk_size_schedule(32768, 32, early_layers=2)
+    assert len(sched) == 32
+    assert sched[0] <= sched[-1]
+    assert all(s & (s - 1) == 0 for s in sched)   # powers of two
+
+
+def test_desert_rate_on_planted():
+    s = np.zeros(1024)
+    s[100:110] = 1.0
+    s[800:820] = 2.0
+    rate = desert_rate(s + 1e-9 * np.arange(1024), chunk=16, rate=0.03)
+    assert rate > 0.9
+
+
+def test_lka_ratio_formula():
+    assert lka_transfer_ratio(0.1, 32) == pytest.approx(0.1 + 2 / 32)
+    # paper's example: alpha=0.1, n'=32 -> r = 13.25% ... of two-sided KV
+    assert lka_transfer_ratio(0.1, 32) == pytest.approx(0.1625)
+
+
+def test_abstract_overhead_matches_paper():
+    """§6.5: <1.6% storage overhead at chunk 64."""
+    assert abstract_overhead(64) == pytest.approx(0.015625)
+
+
+def test_placement_respects_capacity_and_early_rule():
+    kv = kv_bytes(32768, 8, 128)
+    spec = TierSpec(gpu_bytes=4 * kv * 0.2, cpu_bytes=10 * kv * 0.5)
+    pl = plan_placement(kv, 32, spec, early_layers=2, importance_rate=0.1)
+    assert len(pl) == 32
+    for p in pl[:2]:
+        assert p.disk_frac == 0.0            # early layers never on disk
+    total_gpu = sum(p.gpu_frac for p in pl) * kv
+    assert total_gpu <= spec.gpu_bytes * 1.01
+    assert any(p.disk_frac > 0 for p in pl[2:])
+
+
+def test_access_table_hot_pinning():
+    t = AccessTable(64)
+    for _ in range(10):
+        t.record(np.array([3, 3, 7]))
+    hot = set(t.hot_tokens(0.05).tolist())
+    assert 3 in hot

@@ -1,0 +1,116 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture's
+reduced config runs one forward/train step and one prefill+decode step on
+CPU with finite outputs and correct shapes."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models import lm
+
+ARCHS = list_configs()
+
+
+def make_batch(cfg, rng, B=2, S=32):
+    batch = {}
+    toks = jnp.asarray(rng.randint(1, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.embed_inputs and not cfg.is_encdec:
+        batch["embeds"] = jnp.asarray(rng.randn(B, S, cfg.d_model), jnp.float32)
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, None],
+                                   (3, B, S))
+            batch["positions"] = pos
+    else:
+        batch["tokens"] = toks
+    if cfg.is_encdec:
+        batch["embeds"] = jnp.asarray(rng.randn(B, S, cfg.d_model), jnp.float32)
+        batch["tokens"] = toks
+    batch["targets"] = toks
+    return batch, toks
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_shapes_and_finite(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    batch, _ = make_batch(cfg, rng)
+    loss, metrics = jax.jit(
+        lambda p, b: lm.forward_train(p, cfg, b))(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, rng):
+    """Greedy decode logits equal full-forward logits (dense mode)."""
+    cfg = get_config(arch, smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, min_seq_for_sparse=10**9))
+    if cfg.moe is not None:                  # avoid capacity-drop mismatch
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch, toks = make_batch(cfg, rng, B, S)
+    if cfg.embed_inputs and not cfg.is_encdec:
+        # decode embeds generated tokens via the table; feed the same
+        # embeddings at prefill so the streams are comparable
+        batch["embeds"] = jnp.take(params["embed"], toks, axis=0
+                                   ).astype(jnp.float32)
+    pre = dict(batch)
+    pre.pop("targets")
+    if "tokens" in pre and not cfg.is_encdec:
+        pre["tokens"] = toks[:, : S - 1]
+    elif cfg.is_encdec:
+        pre["tokens"] = toks[:, : S - 1]
+    elif "embeds" in pre:
+        pre["embeds"] = pre["embeds"][:, : S - 1]
+        if "positions" in pre:
+            pre["positions"] = pre["positions"][:, :, : S - 1]
+    _, cache = lm.prefill(params, cfg, pre, max_len=S)
+    logits_dec, cache2 = lm.decode_step(params, cfg, cache,
+                                        {"token": toks[:, S - 1]},
+                                        jnp.int32(S - 1))
+    full = dict(batch)
+    full.pop("targets")
+    logits_full, _ = lm.prefill(params, cfg, full, max_len=S)
+    assert logits_dec.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits_dec)))
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full),
+                               rtol=2e-2, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "qwen3-1.7b",
+                                  "deepseek-v2-lite-16b", "gemma2-2b"])
+def test_sparse_decode_path_runs(arch, rng):
+    """LeoAM sparse selection active in decode (budgeted attention)."""
+    cfg = get_config(arch, smoke=True)  # min_seq_for_sparse=32 in smoke
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 64
+    batch, toks = make_batch(cfg, rng, B, S)
+    pre = {"tokens": toks[:, : S - 1]}
+    _, cache = lm.prefill(params, cfg, pre, max_len=S)
+    logits, cache2 = lm.decode_step(params, cfg, cache,
+                                    {"token": toks[:, S - 1]},
+                                    jnp.int32(S - 1))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # cache was updated in place at position S-1
+    lk = cache2["prologue"][0].get("k")
+    if lk is None:
+        lk = cache2["prologue"][0].get("ckv")
+    assert bool(jnp.any(jnp.abs(np.asarray(lk)[:, S - 1]) > 0))
+
+
+def test_param_counts_match_analytic():
+    """init() materializes ~ the analytic n_params for a dense arch."""
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    expect = cfg.n_params()
+    assert abs(n - expect) / expect < 0.05, (n, expect)

@@ -1,0 +1,63 @@
+"""DTP (paper §4.4): θ-balance solver + three-tier pipeline timeline."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pipeline import (LayerCost, TierBW, optimal_theta, schedule,
+                                 transfer_time)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e6, 1e9), st.floats(1e9, 5e10), st.floats(0.1, 0.9),
+       st.floats(0.0, 0.05), st.floats(1e-4, 0.05))
+def test_theta_balances_or_clamps(D, B, delta, T0, Tc):
+    kappa = 1.0 / 80e9
+    th = optimal_theta(D, B, delta, T0, Tc, kappa)
+    assert 0.0 <= th <= 1.0
+    lhs = T0 + transfer_time(D, th, delta, B)
+    rhs = Tc + kappa * D * th
+    if 0.0 < th < 1.0:                     # interior => exact balance
+        assert abs(lhs - rhs) < 1e-6 * max(1.0, rhs)
+    elif th == 0.0:                        # no compression needed
+        assert T0 + D / B <= Tc + 1e-9
+    else:                                  # even full compression can't hide
+        assert lhs >= rhs - 1e-9
+
+
+def test_theta_monotone_in_transfer_size():
+    ths = [optimal_theta(D, 16e9, 0.28, 0.002, 0.003, 1 / 80e9)
+           for D in (1e6, 1e7, 1e8, 1e9)]
+    assert all(a <= b + 1e-12 for a, b in zip(ths, ths[1:]))
+
+
+def _layers(n=8):
+    return [LayerCost(compute=0.003, eval_cpu=0.0005, abstract_bytes=2e6,
+                      kv_bytes_cpu=3e7, kv_bytes_disk=1e7)] * n
+
+
+def test_pipeline_strictly_helps():
+    bw = TierBW()
+    serial = schedule(_layers(), bw, pipelined=False).makespan
+    pipe = schedule(_layers(), bw, pipelined=True,
+                    dynamic_compression=False).makespan
+    dyn = schedule(_layers(), bw, pipelined=True,
+                   dynamic_compression=True).makespan
+    assert dyn < pipe < serial
+    assert dyn < 0.6 * serial              # paper-scale improvement
+
+
+def test_pipeline_gpu_idle_reduced():
+    bw = TierBW()
+    pipe = schedule(_layers(), bw, pipelined=True, dynamic_compression=False)
+    dyn = schedule(_layers(), bw, pipelined=True, dynamic_compression=True)
+    assert dyn.gpu_idle <= pipe.gpu_idle + 1e-9
+    assert all(0.0 <= t <= 1.0 for t in dyn.thetas)
+
+
+def test_compute_bound_pipeline_has_no_bubble():
+    """When transfers are tiny, makespan ~= sum of compute."""
+    layers = [LayerCost(compute=0.01, eval_cpu=1e-5, abstract_bytes=1e3,
+                        kv_bytes_cpu=1e4, kv_bytes_disk=0.0)] * 4
+    tl = schedule(layers, TierBW(), pipelined=True, dynamic_compression=True)
+    assert tl.makespan < 0.0401 * 1.1

@@ -1,0 +1,57 @@
+"""Elastic re-meshing + HLO cost parser unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_costing import HloCost, analyze
+from repro.runtime.elastic import (choose_grid, make_mesh_from_devices,
+                                   reshard_tree, shrink_batch_for)
+
+
+def test_choose_grid():
+    assert choose_grid(512, prefer_model=16) == (32, 16)
+    assert choose_grid(256, prefer_model=16) == (16, 16)
+    assert choose_grid(24, prefer_model=16) == (3, 8)
+    assert choose_grid(7, prefer_model=16) == (7, 1)
+
+
+def test_shrink_batch():
+    mesh = make_mesh_from_devices(jax.devices())   # 1 device
+    assert shrink_batch_for(256, mesh) == 256
+
+
+def test_reshard_tree_roundtrip():
+    mesh = make_mesh_from_devices(jax.devices())
+    tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8)}
+    axes = {"w": ("embed", "ffn")}
+    out = reshard_tree(tree, axes, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+def test_hlo_parser_scales_scan_by_trip_count():
+    def body(x, w):
+        return x @ w, None
+
+    def scanned(x, ws):
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    c = jax.jit(scanned).lower(x, ws).compile()
+    res = analyze(c.as_text(), 1)
+    expect = 8 * 2 * 128 * 256 * 256
+    assert abs(res["flops"] - expect) / expect < 0.05, res["flops"]
+
+
+def test_hlo_parser_counts_collectives():
+    import os
+    # single-device: no collectives
+    f = jax.jit(lambda a, b: a @ b)
+    c = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    res = analyze(c.as_text(), 1)
+    assert res["total_collective_bytes"] == 0.0
+    assert res["flops"] == pytest.approx(2 * 64**3, rel=0.05)

@@ -1,0 +1,167 @@
+"""Serving: tier store accounting (LKA ratio), engine end-to-end generation,
+simulator reproduction bands (paper Figs. 15-17)."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.tiers import lka_transfer_ratio
+from repro.models import lm
+from repro.serving.engine import EngineCfg, LeoAMEngine
+from repro.serving.offload import DEVICE, DISK, HOST, TieredKVStore
+from repro.serving.simulator import (HWCfg, POLICIES, ServeCfg,
+                                     compare_policies, simulate_decode)
+
+
+# ---------------------------------------------------------------------------
+# Tier store
+# ---------------------------------------------------------------------------
+
+
+def test_store_abstract_vs_full_traffic(rng):
+    st = TieredKVStore(n_layers=1, n_chunks=8, chunk=16, kv_heads=2,
+                       head_dim=8, transit_codec=None)
+    k = rng.randn(128, 2, 8).astype(np.float16)
+    v = rng.randn(128, 2, 8).astype(np.float16)
+    st.ingest(0, k, v, {c: DISK for c in range(8)})
+    st.read_abstracts(0, list(range(8)))
+    ab = st.log.total(src=DISK, kind="abstract")
+    assert ab == 8 * st.abstract_bytes
+    st.fetch_chunks(0, [0, 3])
+    moved = st.log.total(src=DISK, kind="kv")
+    assert moved == 2 * st.chunk_bytes
+    # LKA ratio: abstracts + selected vs full
+    r = (ab + moved) / (8 * st.chunk_bytes)
+    expect = lka_transfer_ratio(alpha=2 / 8, chunk=16) / 2 + 2 / 8
+    # abstracts are keys only (half of K+V), formula's 2/n' counts keys;
+    # just assert the saving is large:
+    assert r < 0.45
+    st.close()
+
+
+def test_store_disk_replica_free_demotion(rng):
+    st = TieredKVStore(1, 4, 8, 2, 8, transit_codec=None)
+    k = rng.randn(32, 2, 8).astype(np.float16)
+    st.ingest(0, k, k, {c: HOST for c in range(4)})
+    before = st.log.total(kind="kv")
+    st.demote(0, [1, 2], to=DISK)
+    assert st.log.total(kind="kv") == before       # no write I/O
+    kf, vf = st.fetch_chunks(0, [1])
+    np.testing.assert_allclose(kf[0], k[8:16], atol=1e-3)
+    st.close()
+
+
+def test_store_append_updates_abstract(rng):
+    st = TieredKVStore(1, 4, 8, 2, 4, transit_codec=None)
+    k = rng.randn(16, 2, 4).astype(np.float16)
+    st.ingest(0, k, k, {c: HOST for c in range(4)})
+    newk = np.full((2, 4), 9.0, np.float16)
+    st.append_token(0, 16, newk, newk)
+    km, kn = st.read_abstracts(0, [2])
+    assert np.all(km[0] >= 9.0 - 1e-3)
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_config("longchat-7b-32k", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                       importance_rate=0.4, early_rate=0.6,
+                                       min_seq_for_sparse=32))
+    params = lm.init(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def test_engine_generates_and_audits(engine_setup, rng):
+    cfg, params = engine_setup
+    eng = LeoAMEngine(cfg, params, EngineCfg(max_len=256, selection="tree"))
+    prompt = rng.randint(2, cfg.vocab_size, 128)
+    toks = eng.generate(prompt, 8)
+    assert len(toks) == 8
+    assert all(0 <= t < cfg.vocab_size for t in toks)
+    # traffic audit: abstracts moved from disk, full KV only for selections
+    total_kv = eng.store.log.total(kind="kv")
+    assert total_kv > 0
+    assert eng.store.log.total(kind="abstract") > 0
+    # evaluations were adaptive (fewer than token-level = length per layer)
+    st = eng.stats[-1]
+    n_attn = len(eng.attn_layers)
+    assert st.evaluations < eng.length * n_attn
+    eng.store.close()
+
+
+def test_engine_matches_untieried_decode_at_full_budget(engine_setup, rng):
+    """With budget ~= all chunks + flat selection, the engine's token stream
+    equals the plain lm.decode_step stream (numerical tiering fidelity)."""
+    cfg, params = engine_setup
+    cfg_full = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, importance_rate=1.0,
+                                       early_rate=1.0))
+    eng = LeoAMEngine(cfg_full, params,
+                      EngineCfg(max_len=128, selection="flat",
+                                transit_codec=None))
+    prompt = rng.randint(2, cfg.vocab_size, 64)
+    got = eng.generate(prompt, 6)
+    # reference: plain decode
+    batch = {"tokens": jnp.asarray(prompt[None], jnp.int32)}
+    logits, cache = lm.prefill(params, cfg_full, batch, max_len=128)
+    tok = int(jnp.argmax(logits[0]))
+    ref = [tok]
+    length = len(prompt)
+    for _ in range(5):
+        logits, cache = lm.decode_step(params, cfg_full, cache,
+                                       {"token": jnp.asarray([tok], jnp.int32)},
+                                       jnp.int32(length))
+        tok = int(jnp.argmax(logits[0]))
+        ref.append(tok)
+        length += 1
+    assert got == ref, (got, ref)
+    eng.store.close()
+
+
+# ---------------------------------------------------------------------------
+# Simulator (paper bands)
+# ---------------------------------------------------------------------------
+
+
+def test_policy_ordering():
+    cfg = get_config("longchat-7b-32k")
+    res = compare_policies(cfg, ServeCfg(batch=4, prompt=8192, output=64))
+    assert res["leoam_all"]["total_s"] < res["leoam_iakm"]["total_s"]
+    assert res["leoam_iakm"]["total_s"] < res["leoam_lka"]["total_s"]
+    assert res["leoam_lka"]["total_s"] < res["h2o"]["total_s"]
+    assert res["h2o"]["total_s"] < res["full"]["total_s"]
+
+
+def test_paper_speedup_bands():
+    """Avg speedup vs best baseline ~3.46x (paper), max ~5.47x at batch 8."""
+    cfg = get_config("longchat-7b-32k")
+    sps = []
+    for b in (1, 4, 8):
+        res = compare_policies(cfg, ServeCfg(batch=b, prompt=8192, output=128))
+        base = min(res[p]["total_s"] for p in ("h2o", "h2o_chunked", "prefetch"))
+        sps.append(base / res["leoam_all"]["total_s"])
+    avg, mx = float(np.mean(sps)), float(np.max(sps))
+    assert 2.8 <= avg <= 4.2, sps
+    assert 4.6 <= mx <= 6.5, sps
+
+
+def test_decode_step_transfer_dominates_baseline():
+    """Paper Fig. 6: transmission (eval transit + KV movement) dominates
+    compute for naive offloading (their 2K/b4 measurement: 290 vs 100 ms)."""
+    cfg = get_config("longchat-7b-32k")
+    step = simulate_decode(cfg, ServeCfg(batch=4, prompt=2048, gpu_frac=0.1,
+                                         cpu_frac=0.5), HWCfg(), "h2o")
+    transmission = step.transfer_s + step.eval_s
+    assert transmission > 1.2 * step.compute_s

@@ -1,0 +1,56 @@
+"""Property tests over the latency simulator (physics invariants)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.serving.simulator import (HWCfg, ServeCfg, compare_policies,
+                                     simulate_decode, simulate_request)
+
+CFG = get_config("longchat-7b-32k")
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8), st.sampled_from([2048, 8192, 16384]))
+def test_leoam_never_slower_than_baselines(batch, prompt):
+    res = compare_policies(CFG, ServeCfg(batch=batch, prompt=prompt,
+                                         output=32))
+    assert res["leoam_all"]["total_s"] <= res["h2o"]["total_s"] + 1e-9
+    assert res["leoam_all"]["total_s"] <= res["full"]["total_s"] + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([2048, 8192, 32768]))
+def test_latency_monotone_in_context(prompt):
+    a = simulate_request(CFG, ServeCfg(batch=2, prompt=prompt, output=32),
+                         HWCfg(), "leoam_all")
+    b = simulate_request(CFG, ServeCfg(batch=2, prompt=prompt * 2, output=32),
+                         HWCfg(), "leoam_all")
+    assert b["total_s"] >= a["total_s"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.02, 0.5))
+def test_decode_cost_monotone_in_budget(rate):
+    lo = simulate_decode(CFG, ServeCfg(batch=2, prompt=8192,
+                                       importance_rate=rate), HWCfg(),
+                         "leoam_all")
+    hi = simulate_decode(CFG, ServeCfg(batch=2, prompt=8192,
+                                       importance_rate=min(1.0, rate * 2)),
+                         HWCfg(), "leoam_all")
+    assert hi.total_s >= lo.total_s - 1e-9
+
+
+def test_faster_disk_helps_baseline_more():
+    """LeoAM's advantage shrinks as the disk gets faster (its whole point
+    is hiding disk bandwidth)."""
+    slow = compare_policies(CFG, ServeCfg(batch=4, prompt=8192, output=64),
+                            HWCfg(disk_bw=3e9))
+    fast = compare_policies(CFG, ServeCfg(batch=4, prompt=8192, output=64),
+                            HWCfg(disk_bw=30e9))
+    adv_slow = slow["h2o"]["total_s"] / slow["leoam_all"]["total_s"]
+    adv_fast = fast["h2o"]["total_s"] / fast["leoam_all"]["total_s"]
+    assert adv_slow > adv_fast
