@@ -11,18 +11,38 @@ intra-pod).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.6 takes explicit axis types; the pinned 0.4.x does not
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - exercised on the pinned JAX
+    AxisType = None
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager activating ``mesh`` for tracing.
+
+    ``jax.set_mesh`` on new JAX; on the pinned 0.4.x a ``Mesh`` is itself a
+    context manager with the equivalent thread-local effect.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def _mesh(shape, axes) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 2) -> Mesh:
     """Small mesh for CPU multi-device tests (run under
     XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _mesh((data, model), ("data", "model"))

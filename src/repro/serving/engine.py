@@ -1,21 +1,40 @@
-"""LeoAM serving engine: real tiered decoding on a live (CPU-sized) model.
+"""LeoAM serving engine: real batched tiered decoding on a live model.
 
 The engine exercises every paper mechanism with genuine data movement:
 prefill populates the three-tier store (full replicas + abstracts on disk),
-each decode step evaluates chunk importance on the host from abstracts
+each decode round evaluates chunk importance on the host from abstracts
 (IAKM tree or flat selection), fetches ONLY the selected chunks through the
 transit codec, attends over the assembled working set on device, and appends
 the new token's KV + abstract update.  An access-frequency table pins hot
 chunks above the disk tier.  Traffic is audited by the TieredKVStore log —
 benchmarks assert the LKA ratio r = α + 2/n' on it.
+
+Batched decode round (the paper's large-batch speedup regime):
+
+``BatchedLeoAMEngine`` decodes a whole batch of sequences per round against
+ONE shared multi-sequence :class:`TieredKVStore` keyed by (seq, layer,
+chunk).  Per layer the round issues
+
+1. one ``chunk_bounds_gqa_matmul`` over the stacked per-request queries and
+   (padded) abstracts — importance evaluation amortizes across the batch;
+2. one batch-coalesced store gather (``fetch_chunks_batch``) so all disk
+   promotion I/O of the round is a single fancy-indexed read per layer;
+3. one jitted padded-working-set attention dispatch — ragged per-sequence
+   selections are padded to the round's (bucketed) max and masked, which is
+   FP-exact: padded keys score -inf, contribute exp(-inf)=0, and adding
+   zeros never perturbs the f32 accumulators.
+
+``LeoAMEngine`` is the single-sequence view: a thin wrapper over a B=1
+batched engine preserving the original prefill/decode_step/generate API.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +57,9 @@ class EngineCfg:
     selection: str = "tree"          # tree | flat
     hot_frac: float = 0.05
     transit_codec: Optional[str] = "int4"
+    sel_pad: int = 4                 # pad round working sets to a multiple
+                                     # of this many chunks (bounds jit
+                                     # recompiles; masking keeps it exact)
 
 
 @dataclass
@@ -48,39 +70,102 @@ class StepStats:
     abstract_bytes: float = 0.0
 
 
-class LeoAMEngine:
-    """Single-sequence engine over a decoder-only smoke-size model."""
+@dataclass
+class _SeqState:
+    """Host-side per-sequence decode state (model cache + bookkeeping)."""
+    cache: Any                       # non-attention state + dense caches
+    length: int
+    access: AccessTable
+    stats: List[StepStats] = field(default_factory=list)
 
-    def __init__(self, cfg: ArchConfig, params, ecfg: EngineCfg):
+
+@functools.partial(jax.jit, static_argnames=("attn_softcap",))
+def _attend_workingset(q, kg, vg, k_new, v_new, valid, wo, *,
+                       attn_softcap: Optional[float]):
+    """One padded-working-set attention dispatch for the whole round.
+
+    q: (B, 1, H, hd) model dtype; kg/vg: (B, nmax, chunk, Hkv, hd) store
+    dtype; k_new/v_new: (B, 1, Hkv, hd); valid: (B, 1, 1, S) bool with
+    S = nmax*chunk + 1; wo: (H*hd, d).  Padded / beyond-length positions are
+    masked to -inf before the softmax partials, so ragged per-sequence
+    selections cost nothing numerically.
+    """
+    from repro.core import sparse_attention as sa
+    B, _, H, hd = q.shape
+    _, n, c, Hkv, _ = kg.shape
+    G = H // Hkv
+    kg = kg.reshape(B, n * c, Hkv, hd)
+    vg = vg.reshape(B, n * c, Hkv, hd)
+    kg = jnp.concatenate([kg.astype(q.dtype), k_new.astype(q.dtype)], axis=1)
+    vg = jnp.concatenate([vg.astype(q.dtype), v_new.astype(q.dtype)], axis=1)
+    qs = q[:, 0] * (1.0 / math.sqrt(hd))
+    kt = jnp.swapaxes(kg, 1, 2)
+    vt = jnp.swapaxes(vg, 1, 2)
+    scores = jnp.einsum("bkgd,bksd->bkgs",
+                        qs.reshape(B, Hkv, G, hd).astype(jnp.float32),
+                        kt.astype(jnp.float32))
+    if attn_softcap is not None:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    part = sa._masked_softmax_partials(scores, vt, valid)
+    out = sa._finish(part).astype(q.dtype).reshape(B, 1, H * hd)
+    return out @ wo
+
+
+class BatchedLeoAMEngine:
+    """Batched tiered-decoding engine over a decoder-only model.
+
+    Sequences join via :meth:`add_sequence` (per-request prefill, as in
+    continuous batching), decode together via :meth:`decode_round`, and
+    leave via :meth:`release` — the scheduler drives exactly this API.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineCfg, *,
+                 max_seqs: int = 1,
+                 device_chunk_budget: Optional[int] = None):
         assert not cfg.is_encdec, "engine drives decoder-only models"
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.chunk = cfg.leoam.chunk_size
         self.n_chunks = ecfg.max_len // self.chunk
+        self.max_seqs = max_seqs
         self.attn_layers = [i for i, k in enumerate(cfg.layer_kinds())
                             if k.startswith("attn")]
-        self.store: Optional[TieredKVStore] = None
-        self.cache = None               # non-attention state + dense caches
-        self.length = 0
-        self.access = AccessTable(self.n_chunks)
-        self.stats: List[StepStats] = []
-        self._decode_jit = jax.jit(
-            lambda p, c, b, l: lm.decode_step(p, cfg, c, b, l))
-
-    # ------------------------------------------------------------------
-    def prefill(self, tokens: np.ndarray) -> int:
-        """tokens: (S,).  Runs model prefill; K/V moves into the tier store."""
-        cfg, ecfg = self.cfg, self.ecfg
-        S = len(tokens)
-        batch = {"tokens": jnp.asarray(tokens[None], jnp.int32)}
-        logits, cache = lm.prefill(self.params, cfg, batch, max_len=ecfg.max_len)
-        self.cache = jax.tree.map(np.asarray, cache)
-        self.length = S
-
+        budget = (device_chunk_budget * len(self.attn_layers)
+                  if device_chunk_budget is not None else None)
         self.store = TieredKVStore(
             len(self.attn_layers), self.n_chunks, self.chunk,
-            cfg.n_kv_heads, cfg.hd, transit_codec=ecfg.transit_codec)
+            cfg.n_kv_heads, cfg.hd, n_seqs=max_seqs,
+            transit_codec=ecfg.transit_codec, device_budget=budget)
+        self.seqs: Dict[int, _SeqState] = {}
+        self._free: List[int] = list(range(max_seqs - 1, -1, -1))
+
+    @property
+    def free_slots(self) -> int:
+        """Sequence slots available for admission (scheduler-facing)."""
+        return len(self._free)
+
+    # ------------------------------------------------------------------
+    # Sequence lifecycle
+    # ------------------------------------------------------------------
+    def add_sequence(self, tokens: np.ndarray) -> Tuple[int, int]:
+        """Prefill one request into a free store slot.
+
+        tokens: (S,).  Runs model prefill; K/V moves into the shared tier
+        store under this sequence's slot.  Returns (seq id, first token).
+        """
+        assert self._free, "engine is at max_seqs capacity"
+        cfg, ecfg = self.cfg, self.ecfg
+        S = len(tokens)
+        assert S < ecfg.max_len, (
+            f"prompt length {S} needs < max_len={ecfg.max_len} "
+            f"(decode appends past the prompt)")
+        sid = self._free.pop()
+        batch = {"tokens": jnp.asarray(np.asarray(tokens)[None], jnp.int32)}
+        logits, cache = lm.prefill(self.params, cfg, batch,
+                                   max_len=ecfg.max_len)
+        cache = jax.tree.map(np.asarray, cache)
+
         n_gpu = max(1, int(self.n_chunks * ecfg.gpu_chunk_frac))
         n_cpu = max(1, int(self.n_chunks * ecfg.cpu_chunk_frac))
         placement = {}
@@ -88,160 +173,263 @@ class LeoAMEngine:
             placement[c] = DEVICE if c < n_gpu else (
                 HOST if c < n_gpu + n_cpu else DISK)
         for li, layer in enumerate(self.attn_layers):
-            k, v = self._layer_kv(layer)
+            k, v = self._layer_kv(cache, layer)
             early = layer < cfg.leoam.early_layers
             pl = dict(placement)
             if early:                   # early layers never go to disk (§4.3)
                 pl = {c: (DEVICE if placement[c] == DEVICE else HOST)
                       for c in placement}
-            self.store.ingest(li, k[0], v[0], pl)
-        return int(np.argmax(np.asarray(logits)[0]))
+            self.store.ingest(li, k[0], v[0], pl, seq=sid)
+        self.seqs[sid] = _SeqState(cache=cache, length=S,
+                                   access=AccessTable(self.n_chunks))
+        return sid, int(np.argmax(np.asarray(logits)[0]))
 
-    def _layer_kv(self, layer: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Pull (k, v) (B, S, Hkv, hd) for a layer out of the model cache."""
-        pro_n = len(self.cache["prologue"])
+    def release(self, sid: int) -> None:
+        """Retire a sequence and recycle its store slot."""
+        self.store.clear_seq(sid)
+        self.seqs.pop(sid, None)
+        self._free.append(sid)
+
+    def _layer_kv(self, cache, layer: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Pull (k, v) (B, S, Hkv, hd) for a layer out of a model cache."""
+        pro_n = len(cache["prologue"])
         if layer < pro_n:
-            c = self.cache["prologue"][layer]
+            c = cache["prologue"][layer]
             return np.asarray(c["k"]), np.asarray(c["v"])
         period = self.cfg.period()
         bi = (layer - pro_n) // period
         pi = (layer - pro_n) % period
-        c = self.cache["body"][pi]
+        c = cache["body"][pi]
         return np.asarray(c["k"][bi]), np.asarray(c["v"][bi])
 
     # ------------------------------------------------------------------
-    def _select_chunks(self, li: int, layer: int, q: np.ndarray
-                       ) -> Tuple[List[int], StepStats]:
-        """Host-side importance evaluation from abstracts (LKA + IAKM)."""
-        cfg = self.cfg
-        st = StepStats()
-        n_valid = (self.length + self.chunk - 1) // self.chunk
-        chunks = list(range(n_valid))
-        log0 = self.store.log.total(kind="abstract")
-        kmax, kmin = self.store.read_abstracts(li, chunks)   # (n, Hkv, hd)
-        st.abstract_bytes = self.store.log.total(kind="abstract") - log0
+    # Importance evaluation (batched LKA + per-sequence IAKM)
+    # ------------------------------------------------------------------
+    def _select_chunks_batched(self, li: int, layer: int, q: np.ndarray,
+                               order: Sequence[int], lengths: np.ndarray
+                               ) -> Tuple[Dict[int, List[int]],
+                                          Dict[int, StepStats]]:
+        """One bounds matmul over the stacked batch, then per-sequence
+        adaptive selection (tree/IAKM or flat) on the host.
 
-        qj = jnp.asarray(q[None] / math.sqrt(cfg.hd))        # (1, H, hd)
-        ub, _ = chunk_bounds_gqa_matmul(
-            qj, jnp.asarray(kmax[None]), jnp.asarray(kmin[None]))
-        scores = np.asarray(ub).max(1)[0]                    # (n_chunks,)
+        q: (B, H, hd) un-scaled queries, rows matching ``order``.
+        """
+        cfg = self.cfg
+        chunk = self.chunk
+        n_valid = {sid: (int(L) + chunk - 1) // chunk
+                   for sid, L in zip(order, lengths)}
+        chunks_by_seq = {sid: list(range(n_valid[sid])) for sid in order}
+        km, kn, abs_billed = self.store.read_abstracts_batch(li, chunks_by_seq)
+
+        qj = jnp.asarray(q / math.sqrt(cfg.hd))              # (B, H, hd)
+        ub, _ = chunk_bounds_gqa_matmul(qj, jnp.asarray(km), jnp.asarray(kn))
+        ub = np.asarray(ub)                                  # (B, Hkv, ncmax)
 
         rate = (cfg.leoam.early_rate if layer < cfg.leoam.early_layers
                 else cfg.leoam.importance_rate)
-        budget_tokens = max(self.chunk,
-                            int(math.ceil(self.length * rate)))
-        per_tok = np.repeat(scores / self.chunk, self.chunk)[: self.length]
-        if self.ecfg.selection == "tree":
-            res = tree_select(per_tok, budget_tokens, self.chunk)
-        else:
-            res = flat_chunk_select(per_tok, budget_tokens, self.chunk)
-        st.evaluations = res.evaluations
-        sel = sorted({int(t) // self.chunk for t in res.selected})
-        # sink + recent + hot chunks always included
-        forced = set(range(cfg.leoam.sink_chunks))
-        forced.update(range(max(0, n_valid - cfg.leoam.recent_chunks), n_valid))
-        forced.update(int(c) for c in self.access.hot_tokens(self.ecfg.hot_frac)
-                      if c < n_valid)
-        sel = sorted(set(sel) | forced)
-        return sel, st
+        sels: Dict[int, List[int]] = {}
+        stats: Dict[int, StepStats] = {}
+        for i, sid in enumerate(order):
+            st = StepStats(abstract_bytes=abs_billed[sid])
+            nv = n_valid[sid]
+            length = int(lengths[i])
+            scores = ub[i].max(0)[:nv]                       # (nv,)
+            budget_tokens = max(chunk, int(math.ceil(length * rate)))
+            per_tok = np.repeat(scores / chunk, chunk)[:length]
+            if self.ecfg.selection == "tree":
+                res = tree_select(per_tok, budget_tokens, chunk)
+            else:
+                res = flat_chunk_select(per_tok, budget_tokens, chunk)
+            st.evaluations = res.evaluations
+            sel = sorted({int(t) // chunk for t in res.selected})
+            # sink + recent + hot chunks always included
+            forced = set(range(cfg.leoam.sink_chunks))
+            forced.update(range(max(0, nv - cfg.leoam.recent_chunks), nv))
+            forced.update(
+                int(c) for c in self.seqs[sid].access.hot_tokens(
+                    self.ecfg.hot_frac) if c < nv)
+            sels[sid] = sorted(set(sel) | forced)
+            stats[sid] = st
+        return sels, stats
 
-    def decode_step(self, token: int) -> int:
-        """One token: select → fetch → attend on the working set."""
+    # ------------------------------------------------------------------
+    # Decode round
+    # ------------------------------------------------------------------
+    def decode_round(self, tokens: Dict[int, int]) -> Dict[int, int]:
+        """One token for every sequence in ``tokens`` ({seq id: last token}).
+
+        Per attention layer: batched importance eval, one coalesced store
+        gather, one padded attention dispatch.  Non-attention (recurrent /
+        dense) layers keep their exact per-sequence decode path.  Returns
+        {seq id: next token}.
+        """
         cfg = self.cfg
-        x = jnp.asarray([[token]], jnp.int32)
-        # embed + per-layer manual pass mirroring lm.decode_step, but with
-        # attention served from the tier store's working set
+        order = sorted(tokens)
+        B = len(order)
+        assert B > 0, "decode_round needs at least one sequence"
+        states = [self.seqs[sid] for sid in order]
+        lengths = np.array([s.length for s in states], np.int64)
+        x = jnp.asarray([[tokens[sid]] for sid in order], jnp.int32)
         params = self.params
-        h = jnp.take(params["embed"], x, axis=0)
-        aux_len = jnp.int32(self.length)
+        h = jnp.take(params["embed"], x, axis=0)             # (B, 1, d)
 
         prologue, period, repeats = lm._layer_plan(cfg)
-        stats_this = StepStats()
+        round_stats = {sid: StepStats() for sid in order}
         li = 0
-        new_states = {"prologue": list(self.cache["prologue"]),
-                      "body": list(self.cache["body"])}
+        new_caches = [{"prologue": list(s.cache["prologue"]),
+                       "body": list(s.cache["body"])} for s in states]
 
-        def run_block(blk, kind, mlpk, h, layer_idx, cache_slice):
-            nonlocal li, stats_this
+        def run_attn(blk, kind, mlpk, h, layer_idx):
+            nonlocal li
+            hln = attn_mod.rms_norm(h, blk["ln1"], cfg.norm_eps)
+            pos = jnp.asarray(lengths[:, None], jnp.int32)   # (B, 1)
+            q, k_new, v_new = attn_mod._qkv(blk["core"], cfg, hln, pos)
+            qn = np.asarray(q[:, 0])                         # (B, H, hd)
+            sels, sel_stats = self._select_chunks_batched(
+                li, layer_idx, qn, order, lengths)
+
+            nmax = max(len(s) for s in sels.values())
+            pad = max(1, self.ecfg.sel_pad)
+            nmax = -(-nmax // pad) * pad
+            kg, vg, _ = self.store.fetch_chunks_batch(li, sels, pad_to=nmax)
+
+            # positions per padded slot; sentinel pads fail pos <= length
+            S = nmax * self.chunk + 1
+            pos_np = np.full((B, S), np.iinfo(np.int64).max, np.int64)
+            for i, sid in enumerate(order):
+                sel = np.asarray(sels[sid])
+                p = (sel[:, None] * self.chunk
+                     + np.arange(self.chunk)[None]).reshape(-1)
+                pos_np[i, :len(p)] = p
+                pos_np[i, -1] = lengths[i]
+                st = round_stats[sid]
+                st.evaluations += sel_stats[sid].evaluations
+                st.fetched_chunks += len(sels[sid])
+                st.abstract_bytes += sel_stats[sid].abstract_bytes
+                self.seqs[sid].access.record(sel)
+            valid = jnp.asarray(pos_np <= lengths[:, None])[:, None, None]
+
+            y = _attend_workingset(q, jnp.asarray(kg), jnp.asarray(vg),
+                                   k_new, v_new, valid, blk["core"]["wo"],
+                                   attn_softcap=cfg.attn_softcap)
+            kn_np = np.asarray(k_new[:, 0])
+            vn_np = np.asarray(v_new[:, 0])
+            for i, sid in enumerate(order):
+                self.store.append_token(li, int(lengths[i]), kn_np[i],
+                                        vn_np[i], seq=sid)
+            li += 1
+            h = h + y
+            h, _ = lm._apply_mlp(blk, cfg, mlpk, h, None)
+            return h
+
+        def run_other(blk, kind, mlpk, h, layer_idx, cache_slices):
+            """Recurrent/dense layers: exact per-sequence standard decode."""
+            rows, new_slices = [], []
+            for i, cs in enumerate(cache_slices):
+                hi, c2, _ = lm._block_decode(blk, cfg, kind, mlpk, h[i:i + 1],
+                                             cs, jnp.int32(int(lengths[i])),
+                                             layer_idx=layer_idx,
+                                             ctx=attn_mod.LOCAL_CTX)
+                rows.append(hi)
+                new_slices.append(c2)
+            return jnp.concatenate(rows, axis=0), new_slices
+
+        for pi, (idx, kind, mlpk) in enumerate(prologue):
+            blk = params["prologue"][pi]
             if kind.startswith("attn"):
-                hln = attn_mod.rms_norm(h, blk["ln1"], cfg.norm_eps)
-                q, k_new, v_new = attn_mod._qkv(
-                    blk["core"], cfg, hln,
-                    jnp.full((1, 1), self.length, jnp.int32))
-                qn = np.asarray(q[0, 0])                       # (H, hd)
-                sel, st = self._select_chunks(li, layer_idx, qn)
-                kg, vg = self.store.fetch_chunks(li, sel)      # (n, c, Hkv, hd)
-                stats_this.evaluations += st.evaluations
-                stats_this.fetched_chunks += len(sel)
-                stats_this.abstract_bytes += st.abstract_bytes
-                self.access.record(np.asarray(sel))
-                y = self._attend(blk, cfg, kind, h, q, kg, vg, sel,
-                                 k_new, v_new)
-                self.store.append_token(li, self.length,
-                                        np.asarray(k_new[0, 0]),
-                                        np.asarray(v_new[0, 0]))
-                li += 1
-                h = h + y
-                h, _ = lm._apply_mlp(blk, cfg, mlpk, h, None)
-                return h, cache_slice
-            # recurrent/dense layers go through the standard decode path
-            h, c2, _ = lm._block_decode(blk, cfg, kind, mlpk, h,
-                                        cache_slice, aux_len,
-                                        layer_idx=layer_idx,
-                                        ctx=attn_mod.LOCAL_CTX)
-            return h, c2
-
-        for i, (idx, kind, mlpk) in enumerate(prologue):
-            h, c2 = run_block(params["prologue"][i], kind, mlpk, h, idx,
-                              self.cache["prologue"][i])
-            new_states["prologue"][i] = c2
+                h = run_attn(blk, kind, mlpk, h, idx)
+            else:
+                slices = [s.cache["prologue"][pi] for s in states]
+                h, new_slices = run_other(blk, kind, mlpk, h, idx, slices)
+                for i in range(B):
+                    new_caches[i]["prologue"][pi] = new_slices[i]
         for r in range(repeats):
             for pi, (kind, mlpk) in enumerate(period):
                 blk = jax.tree.map(lambda a: a[r], params["body"][pi])
-                cs = jax.tree.map(lambda a: a[r], self.cache["body"][pi])
-                h, c2 = run_block(blk, kind, mlpk, h, 10**6, cs)
-                if c2 is not cs:
+                if kind.startswith("attn"):
+                    h = run_attn(blk, kind, mlpk, h, 10 ** 6)
+                    continue
+                slices = [jax.tree.map(lambda a: a[r], s.cache["body"][pi])
+                          for s in states]
+                h, new_slices = run_other(blk, kind, mlpk, h, 10 ** 6, slices)
+                for i in range(B):
                     def put(a, b):
                         a = np.asarray(a)
                         a[r] = np.asarray(b)
                         return a
-                    new_states["body"][pi] = jax.tree.map(
-                        put, new_states["body"][pi], c2)
+                    new_caches[i]["body"][pi] = jax.tree.map(
+                        put, new_caches[i]["body"][pi], new_slices[i])
 
-        logits = lm._logits(params, cfg, h)[:, 0]
-        self.cache = new_states
-        self.length += 1
-        self.stats.append(stats_this)
-        return int(np.argmax(np.asarray(logits)[0]))
+        logits = np.asarray(lm._logits(params, cfg, h)[:, 0])  # (B, V)
+        out: Dict[int, int] = {}
+        for i, sid in enumerate(order):
+            s = self.seqs[sid]
+            s.cache = new_caches[i]
+            s.length += 1
+            s.stats.append(round_stats[sid])
+            out[sid] = int(np.argmax(logits[i]))
+        return out
 
-    def _attend(self, blk, cfg, kind, h, q, kg, vg, sel, k_new, v_new):
-        """Attention over the fetched working set + the new token."""
-        n, c, Hkv, hd = kg.shape
-        kg = jnp.asarray(kg.reshape(1, n * c, Hkv, hd), h.dtype)
-        vg = jnp.asarray(vg.reshape(1, n * c, Hkv, hd), h.dtype)
-        kg = jnp.concatenate([kg, k_new.astype(h.dtype)], axis=1)
-        vg = jnp.concatenate([vg, v_new.astype(h.dtype)], axis=1)
-        pos = np.concatenate([
-            (np.asarray(sel)[:, None] * self.chunk
-             + np.arange(self.chunk)[None]).reshape(-1),
-            [self.length]])
-        valid = jnp.asarray(pos <= self.length)[None, None, None]
-        from repro.core import sparse_attention as sa
-        B, _, H, _ = q.shape
-        qs = q[:, 0] * (1.0 / math.sqrt(hd))
-        G = H // Hkv
-        kt = jnp.swapaxes(kg, 1, 2)
-        vt = jnp.swapaxes(vg, 1, 2)
-        scores = jnp.einsum("bkgd,bksd->bkgs",
-                            qs.reshape(B, Hkv, G, hd).astype(jnp.float32),
-                            kt.astype(jnp.float32))
-        if cfg.attn_softcap is not None:
-            scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
-        part = sa._masked_softmax_partials(scores, vt, valid)
-        out = sa._finish(part).astype(h.dtype).reshape(B, 1, H * hd)
-        return out @ blk["core"]["wo"]
+
+class LeoAMEngine:
+    """Single-sequence view: a B=1 wrapper over the batched engine,
+    preserving the original prefill / decode_step / generate API."""
+
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineCfg):
+        self._engine = BatchedLeoAMEngine(cfg, params, ecfg, max_seqs=1)
+        self._sid: Optional[int] = None
+
+    # passthroughs used by benchmarks / scheduler / examples
+    @property
+    def cfg(self):
+        return self._engine.cfg
+
+    @property
+    def ecfg(self):
+        return self._engine.ecfg
+
+    @property
+    def chunk(self):
+        return self._engine.chunk
+
+    @property
+    def n_chunks(self):
+        return self._engine.n_chunks
+
+    @property
+    def attn_layers(self):
+        return self._engine.attn_layers
+
+    @property
+    def store(self):
+        return self._engine.store
+
+    @property
+    def length(self) -> int:
+        return self._engine.seqs[self._sid].length if self._sid is not None \
+            else 0
+
+    @property
+    def access(self):
+        return self._engine.seqs[self._sid].access
+
+    @property
+    def stats(self) -> List[StepStats]:
+        if self._sid is None:
+            return []
+        return self._engine.seqs[self._sid].stats
 
     # ------------------------------------------------------------------
+    def prefill(self, tokens: np.ndarray) -> int:
+        if self._sid is not None:        # re-prefill resets, as the old
+            self._engine.release(self._sid)  # per-request engine did
+        self._sid, tok = self._engine.add_sequence(tokens)
+        return tok
+
+    def decode_step(self, token: int) -> int:
+        assert self._sid is not None, "prefill first"
+        return self._engine.decode_round({self._sid: token})[self._sid]
+
     def generate(self, prompt: np.ndarray, n_tokens: int) -> List[int]:
         tok = self.prefill(prompt)
         out = [tok]

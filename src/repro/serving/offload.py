@@ -1,11 +1,26 @@
 """Three-tier KV store: device / host / disk with byte-accurate accounting.
 
-The unit of placement is the (layer, chunk) pair, matching IAKM.  The disk
-tier holds FULL REPLICAS of every chunk plus its LKA abstract (paper §4.3):
-demotions are metadata-only (no write I/O), promotions read either the
-abstract (2 key vectors) or the chunk payload, optionally through the INT4
-transit codec.  All traffic is tallied per (src, dst, kind) so benchmarks
-and the simulator can audit exactly what LeoAM saves.
+The unit of placement is the (seq, layer, chunk) triple: one store serves a
+whole decode batch, so transfers and importance evaluation amortize across
+sequences (the paper's batched speedup regime).  The disk tier holds FULL
+REPLICAS of every chunk plus its LKA abstract (paper §4.3): demotions are
+metadata-only (no write I/O), promotions read either the abstract (2 key
+vectors) or the chunk payload, optionally through the INT4 transit codec.
+
+Batched round support:
+
+* one shared disk memmap over all sequences — ``fetch_chunks_batch`` gathers
+  every disk-resident (seq, chunk) pair of a layer in ONE fancy-indexed
+  read, so promotion I/O for a decode round is one gather per layer;
+* a shared DEVICE chunk budget across sequences with LRU demotion (eviction
+  is free: the host copy survives and disk always holds the replica);
+* per-sequence ``TrafficLog`` mirrors: every byte recorded in the shared
+  ``log`` is also attributed to its sequence (retired sequences' logs move
+  to ``retired_logs`` so reused slots audit fresh), and benchmarks assert
+  shared == Σ seq_logs + Σ retired_logs exactly.
+
+All traffic is tallied per (src, dst, kind) so benchmarks and the simulator
+can audit exactly what LeoAM saves.
 """
 
 from __future__ import annotations
@@ -14,7 +29,7 @@ import os
 import tempfile
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -41,30 +56,45 @@ class TrafficLog:
 
 
 class TieredKVStore:
-    """Per-layer chunked K/V with GPU/CPU/disk placement.
+    """Multi-sequence chunked K/V with GPU/CPU/disk placement.
 
-    K/V chunks are (chunk, Hkv, hd) numpy arrays.  ``disk`` is a real
-    memory-mapped file (so promotion latency is a genuine read on whatever
-    machine this runs on); device tier is represented by pinned host arrays
-    handed to jax at attention time.
+    K/V chunks are (chunk, Hkv, hd) numpy arrays keyed by (seq, layer,
+    chunk).  ``disk`` is a real memory-mapped file shared by all sequences
+    (so promotion latency is a genuine read on whatever machine this runs
+    on); the device tier is represented by pinned host arrays handed to jax
+    at attention time, capped by ``device_budget`` total chunks across the
+    batch with LRU demotion.
+
+    The single-sequence API (``seq`` defaulting to 0) is unchanged from the
+    original per-request store, so a ``n_seqs=1`` store behaves exactly as
+    before.
     """
 
     def __init__(self, n_layers: int, n_chunks: int, chunk: int, kv_heads: int,
-                 head_dim: int, *, dtype=np.float16, transit_codec="int4",
-                 root: Optional[str] = None):
+                 head_dim: int, *, n_seqs: int = 1, dtype=np.float16,
+                 transit_codec="int4", root: Optional[str] = None,
+                 device_budget: Optional[int] = None):
+        self.n_seqs = n_seqs
         self.n_layers, self.n_chunks, self.chunk = n_layers, n_chunks, chunk
         self.kv_heads, self.head_dim = kv_heads, head_dim
         self.dtype = np.dtype(dtype)
         self.transit_codec = transit_codec
-        self.tier: np.ndarray = np.full((n_layers, n_chunks), HOST, object)
-        self.access: np.ndarray = np.zeros((n_layers, n_chunks))
+        self.device_budget = device_budget
+        self.tier: np.ndarray = np.full((n_seqs, n_layers, n_chunks), HOST,
+                                        object)
+        self.access: np.ndarray = np.zeros((n_seqs, n_layers, n_chunks))
         self.log = TrafficLog()
-        self._host_k: Dict[Tuple[int, int], np.ndarray] = {}
-        self._host_v: Dict[Tuple[int, int], np.ndarray] = {}
-        self._dev_k: Dict[Tuple[int, int], np.ndarray] = {}
-        self._dev_v: Dict[Tuple[int, int], np.ndarray] = {}
-        self._abstracts: Dict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]] = {}
-        shape = (n_layers, n_chunks, 2, chunk, kv_heads, head_dim)
+        self.seq_logs: Dict[int, TrafficLog] = defaultdict(TrafficLog)
+        self.retired_logs: List[TrafficLog] = []
+        Key = Tuple[int, int, int]
+        self._host_k: Dict[Key, np.ndarray] = {}
+        self._host_v: Dict[Key, np.ndarray] = {}
+        self._dev_k: Dict[Key, np.ndarray] = {}
+        self._dev_v: Dict[Key, np.ndarray] = {}
+        self._abstracts: Dict[Key, Tuple[np.ndarray, np.ndarray]] = {}
+        self._lru: Dict[Key, int] = {}        # device keys -> last-use tick
+        self._tick = 0
+        shape = (n_seqs, n_layers, n_chunks, 2, chunk, kv_heads, head_dim)
         self._root = root or tempfile.mkdtemp(prefix="leoam_kv_")
         self._disk = np.memmap(os.path.join(self._root, "kv.bin"),
                                dtype=self.dtype, mode="w+", shape=shape)
@@ -78,8 +108,22 @@ class TieredKVStore:
     def abstract_bytes(self) -> int:
         return 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
 
+    def _record(self, seq: int, src: str, dst: str, kind: str,
+                nbytes: float) -> None:
+        """Tally into the shared log AND the sequence's mirror, identically
+        — the shared log is the exact sum of the per-seq logs by
+        construction."""
+        self.log.record(src, dst, kind, nbytes)
+        self.seq_logs[seq].record(src, dst, kind, nbytes)
+
+    def _transit_bytes(self) -> float:
+        nbytes = float(self.chunk_bytes)
+        if self.transit_codec:
+            nbytes *= compression.codec_ratio(self.transit_codec)
+        return nbytes
+
     def ingest(self, layer: int, k: np.ndarray, v: np.ndarray,
-               placement: Dict[int, str]) -> None:
+               placement: Dict[int, str], *, seq: int = 0) -> None:
         """Store prefill KV.  k/v: (S, Hkv, hd).  Every chunk is replicated
         to disk (with its abstract); ``placement`` assigns the hot tier."""
         S = k.shape[0]
@@ -90,101 +134,211 @@ class TieredKVStore:
                 pad = self.chunk - kc.shape[0]
                 kc = np.pad(kc, ((0, pad), (0, 0), (0, 0)))
                 vc = np.pad(vc, ((0, pad), (0, 0), (0, 0)))
-            self._disk[layer, c, 0] = kc
-            self._disk[layer, c, 1] = vc
-            self._abstracts[(layer, c)] = (kc.max(0), kc.min(0))
-            self.log.record(HOST, DISK, "kv_replica", self.chunk_bytes)
-            self.log.record(HOST, DISK, "abstract", self.abstract_bytes)
+            self._disk[seq, layer, c, 0] = kc
+            self._disk[seq, layer, c, 1] = vc
+            self._abstracts[(seq, layer, c)] = (kc.max(0), kc.min(0))
+            self._record(seq, HOST, DISK, "kv_replica", self.chunk_bytes)
+            self._record(seq, HOST, DISK, "abstract", self.abstract_bytes)
             where = placement.get(c, HOST)
-            self.tier[layer, c] = where
+            self.tier[seq, layer, c] = where
+            key = (seq, layer, c)
             if where in (HOST, DEVICE):
-                self._host_k[(layer, c)], self._host_v[(layer, c)] = kc, vc
+                self._host_k[key], self._host_v[key] = kc, vc
             if where == DEVICE:
-                self._dev_k[(layer, c)], self._dev_v[(layer, c)] = kc, vc
+                self._promote_device(key, kc, vc)
 
     # ------------------------------------------------------------------
-    def read_abstracts(self, layer: int, chunks: List[int]
-                       ) -> Tuple[np.ndarray, np.ndarray]:
+    def read_abstracts(self, layer: int, chunks: Sequence[int], *,
+                       seq: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         """LKA: fetch (kmax, kmin) for chunks; disk chunks cost abstract I/O."""
         kmaxs, kmins = [], []
         for c in chunks:
-            if self.tier[layer, c] == DISK:
-                self.log.record(DISK, HOST, "abstract", self.abstract_bytes)
-            km, kn = self._abstracts[(layer, c)]
+            if self.tier[seq, layer, c] == DISK:
+                self._record(seq, DISK, HOST, "abstract", self.abstract_bytes)
+            km, kn = self._abstracts[(seq, layer, c)]
             kmaxs.append(km)
             kmins.append(kn)
         return np.stack(kmaxs), np.stack(kmins)
 
-    def fetch_chunks(self, layer: int, chunks: List[int], *,
-                     to_device: bool = True
+    def read_abstracts_batch(self, layer: int,
+                             chunks_by_seq: Dict[int, Sequence[int]]
+                             ) -> Tuple[np.ndarray, np.ndarray, Dict[int, float]]:
+        """Batched LKA read: one padded (B, ncmax, Hkv, hd) stack for the
+        round's importance evaluation.  Returns (kmax, kmin, abstract bytes
+        billed per sequence); rows follow dict order, padded with zeros."""
+        B = len(chunks_by_seq)
+        ncmax = max((len(c) for c in chunks_by_seq.values()), default=0)
+        km = np.zeros((B, ncmax, self.kv_heads, self.head_dim), np.float32)
+        kn = np.zeros_like(km)
+        billed: Dict[int, float] = {}
+        for i, (seq, chunks) in enumerate(chunks_by_seq.items()):
+            before = self.seq_logs[seq].total(kind="abstract")
+            a, b = self.read_abstracts(layer, chunks, seq=seq)
+            km[i, :len(chunks)] = a
+            kn[i, :len(chunks)] = b
+            billed[seq] = self.seq_logs[seq].total(kind="abstract") - before
+        return km, kn, billed
+
+    # ------------------------------------------------------------------
+    def _promote_device(self, key: Tuple[int, int, int], kc: np.ndarray,
+                        vc: np.ndarray) -> None:
+        """Pin a chunk device-side, demoting LRU chunks past the shared
+        budget (free: host copies + disk replicas survive)."""
+        self._dev_k[key], self._dev_v[key] = kc, vc
+        self.tier[key[0], key[1], key[2]] = DEVICE
+        self._tick += 1
+        self._lru[key] = self._tick
+        if self.device_budget is not None:
+            while len(self._dev_k) > self.device_budget:
+                victim = min(self._lru, key=self._lru.get)
+                self._dev_k.pop(victim, None)
+                self._dev_v.pop(victim, None)
+                self._lru.pop(victim, None)
+                self.tier[victim[0], victim[1], victim[2]] = HOST
+
+    def fetch_chunks(self, layer: int, chunks: Sequence[int], *,
+                     seq: int = 0, to_device: bool = True
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """Promote chunks to the device working set; returns stacked K/V
         (n, chunk, Hkv, hd).  Disk promotions go through the transit codec."""
         ks, vs = [], []
         for c in chunks:
-            key = (layer, c)
-            self.access[layer, c] += 1
-            tier = self.tier[layer, c]
+            key = (seq, layer, c)
+            self.access[seq, layer, c] += 1
             if key in self._dev_k:
+                self._tick += 1
+                self._lru[key] = self._tick
                 ks.append(self._dev_k[key])
                 vs.append(self._dev_v[key])
                 continue
-            if tier == DISK or key not in self._host_k:
-                kc = np.asarray(self._disk[layer, c, 0])
-                vc = np.asarray(self._disk[layer, c, 1])
-                nbytes = self.chunk_bytes
-                if self.transit_codec:
-                    nbytes *= compression.codec_ratio(self.transit_codec)
-                self.log.record(DISK, HOST, "kv", nbytes)
+            if self.tier[seq, layer, c] == DISK or key not in self._host_k:
+                kc = np.asarray(self._disk[seq, layer, c, 0])
+                vc = np.asarray(self._disk[seq, layer, c, 1])
+                self._record(seq, DISK, HOST, "kv", self._transit_bytes())
                 self._host_k[key], self._host_v[key] = kc, vc
             kc, vc = self._host_k[key], self._host_v[key]
-            nbytes = self.chunk_bytes
-            if self.transit_codec:
-                nbytes *= compression.codec_ratio(self.transit_codec)
-            self.log.record(HOST, DEVICE, "kv", nbytes)
+            self._record(seq, HOST, DEVICE, "kv", self._transit_bytes())
             if to_device:
-                self._dev_k[key], self._dev_v[key] = kc, vc
-                self.tier[layer, c] = DEVICE
+                self._promote_device(key, kc, vc)
             ks.append(kc)
             vs.append(vc)
         return np.stack(ks), np.stack(vs)
 
-    def demote(self, layer: int, chunks: List[int], to: str = HOST) -> None:
+    def fetch_chunks_batch(self, layer: int,
+                           chunks_by_seq: Dict[int, Sequence[int]], *,
+                           pad_to: Optional[int] = None, to_device: bool = True
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batch-coalesced promotion for one decode round of one layer.
+
+        All disk-resident (seq, chunk) pairs across the batch are read from
+        the shared memmap in ONE fancy-indexed gather, then every sequence's
+        ragged selection is padded to ``pad_to`` (default: the round's max).
+
+        Returns (kg, vg, nsel): kg/vg (B, pad_to, chunk, Hkv, hd) in store
+        dtype with zero padding, nsel (B,) the per-row valid chunk counts.
+        Rows follow dict order.  Accounting matches per-seq ``fetch_chunks``
+        byte-for-byte; only the I/O issue pattern differs.
+        """
+        items = list(chunks_by_seq.items())
+        B = len(items)
+        nsel = np.array([len(c) for _, c in items], np.int32)
+        nmax = int(pad_to if pad_to is not None else (nsel.max() if B else 0))
+
+        # one gather per layer for everything that must come off disk
+        need_disk = [(seq, c) for seq, chunks in items for c in chunks
+                     if (seq, layer, c) not in self._dev_k
+                     and ((seq, layer, c) not in self._host_k
+                          or self.tier[seq, layer, c] == DISK)]
+        if need_disk:
+            sq = np.array([s for s, _ in need_disk])
+            cq = np.array([c for _, c in need_disk])
+            blk = np.asarray(self._disk[sq, layer, cq])   # (n, 2, chunk, ...)
+            for (seq, c), kv in zip(need_disk, blk):
+                key = (seq, layer, c)
+                self._record(seq, DISK, HOST, "kv", self._transit_bytes())
+                self._host_k[key], self._host_v[key] = kv[0], kv[1]
+
+        kg = np.zeros((B, nmax, self.chunk, self.kv_heads, self.head_dim),
+                      self.dtype)
+        vg = np.zeros_like(kg)
+        for i, (seq, chunks) in enumerate(items):
+            for j, c in enumerate(chunks):
+                key = (seq, layer, c)
+                self.access[seq, layer, c] += 1
+                if key in self._dev_k:
+                    self._tick += 1
+                    self._lru[key] = self._tick
+                    kg[i, j], vg[i, j] = self._dev_k[key], self._dev_v[key]
+                    continue
+                self._record(seq, HOST, DEVICE, "kv", self._transit_bytes())
+                if to_device:
+                    self._promote_device(key, self._host_k[key],
+                                         self._host_v[key])
+                kg[i, j], vg[i, j] = self._host_k[key], self._host_v[key]
+        return kg, vg, nsel
+
+    def demote(self, layer: int, chunks: Sequence[int], to: str = HOST, *,
+               seq: int = 0) -> None:
         """Eviction is free toward disk (replicas, §4.3)."""
         for c in chunks:
-            key = (layer, c)
+            key = (seq, layer, c)
             self._dev_k.pop(key, None)
             self._dev_v.pop(key, None)
+            self._lru.pop(key, None)
             if to == DISK:
                 self._host_k.pop(key, None)
                 self._host_v.pop(key, None)
-            self.tier[layer, c] = to
+            self.tier[seq, layer, c] = to
 
     def append_token(self, layer: int, pos: int, k_new: np.ndarray,
-                     v_new: np.ndarray) -> None:
+                     v_new: np.ndarray, *, seq: int = 0) -> None:
         """Decode-step cache append: update chunk + abstract in place."""
         c, off = pos // self.chunk, pos % self.chunk
-        self._disk[layer, c, 0, off] = k_new.astype(self.dtype)
-        self._disk[layer, c, 1, off] = v_new.astype(self.dtype)
-        km, kn = self._abstracts.get((layer, c),
+        self._disk[seq, layer, c, 0, off] = k_new.astype(self.dtype)
+        self._disk[seq, layer, c, 1, off] = v_new.astype(self.dtype)
+        km, kn = self._abstracts.get((seq, layer, c),
                                      (np.full((self.kv_heads, self.head_dim),
                                               -np.inf, self.dtype),
                                       np.full((self.kv_heads, self.head_dim),
                                               np.inf, self.dtype)))
-        self._abstracts[(layer, c)] = (np.maximum(km, k_new),
-                                       np.minimum(kn, k_new))
-        key = (layer, c)
+        self._abstracts[(seq, layer, c)] = (np.maximum(km, k_new),
+                                            np.minimum(kn, k_new))
+        key = (seq, layer, c)
         if key in self._host_k:
             self._host_k[key][off] = k_new
             self._host_v[key][off] = v_new
         if key in self._dev_k:
             self._dev_k[key][off] = k_new
             self._dev_v[key][off] = v_new
-        self.log.record(HOST, DISK, "kv_append",
-                        2 * self.kv_heads * self.head_dim * self.dtype.itemsize)
+        self._record(seq, HOST, DISK, "kv_append",
+                     2 * self.kv_heads * self.head_dim * self.dtype.itemsize)
+
+    # ------------------------------------------------------------------
+    def clear_seq(self, seq: int) -> None:
+        """Retire a sequence: free its hot-tier entries so the slot can be
+        reused by the next admitted request.  The slot's traffic log moves
+        to ``retired_logs`` so a reused slot starts a fresh audit; the
+        shared ``log`` always equals Σ seq_logs + Σ retired_logs.  Stale
+        disk data needs no scrub: the next ingest overwrites every chunk it
+        will read, and appended chunks are masked by pos <= length."""
+        for d in (self._host_k, self._host_v, self._dev_k, self._dev_v,
+                  self._abstracts, self._lru):
+            for key in [k for k in d if k[0] == seq]:
+                d.pop(key, None)
+        self.tier[seq] = HOST
+        self.access[seq] = 0.0
+        if seq in self.seq_logs:
+            self.retired_logs.append(self.seq_logs.pop(seq))
 
     def device_bytes(self) -> int:
         return len(self._dev_k) * self.chunk_bytes
+
+    def tier_bytes(self) -> Dict[str, float]:
+        """Bytes moved so far, by (src, dst) pair — benchmark reporting."""
+        out: Dict[str, float] = defaultdict(float)
+        for (src, dst, _kind), v in self.log.bytes.items():
+            out[f"{src}->{dst}"] += v
+        return dict(out)
 
     def close(self) -> None:
         del self._disk

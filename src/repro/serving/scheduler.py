@@ -4,9 +4,18 @@ Admission is KV-budget-aware across the three tiers: a request is admitted
 when its max_len worth of chunks fits the configured device+host budget
 (disk replicas are assumed plentiful, per the paper).  Decode proceeds in
 rounds over all active requests; finished requests retire immediately and
-the queue backfills — the standard continuous-batching loop, driven here by
-per-request LeoAM engines (production decode batches inside one jitted
-``decode_step``; see launch/steps.make_jitted_decode).
+the queue backfills — the standard continuous-batching loop.
+
+Two drive modes:
+
+* **batched** (pass ``engine=BatchedLeoAMEngine(...)``): every round is ONE
+  ``decode_round`` over all active sequences against the shared multi-tier
+  store — importance evaluation, promotion I/O and the working-set
+  attention dispatch amortize across the batch (the paper's large-batch
+  speedup regime).
+* **legacy** (pass ``make_engine=...``): one single-sequence engine per
+  request, stepped in a Python loop — kept for A/B benchmarking and
+  backward compatibility.
 """
 
 from __future__ import annotations
@@ -45,14 +54,22 @@ class SchedulerCfg:
 
 
 class ContinuousBatcher:
-    """Round-robin continuous batching over engine-backed sequences."""
+    """Continuous batching over LeoAM engines.
 
-    def __init__(self, make_engine: Callable[[], "object"],
-                 cfg: SchedulerCfg):
+    ``active`` maps rid -> (request, handle, last token); ``handle`` is the
+    per-request engine in legacy mode or the shared engine's sequence id in
+    batched mode.
+    """
+
+    def __init__(self, make_engine: Optional[Callable[[], "object"]] = None,
+                 cfg: Optional[SchedulerCfg] = None, *, engine=None):
+        assert (make_engine is None) != (engine is None), \
+            "pass exactly one of make_engine (legacy) or engine (batched)"
         self.make_engine = make_engine
-        self.cfg = cfg
+        self.engine = engine
+        self.cfg = cfg or SchedulerCfg()
         self.queue: Deque[Request] = deque()
-        self.active: Dict[int, tuple] = {}     # rid -> (request, engine, tok)
+        self.active: Dict[int, tuple] = {}
         self.finished: List[Request] = []
 
     def submit(self, req: Request) -> None:
@@ -65,37 +82,60 @@ class ContinuousBatcher:
     def _device_chunks_used(self) -> int:
         return sum(self._chunks_needed(r) for r, _, _ in self.active.values())
 
+    def _can_admit(self) -> bool:
+        if not self.queue or len(self.active) >= self.cfg.max_active:
+            return False
+        if (self._device_chunks_used() + self._chunks_needed(self.queue[0])
+                > self.cfg.device_chunk_budget):
+            return False
+        return self.engine is None or self.engine.free_slots > 0
+
     def _admit(self) -> None:
-        while (self.queue and len(self.active) < self.cfg.max_active
-               and (self._device_chunks_used()
-                    + self._chunks_needed(self.queue[0]))
-               <= self.cfg.device_chunk_budget):
+        while self._can_admit():
             req = self.queue.popleft()
-            eng = self.make_engine()
-            tok = eng.prefill(req.prompt)
+            if self.engine is not None:
+                handle, tok = self.engine.add_sequence(req.prompt)
+            else:
+                handle = self.make_engine()
+                tok = handle.prefill(req.prompt)
             req.t_first = time.perf_counter()
             req.out.append(tok)
-            self.active[req.rid] = (req, eng, tok)
+            self.active[req.rid] = (req, handle, tok)
+
+    def _retire(self, rids: List[int]) -> None:
+        for rid in rids:
+            req, handle, _ = self.active.pop(rid)
+            req.t_done = time.perf_counter()
+            self.finished.append(req)
+            if self.engine is not None:
+                self.engine.release(handle)
+            elif hasattr(handle, "store") and handle.store is not None:
+                handle.store.close()
 
     def step(self) -> int:
         """One decode round over all active requests; returns #active."""
         self._admit()
-        retired = []
-        for rid, (req, eng, tok) in list(self.active.items()):
-            if req.done:
-                retired.append(rid)
-                continue
-            tok = eng.decode_step(tok)
-            req.out.append(tok)
-            self.active[rid] = (req, eng, tok)
-            if req.done:
-                retired.append(rid)
-        for rid in retired:
-            req, eng, _ = self.active.pop(rid)
-            req.t_done = time.perf_counter()
-            self.finished.append(req)
-            if hasattr(eng, "store") and eng.store is not None:
-                eng.store.close()
+        retired = [rid for rid, (req, _, _) in self.active.items() if req.done]
+        live = {rid: v for rid, v in self.active.items()
+                if rid not in retired}
+        if self.engine is not None and live:
+            # ONE batched decode round for every live sequence
+            toks = self.engine.decode_round(
+                {sid: tok for (_, sid, tok) in live.values()})
+            for rid, (req, sid, _) in live.items():
+                tok = toks[sid]
+                req.out.append(tok)
+                self.active[rid] = (req, sid, tok)
+                if req.done:
+                    retired.append(rid)
+        else:
+            for rid, (req, eng, tok) in list(live.items()):
+                tok = eng.decode_step(tok)
+                req.out.append(tok)
+                self.active[rid] = (req, eng, tok)
+                if req.done:
+                    retired.append(rid)
+        self._retire(retired)
         self._admit()
         return len(self.active)
 

@@ -1,0 +1,126 @@
+"""Minimal offline stand-in for the ``hypothesis`` package.
+
+The container has no network access, so ``pip install hypothesis`` is not an
+option.  This module provides just enough of the hypothesis API surface used
+by this repo's property tests — ``given``, ``settings`` and the ``integers``
+/ ``floats`` / ``sampled_from`` strategies — drawing a fixed number of
+deterministic, seeded examples instead of performing randomized search and
+shrinking.  It is installed into ``sys.modules`` by ``conftest.py`` ONLY
+when the real package is absent, so environments that do have hypothesis
+keep its full power (shrinking, edge-case probing, failure databases).
+
+Determinism: examples are derived from ``crc32(test qualname)`` so a given
+test always sees the same example sequence, independent of collection order
+or the process seed.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, List, Sequence
+
+import numpy as np
+
+__version__ = "0.0-repro-compat"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A strategy is just a seeded draw function plus edge examples.
+
+    ``edges`` are deterministic boundary draws emitted first (hypothesis
+    reliably probes bounds; property tests here lean on that for clamp
+    logic), then the remaining examples are uniform draws.
+    """
+
+    def __init__(self, draw: Callable[[np.random.RandomState], Any],
+                 edges: Sequence[Any] = ()):
+        self._draw = draw
+        self._edges = list(edges)
+
+    def example_at(self, idx: int, rng: np.random.RandomState) -> Any:
+        if idx < len(self._edges):
+            return self._edges[idx]
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st.`` in tests)."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2 ** 31 - 1
+                 ) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: int(rng.randint(min_value, max_value + 1)),
+            edges=[min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0
+               ) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            edges=[min_value, max_value])
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+        elements = list(elements)
+        return SearchStrategy(
+            lambda rng: elements[rng.randint(len(elements))],
+            edges=elements)
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: bool(rng.randint(2)),
+                              edges=[False, True])
+
+    @staticmethod
+    def just(value: Any) -> SearchStrategy:
+        return SearchStrategy(lambda rng: value, edges=[value])
+
+
+def given(*strats: SearchStrategy) -> Callable:
+    """Run the test once per deterministic example (positional draws only,
+    which is all this repo uses)."""
+
+    def deco(fn: Callable) -> Callable:
+        def wrapper():
+            n = getattr(wrapper, "_hc_max_examples", _DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            for i in range(n):
+                rng = np.random.RandomState((base + i) % (2 ** 32))
+                args = [s.example_at(i, rng) for s in strats]
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"Falsifying example (compat draw {i}): "
+                        f"{fn.__name__}({', '.join(map(repr, args))})") from e
+
+        # NOTE: no functools.wraps — pytest follows __wrapped__ for signature
+        # introspection and would then demand fixtures for the drawn params.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._hc_inner = fn
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored) -> Callable:
+    """Applied above ``given`` in this repo, so it receives the wrapper."""
+
+    def deco(fn: Callable) -> Callable:
+        fn._hc_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+# `from hypothesis import strategies as st` resolves the class; expose the
+# usual `hypothesis.strategies` submodule alias via conftest's sys.modules
+# registration.
+st = strategies

@@ -5,6 +5,14 @@ import sys
 # and benches must see 1 device; multi-device tests spawn subprocesses.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # offline fallback: vendored fixed-example shim (see _hypothesis_compat)
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_compat
+    sys.modules["hypothesis"] = _hypothesis_compat
+    sys.modules["hypothesis.strategies"] = _hypothesis_compat.strategies
+
 import numpy as np
 import pytest
 

@@ -1,0 +1,178 @@
+"""Batched tiered decoding: token-for-token parity with independent
+single-sequence engines, exact shared-store accounting, scheduler drive."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving.engine import BatchedLeoAMEngine, EngineCfg, LeoAMEngine
+from repro.serving.offload import DISK, HOST, TieredKVStore
+from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerCfg
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("longchat-7b-32k", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                       importance_rate=0.4, early_rate=0.6,
+                                       min_seq_for_sparse=32))
+    params = lm.init(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _ecfg(**kw):
+    return EngineCfg(max_len=128, selection="tree", **kw)
+
+
+def test_batched_matches_independent_engines(setup, rng):
+    """B ragged sequences decoded together == B single-sequence engines,
+    token for token (padding + masking is FP-exact by construction)."""
+    cfg, params = setup
+    prompts = [rng.randint(2, cfg.vocab_size, n) for n in (48, 64, 57)]
+    n_new = 6
+
+    # independent single-sequence engines (each its own store)
+    ref_streams = []
+    for p in prompts:
+        eng = LeoAMEngine(cfg, params, _ecfg())
+        ref_streams.append(eng.generate(p, n_new))
+        eng.store.close()
+
+    # one batched engine, one shared store
+    beng = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=len(prompts))
+    toks = {}
+    streams = {}
+    for i, p in enumerate(prompts):
+        sid, tok = beng.add_sequence(p)
+        toks[sid] = tok
+        streams[sid] = [tok]
+    sids = sorted(streams)
+    for _ in range(n_new - 1):
+        toks = beng.decode_round(toks)
+        for sid in sids:
+            streams[sid].append(toks[sid])
+
+    got = [streams[sid] for sid in sids]
+    assert got == ref_streams, (got, ref_streams)
+    beng.store.close()
+
+
+def test_shared_log_is_sum_of_seq_logs(setup, rng):
+    """Every byte in the shared TrafficLog is attributed to exactly one
+    sequence: shared == sum over per-seq mirrors, key by key."""
+    cfg, params = setup
+    beng = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=3)
+    toks = {}
+    for n in (48, 64, 57):
+        sid, tok = beng.add_sequence(rng.randint(2, cfg.vocab_size, n))
+        toks[sid] = tok
+    for _ in range(4):
+        toks = beng.decode_round(toks)
+
+    # retire one sequence: its log moves to retired_logs, invariant holds
+    beng.release(sorted(toks)[0])
+    logs = list(beng.store.seq_logs.values()) + beng.store.retired_logs
+    assert len(beng.store.retired_logs) == 1
+    keys = set(beng.store.log.bytes)
+    for log in logs:
+        keys |= set(log.bytes)
+    for key in keys:
+        total = sum(log.bytes.get(key, 0.0) for log in logs)
+        assert beng.store.log.bytes.get(key, 0.0) == pytest.approx(total), key
+        ops = sum(log.ops.get(key, 0) for log in logs)
+        assert beng.store.log.ops.get(key, 0) == ops, key
+    beng.store.close()
+
+
+def test_scheduler_batched_mode_matches_legacy(setup, rng):
+    """The batched-engine scheduler produces the same token streams as the
+    legacy per-request-engine scheduler (continuous batching with staggered
+    admission exercises ragged rounds)."""
+    cfg, params = setup
+    prompts = [rng.randint(2, cfg.vocab_size, n) for n in (48, 57, 64, 50)]
+    scfg = SchedulerCfg(max_active=2, device_chunk_budget=64, chunk=16)
+
+    legacy = ContinuousBatcher(
+        lambda: LeoAMEngine(cfg, params, _ecfg()), scfg)
+    for rid, p in enumerate(prompts):
+        legacy.submit(Request(rid, p, max_new=4))
+    ref = {r.rid: r.out for r in legacy.run()}
+
+    beng = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=scfg.max_active)
+    batched = ContinuousBatcher(cfg=scfg, engine=beng)
+    for rid, p in enumerate(prompts):
+        batched.submit(Request(rid, p, max_new=4))
+    got = {r.rid: r.out for r in batched.run()}
+
+    assert len(got) == len(prompts)
+    assert got == ref, (got, ref)
+    st = batched.stats()
+    assert st["requests"] == len(prompts)
+    assert st["throughput_tok_s"] > 0
+    beng.store.close()
+
+
+def test_single_engine_reprefill_resets(setup, rng):
+    """The B=1 wrapper can be reused across prompts like the old
+    per-request engine (prefill releases the previous sequence)."""
+    cfg, params = setup
+    eng = LeoAMEngine(cfg, params, _ecfg())
+    a = eng.generate(rng.randint(2, cfg.vocab_size, 48), 3)
+    b = eng.generate(rng.randint(2, cfg.vocab_size, 57), 3)
+    assert len(a) == len(b) == 3
+    assert eng.length == 57 + 2
+    eng.store.close()
+
+
+def test_store_coalesced_fetch_matches_sequential(rng):
+    """fetch_chunks_batch returns the same payloads and bills the same
+    bytes as per-seq fetch_chunks; disk I/O is one gather per layer."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    v = rng.randn(64, 2, 8).astype(np.float16)
+    sel = {0: [0, 2, 3], 1: [1, 2]}
+
+    seq_store = TieredKVStore(1, 4, 16, 2, 8, n_seqs=2, transit_codec=None)
+    bat_store = TieredKVStore(1, 4, 16, 2, 8, n_seqs=2, transit_codec=None)
+    for st in (seq_store, bat_store):
+        for s in (0, 1):
+            st.ingest(0, k, v, {c: DISK for c in range(4)}, seq=s)
+
+    kg, vg, nsel = bat_store.fetch_chunks_batch(0, sel)
+    assert list(nsel) == [3, 2]
+    for i, (s, chunks) in enumerate(sel.items()):
+        ks, vs = seq_store.fetch_chunks(0, chunks, seq=s)
+        np.testing.assert_array_equal(kg[i, :len(chunks)], ks)
+        np.testing.assert_array_equal(vg[i, :len(chunks)], vs)
+    # padding rows are zero
+    assert not np.any(kg[1, 2:])
+    assert bat_store.log.bytes == seq_store.log.bytes
+    # coalesced path: one disk->host op per chunk billed, but only ONE
+    # python-level memmap gather was issued (smoke-check via ops parity)
+    assert bat_store.log.ops == seq_store.log.ops
+    seq_store.close()
+    bat_store.close()
+
+
+def test_store_device_budget_lru(rng):
+    """Shared device budget: promotions past the cap demote LRU chunks to
+    host for free (no extra traffic kinds, device residency bounded)."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    st = TieredKVStore(1, 4, 16, 2, 8, n_seqs=2, transit_codec=None,
+                       device_budget=3)
+    for s in (0, 1):
+        st.ingest(0, k, k, {c: HOST for c in range(4)}, seq=s)
+    st.fetch_chunks(0, [0, 1, 2], seq=0)
+    assert len(st._dev_k) == 3
+    st.fetch_chunks(0, [0, 1], seq=1)            # evicts seq 0's LRU chunks
+    assert len(st._dev_k) == 3
+    assert (1, 0, 0) in st._dev_k and (1, 0, 1) in st._dev_k
+    # evicted chunks are host-resident again, re-fetch costs host->device only
+    before = st.log.total(src=DISK, kind="kv")
+    st.fetch_chunks(0, [0], seq=0)
+    assert st.log.total(src=DISK, kind="kv") == before
+    st.close()
