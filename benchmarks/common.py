@@ -7,12 +7,22 @@ ratio, rate, ...).
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, List, Tuple
 
 import jax
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# --smoke (benchmarks/run.py) flips this: every fig module runs only its
+# cheapest configuration — the CI sanity tier, not a measurement.
+SMOKE = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

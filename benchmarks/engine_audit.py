@@ -41,4 +41,14 @@ def run() -> None:
     ev = np.mean([s.evaluations for s in eng.stats])
     emit("engine/evals_per_step", 0.0,
          f"n={ev:.0f} token_level_would_be={eng.length * len(eng.attn_layers)}")
+    # device-pool residency: once warm, H2D per round is the promoted delta
+    ps = eng.store.pool_stats()
+    emit("engine/pool_hit_rate", 0.0,
+         f"hit_rate={ps['hit_rate']:.3f} hits={ps['hits']:.0f} "
+         f"uploads={ps['uploads']:.0f}")
+    h2d = log.bytes.get(("host", "device", "kv"), 0.0)
+    full = sum(s.fetched_chunks for s in eng.stats) * eng.store._transit_bytes()
+    emit("engine/h2d_delta_vs_full_reupload", 0.0,
+         f"delta={h2d:.0f}B full_would_be={full:.0f}B "
+         f"saved={100 * (1 - h2d / max(full, 1)):.1f}%")
     eng.store.close()

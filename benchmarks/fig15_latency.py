@@ -6,11 +6,11 @@ Two parts:
 * the paper-testbed latency **simulator** sweep (policy comparison at the
   full 7B geometry), and
 * a **live-engine batch sweep** on the smoke model: B = 1, 4, 8 requests
-  decoded by ONE BatchedLeoAMEngine round (shared tier store, one
-  importance matmul + one coalesced gather + one attention dispatch per
-  layer) vs B sequential single-sequence engines — reporting tokens/s and
-  bytes moved per tier, with the shared-log == Σ per-seq-log invariant
-  checked on every run.
+  decoded by ONE BatchedLeoAMEngine round vs B sequential single-sequence
+  engines, AND the pooled+pipelined engine (device-resident chunk pool,
+  async DTP) vs the PR-1 synchronous full-re-upload engine on the same
+  config — reporting tokens/s and bytes moved per tier, with the
+  shared-log == Σ per-seq-log invariant checked on every run.
 """
 
 from __future__ import annotations
@@ -21,6 +21,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.models import lm
@@ -42,8 +43,8 @@ def _smoke_setup():
     return cfg, params
 
 
-def _ecfg():
-    return EngineCfg(max_len=MAX_LEN, selection="tree")
+def _ecfg(**kw):
+    return EngineCfg(max_len=MAX_LEN, selection="tree", **kw)
 
 
 def _prompts(rng, cfg, batch):
@@ -71,10 +72,11 @@ def _run_sequential(cfg, params, prompts):
     return time.perf_counter() - t0, decode_s, toks, tiers
 
 
-def _run_batched(cfg, params, prompts):
+def _run_batched(cfg, params, prompts, **ecfg_kw):
     """One batched engine, one shared store, one decode round per token."""
     t0 = time.perf_counter()
-    eng = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=len(prompts))
+    eng = BatchedLeoAMEngine(cfg, params, _ecfg(**ecfg_kw),
+                             max_seqs=len(prompts))
     toks = len(prompts)
     cur = {}
     for p in prompts:
@@ -99,33 +101,44 @@ def run_engine_batch_sweep() -> None:
     cfg, params = _smoke_setup()
     rng = np.random.RandomState(0)
 
-    for batch in (1, 4, 8):
+    batches = (1, 2) if common.SMOKE else (1, 4, 8)
+    reps = 2 if common.SMOKE else 3
+    for batch in batches:
         prompts = _prompts(rng, cfg, batch)
         # first rep at each batch size doubles as warmup (jit caches are
         # shared between modes); best-of-reps damps scheduler noise
-        reps = 3
         runs_s = [_run_sequential(cfg, params, prompts) for _ in range(reps)]
+        # PR-1 synchronous engine: full working-set re-upload per layer
+        runs_p1 = [_run_batched(cfg, params, prompts, pooled=False,
+                                pipeline=False) for _ in range(reps)]
+        # tentpole engine: device-resident pool + async DTP overlap
         runs_b = [_run_batched(cfg, params, prompts) for _ in range(reps)]
         dt_s, dec_s, toks_s, tiers_s = min(runs_s[1:], key=lambda r: r[1])
+        dt_1, dec_1, toks_1, tiers_1 = min(runs_p1[1:], key=lambda r: r[1])
         dt_b, dec_b, toks_b, tiers_b = min(runs_b[1:], key=lambda r: r[1])
-        assert toks_s == toks_b == batch * N_NEW
+        assert toks_s == toks_b == toks_1 == batch * N_NEW
         n_dec = batch * (N_NEW - 1)
         emit(f"fig15/engine/sequential/b{batch}", dt_s * 1e6,
              f"tput={toks_s / dt_s:.2f}tok_s,decode={n_dec / dec_s:.2f}tok_s")
+        emit(f"fig15/engine/pr1_batched/b{batch}", dt_1 * 1e6,
+             f"tput={toks_1 / dt_1:.2f}tok_s,decode={n_dec / dec_1:.2f}tok_s")
         emit(f"fig15/engine/batched/b{batch}", dt_b * 1e6,
              f"tput={toks_b / dt_b:.2f}tok_s,decode={n_dec / dec_b:.2f}tok_s")
         emit(f"fig15/engine/batched_speedup/b{batch}", 0.0,
              f"e2e={dt_s / dt_b:.2f}x,decode={dec_s / dec_b:.2f}x")
-        for pair in sorted(set(tiers_s) | set(tiers_b)):
+        emit(f"fig15/engine/pooled_vs_pr1/b{batch}", 0.0,
+             f"e2e={dt_1 / dt_b:.2f}x,decode={dec_1 / dec_b:.2f}x")
+        for pair in sorted(set(tiers_s) | set(tiers_b) | set(tiers_1)):
             emit(f"fig15/engine/bytes/{pair}/b{batch}", 0.0,
                  f"seq={tiers_s.get(pair, 0.0):.0f}B,"
+                 f"pr1={tiers_1.get(pair, 0.0):.0f}B,"
                  f"bat={tiers_b.get(pair, 0.0):.0f}B")
 
 
 def run() -> None:
     cfg = get_config("longchat-7b-32k")
     speedups = []
-    for batch in (1, 4, 8):
+    for batch in ((1, 4) if common.SMOKE else (1, 4, 8)):
         scfg = ServeCfg(batch=batch, prompt=8192, output=128)
         res = compare_policies(cfg, scfg)
         base = min(res[p]["total_s"] for p in ("h2o", "h2o_chunked",

@@ -7,15 +7,28 @@ Roofline terms come from the dry-run artifacts — see
 
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
+# make `python benchmarks/run.py` work from anywhere: the repo root (for
+# the benchmarks package) and src/ (for repro) join sys.path
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
 
 def main() -> None:
-    from benchmarks import (engine_audit, fig4_5_overheads, fig7_8_desert,
-                            fig10_11_evals, fig13_pipeline, fig14_quality,
-                            fig15_latency, fig16_17_breakdown,
+    from benchmarks import (common, engine_audit, fig4_5_overheads,
+                            fig7_8_desert, fig10_11_evals, fig13_pipeline,
+                            fig14_quality, fig15_latency, fig16_17_breakdown,
                             fig18_19_sensitivity, kernels_micro)
+    args = sys.argv[1:]
+    if "--smoke" in args:            # cheapest config per fig (CI tier)
+        args.remove("--smoke")
+        common.set_smoke(True)
+    sys.argv = [sys.argv[0]] + args
     print("name,us_per_call,derived")
     modules = [
         ("fig4_5", fig4_5_overheads), ("fig7_8", fig7_8_desert),

@@ -116,6 +116,72 @@ def tree_select(scores: np.ndarray, budget: int, chunk: int,
     return TreeSelectResult(selected_arr, evals, partition, transfer)
 
 
+def tree_select_chunks(chunk_ub: np.ndarray, length: int, budget: int,
+                       chunk: int) -> Tuple[List[int], int]:
+    """Chunk-level fast path for :func:`tree_select` on per-chunk scores.
+
+    Equivalent to ``tree_select(np.repeat(chunk_ub, chunk)[:length], budget,
+    chunk)`` followed by ``{t // chunk for t in selected}`` — but O(n_chunks
+    log n_chunks + log chunk) instead of O(length): with scores constant
+    inside a chunk every segment has lb == ub, so the branch-and-bound
+    confirmation rule collapses to "take the whole segment iff it fits the
+    remaining budget, else split".  Heap keys match ``tree_select``'s
+    ``(-ub, lo, hi, lb)`` exactly (lo breaks ties), so the selected chunk
+    set AND the evaluation count are identical to the per-token path.
+
+    Returns (sorted selected chunk ids, evaluations).
+    """
+    n = int(length)
+    budget = min(budget, n)
+    n_chunks = math.ceil(n / chunk)
+    evals = n_chunks
+    heap: List[Tuple[float, int, int]] = []
+    for c in range(n_chunks):
+        lo, hi = c * chunk, min((c + 1) * chunk, n)
+        heapq.heappush(heap, (-float(chunk_ub[c]), lo, hi))
+    taken = 0
+    sel: set = set()
+    while taken < budget and heap:
+        nub, lo, hi = heapq.heappop(heap)
+        size = hi - lo
+        # lb == ub == -nub, and the popped segment is the heap max, so the
+        # per-token rule "lb >= next_ub and size <= remaining" is just the
+        # size check; size == 1 is its degenerate case.
+        if size <= budget - taken:
+            taken += size
+            sel.add(lo // chunk)
+            continue
+        mid = lo + size // 2
+        evals += 2
+        heapq.heappush(heap, (nub, lo, mid))
+        heapq.heappush(heap, (nub, mid, hi))
+    return sorted(sel), evals
+
+
+def flat_select_chunks(chunk_ub: np.ndarray, length: int, budget: int,
+                       chunk: int) -> Tuple[List[int], int]:
+    """Chunk-level fast path for :func:`flat_chunk_select` on chunk scores.
+
+    The Quest-like baseline takes chunks in score order until ``budget``
+    tokens are covered; with per-token scores constant inside a chunk the
+    top-``budget`` token set is exactly the tokens of that chunk prefix, so
+    no per-token array is needed.  Ties across chunks follow the same
+    ``np.argsort(-ubs)`` call the per-token path makes.
+    """
+    n = int(length)
+    budget = min(budget, n)
+    n_chunks = math.ceil(n / chunk)
+    order = np.argsort(-np.asarray(chunk_ub[:n_chunks]))
+    sel: List[int] = []
+    covered = 0
+    for c in order:
+        if covered >= budget:
+            break
+        sel.append(int(c))
+        covered += min(chunk, n - int(c) * chunk)
+    return sorted(sel), n_chunks
+
+
 def flat_chunk_select(scores: np.ndarray, budget: int, chunk: int
                       ) -> TreeSelectResult:
     """Quest-like fixed-chunk baseline: score every chunk, take top chunks."""

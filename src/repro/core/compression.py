@@ -70,11 +70,47 @@ def dequantize(qkv: QuantizedKV, group: int = 64,
     return out.reshape(qkv.shape).astype(dtype)
 
 
-def codec_ratio(codec: str) -> float:
-    """Compressed bytes / fp16 bytes (scales amortized over group=64)."""
+def codec_ratio(codec: str, group: int = 64) -> float:
+    """Compressed bytes / fp16 bytes (scales amortized over ``group``).
+
+    Exact for :func:`quantize` on a (..., group, d) tensor: the int payload
+    is ``payload`` of the fp16 bytes and each group contributes one f32
+    scale per channel (4 bytes per ``group`` fp16 values)."""
     payload = {"int8": 0.5, "int4": 0.25}[codec]
-    scale_overhead = 4.0 / (64 * 2.0)   # f32 scale per 64 fp16 values
+    scale_overhead = 4.0 / (group * 2.0)   # f32 scale per group fp16 values
     return payload + scale_overhead
+
+
+def quantize_chunks(k: np.ndarray, codec: str = "int4"
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Transit-pack a stack of KV chunks: (n, c, H, hd) -> packed payload.
+
+    Groups along the whole chunk (group == c, one scale per channel per
+    chunk), so the packed nbytes are EXACTLY
+    ``n * c * H * hd * 2 * codec_ratio(codec, group=c)``.
+
+    Returns (data, scale): data (n, c, H*hd) int8 for int8 or
+    (n, c, H*hd//2) packed int8 for int4; scale (n, H*hd) f32 — the layout
+    ``repro.kernels.kv_quant`` dequantizes on device.
+    """
+    n, c, H, hd = k.shape
+    d = H * hd
+    q = quantize(jnp.asarray(k.reshape(n, c, d)), codec, group=c)
+    data = np.asarray(q.data)
+    scale = np.asarray(q.scale).reshape(n, d)
+    return data, scale
+
+
+def dequantize_chunks(data: np.ndarray, scale: np.ndarray, codec: str,
+                      kv_heads: int, head_dim: int, dtype=np.float16
+                      ) -> np.ndarray:
+    """Host-side inverse of :func:`quantize_chunks` (reference path)."""
+    n, c = data.shape[:2]
+    d = kv_heads * head_dim
+    q = QuantizedKV(jnp.asarray(data), jnp.asarray(scale)[:, None, :], codec,
+                    (n, c, d))
+    out = dequantize(q, group=c, dtype=jnp.float32)
+    return np.asarray(out).astype(dtype).reshape(n, c, kv_heads, head_dim)
 
 
 def quantization_rmse(x: np.ndarray, codec: str = "int4",

@@ -46,6 +46,22 @@ def transfer_time(D: float, theta: float, delta: float, B: float) -> float:
     return (D * (1.0 - theta) + D * theta * delta) / B
 
 
+def theta_from_measured(upload_bytes: float, disk_bytes: float,
+                        compute_s: float, bw: "TierBW",
+                        delta: Optional[float] = None) -> float:
+    """Per-layer θ from the live engine's measured round costs (§4.4).
+
+    ``upload_bytes``: last round's host→device delta for the layer (the D
+    the codec can shrink); ``disk_bytes``: bytes staged off disk for the
+    layer (serial prefix T0); ``compute_s``: measured per-layer attention
+    window.  The engine calls this every round so θ tracks the working set
+    as residency warms up — fully pool-resident layers get θ=0 for free.
+    """
+    return optimal_theta(upload_bytes, bw.pcie,
+                         bw.delta if delta is None else delta,
+                         disk_bytes / bw.disk, compute_s, bw.kappa)
+
+
 @dataclass
 class LayerCost:
     """Per-layer per-step costs (seconds / bytes) for the pipeline model."""

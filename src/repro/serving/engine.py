@@ -9,20 +9,37 @@ the new token's KV + abstract update.  An access-frequency table pins hot
 chunks above the disk tier.  Traffic is audited by the TieredKVStore log —
 benchmarks assert the LKA ratio r = α + 2/n' on it.
 
-Batched decode round (the paper's large-batch speedup regime):
+The decode round is the paper's Dynamic Three-tier Pipeline (§4.4), three
+stages per attention layer:
 
-``BatchedLeoAMEngine`` decodes a whole batch of sequences per round against
-ONE shared multi-sequence :class:`TieredKVStore` keyed by (seq, layer,
-chunk).  Per layer the round issues
-
-1. one ``chunk_bounds_gqa_matmul`` over the stacked per-request queries and
-   (padded) abstracts — importance evaluation amortizes across the batch;
-2. one batch-coalesced store gather (``fetch_chunks_batch``) so all disk
-   promotion I/O of the round is a single fancy-indexed read per layer;
-3. one jitted padded-working-set attention dispatch — ragged per-sequence
-   selections are padded to the round's (bucketed) max and masked, which is
-   FP-exact: padded keys score -inf, contribute exp(-inf)=0, and adding
+1. **Evaluate** (CPU): one ``chunk_bounds_gqa_matmul`` over the stacked
+   per-request queries and the layer's (padded) abstract stack, then
+   chunk-level adaptive selection (IAKM tree or flat) per sequence —
+   importance evaluation amortizes across the batch.
+2. **Transfer** (disk→host→device): one batch-coalesced disk gather stages
+   cold chunks host-side; the device-resident chunk pool
+   (:class:`~repro.serving.offload.DeviceChunkPool`) then uploads ONLY the
+   newly-promoted delta — pool-resident chunks cost zero bytes.  With
+   ``real_codec`` the θ-fraction of the delta crosses the link as packed
+   int4/int8 payloads and is dequantized on device
+   (``kernels.kv_quant``); θ is chosen per layer each round by the paper's
+   balance ``optimal_theta`` from measured compute/transfer costs.
+3. **Attend** (GPU): one jitted dispatch gathers the working set from the
+   pool by slot index and runs padded+masked attention — ragged
+   per-sequence selections are padded to the round's (bucketed) max, which
+   is FP-exact: padded keys score -inf, contribute exp(-inf)=0, and adding
    zeros never perturbs the f32 accumulators.
+
+With ``pipeline=True`` a one-worker prefetch executor overlaps stage 2 of
+layer l+1 under stage 3 of layer l: while layer l's attention runs, the
+worker reads layer l+1's abstracts and speculatively stages its predicted
+selection (previous round's selection, else the AccessTable hot set)
+disk→host.  Predictions only move residency, never values — a miss falls
+back to the synchronous path, so pipelined output is bit-identical to
+``pipeline=False``.
+
+``pooled=False, pipeline=False`` reproduces the PR-1 synchronous engine
+(full working-set re-upload per layer) for A/B tests and benchmarks.
 
 ``LeoAMEngine`` is the single-sequence view: a thin wrapper over a B=1
 batched engine preserving the original prefill/decode_step/generate API.
@@ -30,9 +47,10 @@ batched engine preserving the original prefill/decode_step/generate API.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -41,7 +59,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.adaptive import tree_select, flat_chunk_select
+from repro.core import compression
+from repro.core import pipeline as dtp
+from repro.core.adaptive import flat_select_chunks, tree_select_chunks
 from repro.core.bounds import chunk_bounds_gqa_matmul
 from repro.core.tiers import AccessTable
 from repro.models import lm
@@ -60,6 +80,30 @@ class EngineCfg:
     sel_pad: int = 4                 # pad round working sets to a multiple
                                      # of this many chunks (bounds jit
                                      # recompiles; masking keeps it exact)
+    pooled: bool = True              # device-resident chunk pool (delta
+                                     # uploads); False = PR-1 full re-upload
+    pipeline: bool = True            # async DTP overlap (prefetch thread)
+    real_codec: bool = False         # carry actual packed int4/int8 transit
+                                     # payloads (vs ledger-only scaling)
+    profile: bool = False            # block per stage, fill round_profiles
+    # measured-cost θ balance (paper §4.4); defaults mirror TierBW
+    pcie_bw: float = 16e9
+    disk_bw: float = 3.5e9
+    kappa: float = 1.0 / 80e9
+
+
+# one process-wide DTP prefetch worker, shared by every pipelined engine:
+# per-engine executors would leak a thread per engine (benchmark sweeps
+# build dozens), and a single queue preserves per-engine FIFO ordering
+_PF_EXECUTOR: Optional[ThreadPoolExecutor] = None
+
+
+def _prefetch_executor() -> ThreadPoolExecutor:
+    global _PF_EXECUTOR
+    if _PF_EXECUTOR is None:
+        _PF_EXECUTOR = ThreadPoolExecutor(max_workers=1,
+                                          thread_name_prefix="leoam-dtp")
+    return _PF_EXECUTOR
 
 
 @dataclass
@@ -79,10 +123,8 @@ class _SeqState:
     stats: List[StepStats] = field(default_factory=list)
 
 
-@functools.partial(jax.jit, static_argnames=("attn_softcap",))
-def _attend_workingset(q, kg, vg, k_new, v_new, valid, wo, *,
-                       attn_softcap: Optional[float]):
-    """One padded-working-set attention dispatch for the whole round.
+def _attend_core(q, kg, vg, k_new, v_new, valid, wo, attn_softcap):
+    """Padded-working-set attention shared by the pooled and legacy paths.
 
     q: (B, 1, H, hd) model dtype; kg/vg: (B, nmax, chunk, Hkv, hd) store
     dtype; k_new/v_new: (B, 1, Hkv, hd); valid: (B, 1, 1, S) bool with
@@ -111,6 +153,40 @@ def _attend_workingset(q, kg, vg, k_new, v_new, valid, wo, *,
     return out @ wo
 
 
+@functools.partial(jax.jit, static_argnames=("attn_softcap",))
+def _attend_workingset(q, kg, vg, k_new, v_new, valid, wo, *,
+                       attn_softcap: Optional[float]):
+    """Legacy dispatch: host-assembled working set uploaded whole (PR-1)."""
+    return _attend_core(q, kg, vg, k_new, v_new, valid, wo, attn_softcap)
+
+
+@functools.partial(jax.jit, static_argnames=("attn_softcap",))
+def _attend_pooled(q, pool_kv, slots, chunk_ids, lengths, k_new, v_new,
+                   wo, *, attn_softcap: Optional[float]):
+    """Pooled dispatch: gather the working set from the device slab by slot
+    index — the only host→device traffic this op needs is the (B, nmax)
+    ``slots``/``chunk_ids`` index arrays (the validity mask is derived on
+    device, not uploaded).
+
+    pool_kv: (n_slots + 1, 2, chunk, Hkv, hd); slots: (B, nmax) int32
+    (padding rows point at slot 0); chunk_ids: (B, nmax) int32 with -1 on
+    padding; lengths: (B,) int32."""
+    kv = pool_kv[slots]                  # (B, nmax, 2, chunk, Hkv, hd)
+    B, nmax = slots.shape
+    chunk = pool_kv.shape[2]
+    pos = (chunk_ids[..., None] * chunk
+           + jnp.arange(chunk, dtype=jnp.int32)).reshape(B, nmax * chunk)
+    # the store holds tokens 0..length-1 at attend time (this round's token
+    # arrives via k_new/v_new, its append lands after the dispatch), so the
+    # grid mask is STRICT — `pos == length` is an unwritten/stale row
+    ok = (chunk_ids[..., None] >= 0).repeat(chunk, -1).reshape(B, -1) \
+        & (pos < lengths[:, None])
+    valid = jnp.concatenate(
+        [ok, jnp.ones((B, 1), bool)], axis=1)[:, None, None]  # + new token
+    return _attend_core(q, kv[:, :, 0], kv[:, :, 1], k_new, v_new, valid,
+                        wo, attn_softcap)
+
+
 class BatchedLeoAMEngine:
     """Batched tiered-decoding engine over a decoder-only model.
 
@@ -136,9 +212,19 @@ class BatchedLeoAMEngine:
         self.store = TieredKVStore(
             len(self.attn_layers), self.n_chunks, self.chunk,
             cfg.n_kv_heads, cfg.hd, n_seqs=max_seqs,
-            transit_codec=ecfg.transit_codec, device_budget=budget)
+            transit_codec=ecfg.transit_codec, device_budget=budget,
+            use_pool=ecfg.pooled, pool_slots=device_chunk_budget,
+            real_codec=ecfg.real_codec)
         self.seqs: Dict[int, _SeqState] = {}
         self._free: List[int] = list(range(max_seqs - 1, -1, -1))
+        # DTP state: prefetch executor, per-(seq, layer) previous-round
+        # selections, per-layer abstract cache, per-layer measured costs
+        self._executor = _prefetch_executor() if ecfg.pipeline else None
+        self._pf_futs: Dict[int, Future] = {}
+        self._abs_cache: Dict[int, Tuple] = {}
+        self._prev_sels: Dict[Tuple[int, int], List[int]] = {}
+        self._lcost: Dict[int, Dict[str, float]] = {}
+        self.round_profiles: List[Dict[str, float]] = []
 
     @property
     def free_slots(self) -> int:
@@ -188,6 +274,8 @@ class BatchedLeoAMEngine:
         """Retire a sequence and recycle its store slot."""
         self.store.clear_seq(sid)
         self.seqs.pop(sid, None)
+        for key in [k for k in self._prev_sels if k[0] == sid]:
+            self._prev_sels.pop(key, None)
         self._free.append(sid)
 
     def _layer_kv(self, cache, layer: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -203,6 +291,75 @@ class BatchedLeoAMEngine:
         return np.asarray(c["k"][bi]), np.asarray(c["v"][bi])
 
     # ------------------------------------------------------------------
+    # DTP: measured-cost θ balance + speculative prefetch
+    # ------------------------------------------------------------------
+    def _theta(self, li: int) -> float:
+        """Per-layer compressed fraction of the upload delta (§4.4): the
+        smallest θ hiding the transfer under the measured compute window."""
+        if not (self.ecfg.real_codec and self.ecfg.transit_codec):
+            return 1.0
+        lc = self._lcost.get(li)
+        if lc is None:
+            return 1.0                 # no measurement yet: compress all
+        bw = dtp.TierBW(pcie=self.ecfg.pcie_bw, disk=self.ecfg.disk_bw,
+                        kappa=self.ecfg.kappa,
+                        delta=compression.codec_ratio(self.ecfg.transit_codec,
+                                                      group=self.chunk))
+        return dtp.theta_from_measured(lc["D"], lc["T0"], lc["Tc"], bw)
+
+    def _update_costs(self, li: int, upload_bytes: float, disk_bytes: float,
+                      compute_s: float) -> None:
+        """EMA of the layer's measured round costs.  Without ``profile``
+        the compute window is (round − host stages)/n_attn — an UPPER
+        bound that also amortizes MLP/recurrent layers over the attention
+        layers, so θ errs toward less compression; run with
+        ``profile=True`` for the per-dispatch-blocked exact window."""
+        lc = self._lcost.setdefault(li, {"D": upload_bytes, "T0": disk_bytes,
+                                         "Tc": max(compute_s, 1e-7)})
+        for k, v in (("D", upload_bytes), ("T0", disk_bytes),
+                     ("Tc", max(compute_s, 1e-7))):
+            lc[k] = 0.5 * lc[k] + 0.5 * v
+
+    def _submit_prefetch(self, li: int, order: Sequence[int],
+                         lengths: np.ndarray) -> None:
+        """Overlap layer ``li``'s abstract reads + speculative disk staging
+        under the previous layer's attention.  Predictions come from the
+        previous round's selection for (seq, li), else the AccessTable hot
+        set — residency-only, so a miss can never change outputs.
+
+        The thread hop only pays for itself when there is disk latency to
+        hide, so the submit is adaptive: once the predicted working set is
+        fully above the disk tier (steady state on a warm pool) the layer
+        is handled inline and the worker stays idle."""
+        if self._executor is None or li >= len(self.attn_layers) \
+                or li in self._pf_futs:
+            return
+        chunks_by_seq = {}
+        pred = {}
+        any_disk = False
+        for i, sid in enumerate(order):
+            nv = (int(lengths[i]) + self.chunk - 1) // self.chunk
+            chunks_by_seq[sid] = list(range(nv))
+            prev = self._prev_sels.get((sid, li))
+            if prev is None:
+                prev = [int(c) for c in
+                        self.seqs[sid].access.hot_tokens(self.ecfg.hot_frac)]
+            pred[sid] = [c for c in prev if c < nv]
+            tiers = self.store.tier[sid, li]
+            if not any_disk and any(tiers[c] == DISK for c in pred[sid]):
+                any_disk = True
+        if not any_disk:
+            return
+        key = tuple((sid, len(chunks_by_seq[sid])) for sid in order)
+
+        def work():
+            res = self.store.read_abstracts_batch(li, chunks_by_seq)
+            self._abs_cache[li] = (key, res)
+            self.store.stage_host(li, pred)
+
+        self._pf_futs[li] = self._executor.submit(work)
+
+    # ------------------------------------------------------------------
     # Importance evaluation (batched LKA + per-sequence IAKM)
     # ------------------------------------------------------------------
     def _select_chunks_batched(self, li: int, layer: int, q: np.ndarray,
@@ -210,7 +367,7 @@ class BatchedLeoAMEngine:
                                ) -> Tuple[Dict[int, List[int]],
                                           Dict[int, StepStats]]:
         """One bounds matmul over the stacked batch, then per-sequence
-        adaptive selection (tree/IAKM or flat) on the host.
+        chunk-level adaptive selection (tree/IAKM or flat) on the host.
 
         q: (B, H, hd) un-scaled queries, rows matching ``order``.
         """
@@ -219,7 +376,18 @@ class BatchedLeoAMEngine:
         n_valid = {sid: (int(L) + chunk - 1) // chunk
                    for sid, L in zip(order, lengths)}
         chunks_by_seq = {sid: list(range(n_valid[sid])) for sid in order}
-        km, kn, abs_billed = self.store.read_abstracts_batch(li, chunks_by_seq)
+        fut = self._pf_futs.pop(li, None)
+        if fut is not None:
+            fut.result()
+        cached = self._abs_cache.pop(li, None)
+        key = tuple((sid, n_valid[sid]) for sid in order)
+        if cached is not None and cached[0] == key:
+            km, kn, abs_billed = cached[1]
+        else:   # speculation miss (round composition changed): sync read.
+                # The worker's read stays billed — two reads really
+                # happened; that is the cost of a wrong speculation.
+            km, kn, abs_billed = self.store.read_abstracts_batch(
+                li, chunks_by_seq)
 
         qj = jnp.asarray(q / math.sqrt(cfg.hd))              # (B, H, hd)
         ub, _ = chunk_bounds_gqa_matmul(qj, jnp.asarray(km), jnp.asarray(kn))
@@ -235,13 +403,15 @@ class BatchedLeoAMEngine:
             length = int(lengths[i])
             scores = ub[i].max(0)[:nv]                       # (nv,)
             budget_tokens = max(chunk, int(math.ceil(length * rate)))
-            per_tok = np.repeat(scores / chunk, chunk)[:length]
+            # chunk-level fast path: equivalent to the per-token
+            # repeat+select (tested) without the length-S allocation
+            chunk_scores = scores / chunk
             if self.ecfg.selection == "tree":
-                res = tree_select(per_tok, budget_tokens, chunk)
+                sel, st.evaluations = tree_select_chunks(
+                    chunk_scores, length, budget_tokens, chunk)
             else:
-                res = flat_chunk_select(per_tok, budget_tokens, chunk)
-            st.evaluations = res.evaluations
-            sel = sorted({int(t) // chunk for t in res.selected})
+                sel, st.evaluations = flat_select_chunks(
+                    chunk_scores, length, budget_tokens, chunk)
             # sink + recent + hot chunks always included
             forced = set(range(cfg.leoam.sink_chunks))
             forced.update(range(max(0, nv - cfg.leoam.recent_chunks), nv))
@@ -258,12 +428,14 @@ class BatchedLeoAMEngine:
     def decode_round(self, tokens: Dict[int, int]) -> Dict[int, int]:
         """One token for every sequence in ``tokens`` ({seq id: last token}).
 
-        Per attention layer: batched importance eval, one coalesced store
-        gather, one padded attention dispatch.  Non-attention (recurrent /
-        dense) layers keep their exact per-sequence decode path.  Returns
+        Per attention layer: batched importance eval, one delta promotion
+        into the device pool (or one legacy coalesced gather), one padded
+        attention dispatch; with ``pipeline`` the next layer's reads run
+        under this layer's attention.  Non-attention (recurrent / dense)
+        layers keep their exact per-sequence decode path.  Returns
         {seq id: next token}.
         """
-        cfg = self.cfg
+        cfg, ecfg = self.cfg, self.ecfg
         order = sorted(tokens)
         B = len(order)
         assert B > 0, "decode_round needs at least one sequence"
@@ -275,6 +447,10 @@ class BatchedLeoAMEngine:
 
         prologue, period, repeats = lm._layer_plan(cfg)
         round_stats = {sid: StepStats() for sid in order}
+        prof = {"eval_s": 0.0, "gather_s": 0.0, "upload_s": 0.0,
+                "attend_s": 0.0}
+        layer_io: List[Tuple[int, float, float]] = []  # (li, upB, diskB)
+        t_round = time.perf_counter()
         li = 0
         new_caches = [{"prologue": list(s.cache["prologue"]),
                        "body": list(s.cache["body"])} for s in states]
@@ -285,38 +461,80 @@ class BatchedLeoAMEngine:
             pos = jnp.asarray(lengths[:, None], jnp.int32)   # (B, 1)
             q, k_new, v_new = attn_mod._qkv(blk["core"], cfg, hln, pos)
             qn = np.asarray(q[:, 0])                         # (B, H, hd)
+            t0 = time.perf_counter()
             sels, sel_stats = self._select_chunks_batched(
                 li, layer_idx, qn, order, lengths)
+            prof["eval_s"] += time.perf_counter() - t0
 
             nmax = max(len(s) for s in sels.values())
-            pad = max(1, self.ecfg.sel_pad)
+            pad = max(1, ecfg.sel_pad)
             nmax = -(-nmax // pad) * pad
-            kg, vg, _ = self.store.fetch_chunks_batch(li, sels, pad_to=nmax)
 
-            # positions per padded slot; sentinel pads fail pos <= length
-            S = nmax * self.chunk + 1
-            pos_np = np.full((B, S), np.iinfo(np.int64).max, np.int64)
             for i, sid in enumerate(order):
-                sel = np.asarray(sels[sid])
-                p = (sel[:, None] * self.chunk
-                     + np.arange(self.chunk)[None]).reshape(-1)
-                pos_np[i, :len(p)] = p
-                pos_np[i, -1] = lengths[i]
                 st = round_stats[sid]
                 st.evaluations += sel_stats[sid].evaluations
                 st.fetched_chunks += len(sels[sid])
                 st.abstract_bytes += sel_stats[sid].abstract_bytes
-                self.seqs[sid].access.record(sel)
-            valid = jnp.asarray(pos_np <= lengths[:, None])[:, None, None]
+                self.seqs[sid].access.record(np.asarray(sels[sid]))
+                self._prev_sels[(sid, li)] = sels[sid]
 
-            y = _attend_workingset(q, jnp.asarray(kg), jnp.asarray(vg),
-                                   k_new, v_new, valid, blk["core"]["wo"],
+            if ecfg.pooled:
+                slots, _, fst = self.store.fetch_chunks_pooled(
+                    li, sels, pad_to=nmax, theta=self._theta(li))
+                prof["gather_s"] += fst.gather_s
+                prof["upload_s"] += fst.upload_s
+                layer_io.append((li, fst.uploads * self.store.chunk_bytes,
+                                 fst.disk_bytes))
+                for sid in order:
+                    round_stats[sid].fetched_bytes += fst.upload_bytes / B
+                # overlap: next layer's reads under this layer's attention
+                self._submit_prefetch(li + 1, order, lengths)
+                chunk_ids = np.full((B, nmax), -1, np.int32)
+                for i, sid in enumerate(order):
+                    chunk_ids[i, :len(sels[sid])] = sels[sid]
+                pool = self.store.pools[li]
+                t1 = time.perf_counter()
+                y = _attend_pooled(q, pool.kv, jnp.asarray(slots),
+                                   jnp.asarray(chunk_ids),
+                                   jnp.asarray(lengths.astype(np.int32)),
+                                   k_new, v_new, blk["core"]["wo"],
                                    attn_softcap=cfg.attn_softcap)
+                if ecfg.profile:
+                    jax.block_until_ready(y)
+                    prof["attend_s"] += time.perf_counter() - t1
+            else:
+                # positions per padded slot; sentinel pads fail pos < len.
+                # Strict mask: the store holds tokens 0..length-1 here
+                # (this round's token rides in k_new/v_new), so pos ==
+                # length is an unwritten/stale row, never attended.
+                S = nmax * self.chunk + 1
+                pos_np = np.full((B, S), np.iinfo(np.int64).max, np.int64)
+                for i, sid in enumerate(order):
+                    sel = np.asarray(sels[sid])
+                    p = (sel[:, None] * self.chunk
+                         + np.arange(self.chunk)[None]).reshape(-1)
+                    pos_np[i, :len(p)] = p
+                valid_np = pos_np < lengths[:, None]
+                valid_np[:, -1] = True           # the new token's column
+                valid = jnp.asarray(valid_np)[:, None, None]
+                t1 = time.perf_counter()
+                kg, vg, _ = self.store.fetch_chunks_batch(li, sels,
+                                                          pad_to=nmax)
+                prof["gather_s"] += time.perf_counter() - t1
+                t1 = time.perf_counter()
+                kgj, vgj = jnp.asarray(kg), jnp.asarray(vg)
+                prof["upload_s"] += time.perf_counter() - t1
+                t1 = time.perf_counter()
+                y = _attend_workingset(q, kgj, vgj, k_new, v_new, valid,
+                                       blk["core"]["wo"],
+                                       attn_softcap=cfg.attn_softcap)
+                if ecfg.profile:
+                    jax.block_until_ready(y)
+                    prof["attend_s"] += time.perf_counter() - t1
             kn_np = np.asarray(k_new[:, 0])
             vn_np = np.asarray(v_new[:, 0])
-            for i, sid in enumerate(order):
-                self.store.append_token(li, int(lengths[i]), kn_np[i],
-                                        vn_np[i], seq=sid)
+            self.store.append_tokens_batch(li, lengths, kn_np, vn_np,
+                                           seqs=order)
             li += 1
             h = h + y
             h, _ = lm._apply_mlp(blk, cfg, mlpk, h, None)
@@ -361,6 +579,17 @@ class BatchedLeoAMEngine:
                         put, new_caches[i]["body"][pi], new_slices[i])
 
         logits = np.asarray(lm._logits(params, cfg, h)[:, 0])  # (B, V)
+        total_s = time.perf_counter() - t_round
+        prof["total_s"] = total_s
+        if not ecfg.profile:
+            prof["attend_s"] = max(0.0, total_s - prof["eval_s"]
+                                   - prof["gather_s"] - prof["upload_s"])
+        self.round_profiles.append(prof)
+        # feed measured per-layer costs back into the θ balance
+        n_attn = max(1, len(self.attn_layers))
+        tc = prof["attend_s"] / n_attn
+        for lid, up_b, disk_b in layer_io:
+            self._update_costs(lid, up_b, disk_b, tc)
         out: Dict[int, int] = {}
         for i, sid in enumerate(order):
             s = self.seqs[sid]
@@ -403,6 +632,10 @@ class LeoAMEngine:
     @property
     def store(self):
         return self._engine.store
+
+    @property
+    def round_profiles(self):
+        return self._engine.round_profiles
 
     @property
     def length(self) -> int:

@@ -9,11 +9,25 @@ vectors) or the chunk payload, optionally through the INT4 transit codec.
 
 Batched round support:
 
-* one shared disk memmap over all sequences — ``fetch_chunks_batch`` gathers
-  every disk-resident (seq, chunk) pair of a layer in ONE fancy-indexed
-  read, so promotion I/O for a decode round is one gather per layer;
-* a shared DEVICE chunk budget across sequences with LRU demotion (eviction
-  is free: the host copy survives and disk always holds the replica);
+* one shared disk memmap over all sequences — ``fetch_chunks_batch`` /
+  ``fetch_chunks_pooled`` gather every disk-resident (seq, chunk) pair of a
+  layer in ONE fancy-indexed read, so promotion I/O for a decode round is
+  one gather per layer;
+* a :class:`DeviceChunkPool` per layer — a persistent device-side slab of
+  chunk slots.  ``fetch_chunks_pooled`` uploads ONLY the chunks not already
+  resident (delta uploads) and returns slot indices; the engine's jitted
+  attention dispatch gathers by slot on device, so host→device bytes per
+  round are the newly-promoted delta, not the full selection;
+* a REAL transit codec on the pooled upload path: with ``real_codec=True``
+  the θ-fraction of each upload crosses the host→device link as packed
+  int4/int8 payloads (``core.compression.quantize_chunks``) and is
+  dequantized on device by ``kernels.kv_quant`` (Pallas on TPU, jnp
+  reference elsewhere).  Billed bytes equal the actual payload:
+  ``chunk_bytes * codec_ratio(codec, group=chunk)`` for compressed chunks,
+  full fp16 bytes otherwise;
+* ``stage_host`` lets the engine's DTP prefetch thread speculatively pull
+  predicted chunks disk→host under the previous layer's compute — a miss
+  costs only the staging read, never a wrong output;
 * per-sequence ``TrafficLog`` mirrors: every byte recorded in the shared
   ``log`` is also attributed to its sequence (retired sequences' logs move
   to ``retired_logs`` so reused slots audit fresh), and benchmarks assert
@@ -25,17 +39,45 @@ can audit exactly what LeoAM saves.
 
 from __future__ import annotations
 
+import functools
 import os
 import tempfile
-from collections import defaultdict
+import threading
+import time
+from collections import OrderedDict, defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression
 
 DEVICE, HOST, DISK = "device", "host", "disk"
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slab_set(slab, idx, vals):
+    """Scatter whole chunk slots into the device slab.  Jitted so repeated
+    bucketed shapes reuse the compiled program (a bare ``.at[].set``
+    re-traces every call, ~1.5 ms each on CPU), and the slab is DONATED so
+    XLA updates it in place — O(delta) per round, not an O(pool) copy."""
+    return slab.at[idx].set(vals)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slab_set_rows(slab, si, oi, rows):
+    """Scatter single token rows (both K/V planes) into slab chunks."""
+    return slab.at[si, :, oi].set(rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slab_set_both(slab, idx, vals, si, oi, rows):
+    """Fused slot upload + deferred append-row scatter: one slab update per
+    (layer, round) instead of two, shortening the dependency chain the
+    attention gather waits on."""
+    return slab.at[idx].set(vals).at[si, :, oi].set(rows)
 
 
 @dataclass
@@ -55,30 +97,176 @@ class TrafficLog:
                    if (src is None or s == src) and (kind is None or k == kind))
 
 
+@dataclass
+class FetchStats:
+    """One pooled fetch's breakdown (per layer per round)."""
+    hits: int = 0                # chunks already pool-resident
+    uploads: int = 0             # chunks uploaded this call (the delta)
+    compressed: int = 0          # uploads that crossed the link packed
+    disk_reads: int = 0          # chunks staged disk→host first
+    upload_bytes: float = 0.0    # host→device bytes billed
+    disk_bytes: float = 0.0      # disk→host bytes billed
+    gather_s: float = 0.0        # disk stage wall time
+    upload_s: float = 0.0        # quantize + upload dispatch wall time
+
+
+class DeviceChunkPool:
+    """Fixed-capacity per-layer device slab of KV chunk slots.
+
+    ``kv`` is ONE (n_slots + 1, 2, chunk, Hkv, hd) jax array living on
+    device for the engine's lifetime (K and V share the slab so every
+    upload / append is a single scatter dispatch); slot ``n_slots`` is a
+    write-only scratch row used to pad delta uploads to a bucketed size, so
+    the scatter's compiled shape is stable across rounds instead of
+    recompiling for every distinct delta.  ``slot_of`` maps
+    (seq, chunk_id) → slot in LRU order (OrderedDict: hits
+    ``move_to_end``, evictions pop from the front — amortized O(1),
+    replacing the old O(n) min-scan).  On accelerators XLA performs the
+    ``at[].set`` in place; the CPU interpreter copies, which is fine for
+    the test geometry.
+    """
+
+    def __init__(self, n_slots: int, chunk: int, kv_heads: int,
+                 head_dim: int, dtype):
+        self.n_slots = n_slots
+        self.kv = jnp.zeros((n_slots + 1, 2, chunk, kv_heads, head_dim),
+                            dtype)
+        self.slot_of: "OrderedDict[Tuple[int, int], int]" = OrderedDict()
+        self.free: List[int] = list(range(n_slots - 1, -1, -1))
+        # decode appends queue here and are folded into the next round's
+        # slot upload — one slab update per (layer, round), not two
+        self.pending: Dict[Tuple[int, int], Tuple[int, np.ndarray]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.uploads = 0
+
+    def lookup(self, key: Tuple[int, int]) -> Optional[int]:
+        slot = self.slot_of.get(key)
+        if slot is not None:
+            self.slot_of.move_to_end(key)
+            self.hits += 1
+        else:
+            self.misses += 1
+        return slot
+
+    def alloc(self, key: Tuple[int, int], pinned) -> Tuple[int,
+                                                           Optional[Tuple]]:
+        """Grab a slot for ``key``, evicting the LRU non-pinned resident if
+        full.  Returns (slot, evicted key or None)."""
+        if self.free:
+            slot = self.free.pop()
+            self.slot_of[key] = slot
+            return slot, None
+        for victim in self.slot_of:            # LRU → MRU
+            if victim not in pinned:
+                break
+        else:
+            raise RuntimeError(
+                "device pool exhausted by a single round's working set; "
+                "raise device_chunk_budget or lower the selection rate")
+        slot = self.slot_of.pop(victim)
+        self.pending.pop(victim, None)     # host copy keeps the rows
+        self.slot_of[key] = slot
+        return slot, victim
+
+    def evict(self, key: Tuple[int, int]) -> None:
+        slot = self.slot_of.pop(key, None)
+        self.pending.pop(key, None)
+        if slot is not None:
+            self.free.append(slot)
+
+    def evict_seq(self, seq: int) -> None:
+        for key in [k for k in self.slot_of if k[0] == seq]:
+            self.evict(key)
+
+    def scatter(self, slots: Sequence[int], kv_new, *,
+                pad_to: Optional[int] = None,
+                row_pad: int = 8) -> List[Tuple[int, int]]:
+        """One slab update per (layer, round): scatter the (m, 2, chunk,
+        Hkv, hd) delta upload into ``slots`` AND flush the queued decode
+        append rows.  Index rows past the real payload (bucket padding)
+        land in the write-only scratch slot, so repeated rounds reuse the
+        compiled scatter instead of recompiling per delta size.  ``kv_new``
+        may be numpy (plain fp16 upload) or a jax array
+        (device-dequantized codec payload).  Returns the (seq, chunk) keys
+        whose append rows actually crossed to the device — the caller bills
+        those (rows dropped by eviction are never billed)."""
+        m = len(slots)
+        rows = [(key, slot, off, row)
+                for key, (off, row) in self.pending.items()
+                if (slot := self.slot_of.get(key)) is not None]
+        self.pending.clear()
+        n = len(rows)
+        width = -(-max(n, 1) // row_pad) * row_pad if n else 0
+        if m:
+            idx = np.full(max(pad_to or m, m), self.n_slots, np.int32)
+            idx[:m] = np.asarray(slots, np.int32)
+            if idx.shape[0] > m:
+                pad = np.zeros((idx.shape[0] - m, *self.kv.shape[1:]),
+                               self.kv.dtype)
+                kv_new = jnp.concatenate([jnp.asarray(kv_new),
+                                          jnp.asarray(pad)]) \
+                    if isinstance(kv_new, jnp.ndarray) else \
+                    np.concatenate([kv_new, pad])
+        if n:
+            si = np.full(width, self.n_slots, np.int32)
+            oi = np.zeros(width, np.int32)
+            kv_rows = np.zeros((width, 2, self.kv.shape[3],
+                                self.kv.shape[4]), self.kv.dtype)
+            for i, (_key, slot, off, row) in enumerate(rows):
+                si[i], oi[i] = slot, off
+                kv_rows[i] = row
+        if m and n:
+            self.kv = _slab_set_both(self.kv, jnp.asarray(idx),
+                                     jnp.asarray(kv_new), jnp.asarray(si),
+                                     jnp.asarray(oi), jnp.asarray(kv_rows))
+        elif m:
+            self.kv = _slab_set(self.kv, jnp.asarray(idx),
+                                jnp.asarray(kv_new))
+        elif n:
+            self.kv = _slab_set_rows(self.kv, jnp.asarray(si),
+                                     jnp.asarray(oi), jnp.asarray(kv_rows))
+        self.uploads += m
+        return [key for key, _, _, _ in rows]
+
+    def queue_row(self, key: Tuple[int, int], off: int,
+                  kv_row: np.ndarray) -> None:
+        """Queue a decode-append row for a resident chunk; flushed by the
+        next :meth:`scatter` (gathers read the slab only after it)."""
+        self.pending[key] = (off, kv_row)
+
+
 class TieredKVStore:
     """Multi-sequence chunked K/V with GPU/CPU/disk placement.
 
     K/V chunks are (chunk, Hkv, hd) numpy arrays keyed by (seq, layer,
     chunk).  ``disk`` is a real memory-mapped file shared by all sequences
     (so promotion latency is a genuine read on whatever machine this runs
-    on); the device tier is represented by pinned host arrays handed to jax
-    at attention time, capped by ``device_budget`` total chunks across the
-    batch with LRU demotion.
+    on).  The device tier has two representations: the legacy pinned-host
+    dicts capped by ``device_budget`` (``fetch_chunks`` /
+    ``fetch_chunks_batch``, kept for the synchronous PR-1 engine path), and
+    the per-layer :class:`DeviceChunkPool` slabs (``use_pool=True``,
+    ``fetch_chunks_pooled``) where residency is an actual device array and
+    uploads are deltas.
 
     The single-sequence API (``seq`` defaulting to 0) is unchanged from the
     original per-request store, so a ``n_seqs=1`` store behaves exactly as
-    before.
+    before.  All mutating entry points take an RLock so the engine's DTP
+    prefetch thread can stage disk reads while the main thread decodes.
     """
 
     def __init__(self, n_layers: int, n_chunks: int, chunk: int, kv_heads: int,
                  head_dim: int, *, n_seqs: int = 1, dtype=np.float16,
                  transit_codec="int4", root: Optional[str] = None,
-                 device_budget: Optional[int] = None):
+                 device_budget: Optional[int] = None,
+                 use_pool: bool = False, pool_slots: Optional[int] = None,
+                 real_codec: bool = False):
         self.n_seqs = n_seqs
         self.n_layers, self.n_chunks, self.chunk = n_layers, n_chunks, chunk
         self.kv_heads, self.head_dim = kv_heads, head_dim
         self.dtype = np.dtype(dtype)
         self.transit_codec = transit_codec
+        self.real_codec = real_codec and transit_codec is not None
         self.device_budget = device_budget
         self.tier: np.ndarray = np.full((n_seqs, n_layers, n_chunks), HOST,
                                         object)
@@ -91,9 +279,25 @@ class TieredKVStore:
         self._host_v: Dict[Key, np.ndarray] = {}
         self._dev_k: Dict[Key, np.ndarray] = {}
         self._dev_v: Dict[Key, np.ndarray] = {}
-        self._abstracts: Dict[Key, Tuple[np.ndarray, np.ndarray]] = {}
-        self._lru: Dict[Key, int] = {}        # device keys -> last-use tick
-        self._tick = 0
+        # legacy device LRU: OrderedDict insertion order == recency (O(1)
+        # touch/evict; the old dict+min-scan was O(n) per demotion)
+        self._lru: "OrderedDict[Key, None]" = OrderedDict()
+        # persistent stacked abstracts: one (n_seqs, n_chunks, Hkv, hd)
+        # fancy-index per (layer, round) instead of a per-seq Python loop
+        self._abs_km = np.full((n_seqs, n_layers, n_chunks, kv_heads,
+                                head_dim), -np.inf, np.float32)
+        self._abs_kn = np.full_like(self._abs_km, np.inf)
+        self._lock = threading.RLock()
+        self.upload_pad = 8            # delta-upload bucket (shape reuse)
+        self.codec_uploads = 0         # pooled H2D chunks sent packed
+        self.plain_uploads = 0         # pooled H2D chunks sent fp16
+        self.pools: List[Optional[DeviceChunkPool]] = [None] * n_layers
+        if use_pool:
+            slots = pool_slots if pool_slots is not None \
+                else n_seqs * n_chunks
+            self.pools = [DeviceChunkPool(slots, chunk, kv_heads, head_dim,
+                                          self.dtype)
+                          for _ in range(n_layers)]
         shape = (n_seqs, n_layers, n_chunks, 2, chunk, kv_heads, head_dim)
         self._root = root or tempfile.mkdtemp(prefix="leoam_kv_")
         self._disk = np.memmap(os.path.join(self._root, "kv.bin"),
@@ -108,6 +312,21 @@ class TieredKVStore:
     def abstract_bytes(self) -> int:
         return 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
 
+    @property
+    def row_bytes(self) -> int:
+        """One appended token's K+V bytes."""
+        return 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
+
+    def _bill_flushed_rows(self, applied: List[Tuple[int, int]]) -> None:
+        """Bill the HOST→DEVICE append rows a slab flush actually carried
+        (queued rows dropped by eviction never cross, so never bill)."""
+        for seq, _c in applied:
+            self._record(seq, HOST, DEVICE, "kv_append", self.row_bytes)
+
+    @property
+    def use_pool(self) -> bool:
+        return self.pools[0] is not None
+
     def _record(self, seq: int, src: str, dst: str, kind: str,
                 nbytes: float) -> None:
         """Tally into the shared log AND the sequence's mirror, identically
@@ -117,118 +336,168 @@ class TieredKVStore:
         self.seq_logs[seq].record(src, dst, kind, nbytes)
 
     def _transit_bytes(self) -> float:
+        """Legacy ledger-only codec: chunk bytes scaled by the codec ratio."""
         nbytes = float(self.chunk_bytes)
         if self.transit_codec:
             nbytes *= compression.codec_ratio(self.transit_codec)
         return nbytes
 
+    def _packed_bytes(self) -> float:
+        """Actual packed payload bytes of one chunk through the real codec
+        (per-chunk grouping, so the ratio is exact — tested)."""
+        return float(self.chunk_bytes) * compression.codec_ratio(
+            self.transit_codec, group=self.chunk)
+
+    def _disk_read_bytes(self) -> float:
+        """Disk→host promotion bytes: the memmap replica is fp16, so the
+        real-codec store bills the honest full read; the legacy store kept
+        the ledger-only codec scaling."""
+        return float(self.chunk_bytes) if self.real_codec \
+            else self._transit_bytes()
+
     def ingest(self, layer: int, k: np.ndarray, v: np.ndarray,
                placement: Dict[int, str], *, seq: int = 0) -> None:
         """Store prefill KV.  k/v: (S, Hkv, hd).  Every chunk is replicated
         to disk (with its abstract); ``placement`` assigns the hot tier."""
-        S = k.shape[0]
-        for c in range(min(self.n_chunks, (S + self.chunk - 1) // self.chunk)):
-            kc = k[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
-            vc = v[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
-            if kc.shape[0] < self.chunk:
-                pad = self.chunk - kc.shape[0]
-                kc = np.pad(kc, ((0, pad), (0, 0), (0, 0)))
-                vc = np.pad(vc, ((0, pad), (0, 0), (0, 0)))
-            self._disk[seq, layer, c, 0] = kc
-            self._disk[seq, layer, c, 1] = vc
-            self._abstracts[(seq, layer, c)] = (kc.max(0), kc.min(0))
-            self._record(seq, HOST, DISK, "kv_replica", self.chunk_bytes)
-            self._record(seq, HOST, DISK, "abstract", self.abstract_bytes)
-            where = placement.get(c, HOST)
-            self.tier[seq, layer, c] = where
-            key = (seq, layer, c)
-            if where in (HOST, DEVICE):
-                self._host_k[key], self._host_v[key] = kc, vc
-            if where == DEVICE:
-                self._promote_device(key, kc, vc)
+        with self._lock:
+            S = k.shape[0]
+            to_pool: List[Tuple[int, np.ndarray, np.ndarray]] = []
+            for c in range(min(self.n_chunks,
+                               (S + self.chunk - 1) // self.chunk)):
+                kc = k[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
+                vc = v[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
+                if kc.shape[0] < self.chunk:
+                    pad = self.chunk - kc.shape[0]
+                    kc = np.pad(kc, ((0, pad), (0, 0), (0, 0)))
+                    vc = np.pad(vc, ((0, pad), (0, 0), (0, 0)))
+                self._disk[seq, layer, c, 0] = kc
+                self._disk[seq, layer, c, 1] = vc
+                self._abs_km[seq, layer, c] = kc.max(0)
+                self._abs_kn[seq, layer, c] = kc.min(0)
+                self._record(seq, HOST, DISK, "kv_replica", self.chunk_bytes)
+                self._record(seq, HOST, DISK, "abstract", self.abstract_bytes)
+                where = placement.get(c, HOST)
+                self.tier[seq, layer, c] = where
+                key = (seq, layer, c)
+                if where in (HOST, DEVICE):
+                    self._host_k[key], self._host_v[key] = kc, vc
+                if where == DEVICE:
+                    if self.use_pool:
+                        to_pool.append((c, kc, vc))
+                    else:
+                        self._promote_device(key, kc, vc)
+            if to_pool:
+                self._pool_place(layer, seq, to_pool)
+
+    def _pool_place(self, layer: int, seq: int,
+                    items: List[Tuple[int, np.ndarray, np.ndarray]]) -> None:
+        """Initial (prefill) pool placement: one scatter, no transit billing
+        — the KV was produced on device; this is residency bookkeeping."""
+        pool = self.pools[layer]
+        slots = []
+        for c, _, _ in items:
+            slot, evicted = pool.alloc((seq, c), pinned=())
+            if evicted is not None:
+                self.tier[evicted[0], layer, evicted[1]] = HOST
+            slots.append(slot)
+        self._bill_flushed_rows(
+            pool.scatter(slots, np.stack([np.stack((kc, vc))
+                                          for _, kc, vc in items])))
 
     # ------------------------------------------------------------------
     def read_abstracts(self, layer: int, chunks: Sequence[int], *,
                        seq: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         """LKA: fetch (kmax, kmin) for chunks; disk chunks cost abstract I/O."""
-        kmaxs, kmins = [], []
-        for c in chunks:
-            if self.tier[seq, layer, c] == DISK:
-                self._record(seq, DISK, HOST, "abstract", self.abstract_bytes)
-            km, kn = self._abstracts[(seq, layer, c)]
-            kmaxs.append(km)
-            kmins.append(kn)
-        return np.stack(kmaxs), np.stack(kmins)
+        with self._lock:
+            idx = np.asarray(list(chunks), np.int64)
+            for c in idx:
+                if self.tier[seq, layer, c] == DISK:
+                    self._record(seq, DISK, HOST, "abstract",
+                                 self.abstract_bytes)
+            return (self._abs_km[seq, layer, idx].copy(),
+                    self._abs_kn[seq, layer, idx].copy())
 
     def read_abstracts_batch(self, layer: int,
                              chunks_by_seq: Dict[int, Sequence[int]]
                              ) -> Tuple[np.ndarray, np.ndarray, Dict[int, float]]:
-        """Batched LKA read: one padded (B, ncmax, Hkv, hd) stack for the
-        round's importance evaluation.  Returns (kmax, kmin, abstract bytes
-        billed per sequence); rows follow dict order, padded with zeros."""
-        B = len(chunks_by_seq)
-        ncmax = max((len(c) for c in chunks_by_seq.values()), default=0)
-        km = np.zeros((B, ncmax, self.kv_heads, self.head_dim), np.float32)
-        kn = np.zeros_like(km)
-        billed: Dict[int, float] = {}
-        for i, (seq, chunks) in enumerate(chunks_by_seq.items()):
-            before = self.seq_logs[seq].total(kind="abstract")
-            a, b = self.read_abstracts(layer, chunks, seq=seq)
-            km[i, :len(chunks)] = a
-            kn[i, :len(chunks)] = b
-            billed[seq] = self.seq_logs[seq].total(kind="abstract") - before
-        return km, kn, billed
+        """Batched LKA read: one padded (B, ncmax, Hkv, hd) fancy-index into
+        the persistent abstract stack for the round's importance evaluation
+        (no per-sequence Python loop).  Returns (kmax, kmin, abstract bytes
+        billed per sequence); rows follow dict order, padded with zeros.
+        Billing is exact per sequence: every disk-tier chunk read bills one
+        abstract, mirrored to the owner's log."""
+        with self._lock:
+            B = len(chunks_by_seq)
+            ncmax = max((len(c) for c in chunks_by_seq.values()), default=0)
+            km = np.zeros((B, ncmax, self.kv_heads, self.head_dim), np.float32)
+            kn = np.zeros_like(km)
+            billed: Dict[int, float] = {}
+            for i, (seq, chunks) in enumerate(chunks_by_seq.items()):
+                idx = np.asarray(list(chunks), np.int64)
+                km[i, :len(idx)] = self._abs_km[seq, layer, idx]
+                kn[i, :len(idx)] = self._abs_kn[seq, layer, idx]
+                n_disk = int(np.count_nonzero(
+                    self.tier[seq, layer, idx] == DISK))
+                for _ in range(n_disk):
+                    self._record(seq, DISK, HOST, "abstract",
+                                 self.abstract_bytes)
+                billed[seq] = n_disk * float(self.abstract_bytes)
+            return km, kn, billed
 
     # ------------------------------------------------------------------
     def _promote_device(self, key: Tuple[int, int, int], kc: np.ndarray,
                         vc: np.ndarray) -> None:
-        """Pin a chunk device-side, demoting LRU chunks past the shared
-        budget (free: host copies + disk replicas survive)."""
+        """Pin a chunk device-side (legacy dict tier), demoting LRU chunks
+        past the shared budget (free: host copies + disk replicas survive).
+        OrderedDict front == LRU, so budgeted eviction is O(1)."""
         self._dev_k[key], self._dev_v[key] = kc, vc
         self.tier[key[0], key[1], key[2]] = DEVICE
-        self._tick += 1
-        self._lru[key] = self._tick
+        self._lru[key] = None
+        self._lru.move_to_end(key)
         if self.device_budget is not None:
             while len(self._dev_k) > self.device_budget:
-                victim = min(self._lru, key=self._lru.get)
+                victim, _ = self._lru.popitem(last=False)
                 self._dev_k.pop(victim, None)
                 self._dev_v.pop(victim, None)
-                self._lru.pop(victim, None)
                 self.tier[victim[0], victim[1], victim[2]] = HOST
+
+    def _touch(self, key: Tuple[int, int, int]) -> None:
+        self._lru.move_to_end(key)
 
     def fetch_chunks(self, layer: int, chunks: Sequence[int], *,
                      seq: int = 0, to_device: bool = True
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """Promote chunks to the device working set; returns stacked K/V
         (n, chunk, Hkv, hd).  Disk promotions go through the transit codec."""
-        ks, vs = [], []
-        for c in chunks:
-            key = (seq, layer, c)
-            self.access[seq, layer, c] += 1
-            if key in self._dev_k:
-                self._tick += 1
-                self._lru[key] = self._tick
-                ks.append(self._dev_k[key])
-                vs.append(self._dev_v[key])
-                continue
-            if self.tier[seq, layer, c] == DISK or key not in self._host_k:
-                kc = np.asarray(self._disk[seq, layer, c, 0])
-                vc = np.asarray(self._disk[seq, layer, c, 1])
-                self._record(seq, DISK, HOST, "kv", self._transit_bytes())
-                self._host_k[key], self._host_v[key] = kc, vc
-            kc, vc = self._host_k[key], self._host_v[key]
-            self._record(seq, HOST, DEVICE, "kv", self._transit_bytes())
-            if to_device:
-                self._promote_device(key, kc, vc)
-            ks.append(kc)
-            vs.append(vc)
-        return np.stack(ks), np.stack(vs)
+        with self._lock:
+            ks, vs = [], []
+            for c in chunks:
+                key = (seq, layer, c)
+                self.access[seq, layer, c] += 1
+                if key in self._dev_k:
+                    self._touch(key)
+                    ks.append(self._dev_k[key])
+                    vs.append(self._dev_v[key])
+                    continue
+                if self.tier[seq, layer, c] == DISK or key not in self._host_k:
+                    kc = np.asarray(self._disk[seq, layer, c, 0])
+                    vc = np.asarray(self._disk[seq, layer, c, 1])
+                    self._record(seq, DISK, HOST, "kv", self._transit_bytes())
+                    self._host_k[key], self._host_v[key] = kc, vc
+                kc, vc = self._host_k[key], self._host_v[key]
+                self._record(seq, HOST, DEVICE, "kv", self._transit_bytes())
+                if to_device:
+                    self._promote_device(key, kc, vc)
+                ks.append(kc)
+                vs.append(vc)
+            return np.stack(ks), np.stack(vs)
 
     def fetch_chunks_batch(self, layer: int,
                            chunks_by_seq: Dict[int, Sequence[int]], *,
                            pad_to: Optional[int] = None, to_device: bool = True
                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Batch-coalesced promotion for one decode round of one layer.
+        """Batch-coalesced promotion for one decode round of one layer
+        (legacy host-assembled working set; the PR-1 synchronous path).
 
         All disk-resident (seq, chunk) pairs across the batch are read from
         the shared memmap in ONE fancy-indexed gather, then every sequence's
@@ -239,79 +508,263 @@ class TieredKVStore:
         Rows follow dict order.  Accounting matches per-seq ``fetch_chunks``
         byte-for-byte; only the I/O issue pattern differs.
         """
-        items = list(chunks_by_seq.items())
-        B = len(items)
-        nsel = np.array([len(c) for _, c in items], np.int32)
-        nmax = int(pad_to if pad_to is not None else (nsel.max() if B else 0))
+        with self._lock:
+            items = list(chunks_by_seq.items())
+            B = len(items)
+            nsel = np.array([len(c) for _, c in items], np.int32)
+            nmax = int(pad_to if pad_to is not None
+                       else (nsel.max() if B else 0))
 
-        # one gather per layer for everything that must come off disk
-        need_disk = [(seq, c) for seq, chunks in items for c in chunks
-                     if (seq, layer, c) not in self._dev_k
-                     and ((seq, layer, c) not in self._host_k
-                          or self.tier[seq, layer, c] == DISK)]
-        if need_disk:
-            sq = np.array([s for s, _ in need_disk])
-            cq = np.array([c for _, c in need_disk])
+            self._stage_disk(layer, [(seq, c) for seq, chunks in items
+                                     for c in chunks],
+                             nbytes=self._transit_bytes(),
+                             skip_pool=False)
+
+            kg = np.zeros((B, nmax, self.chunk, self.kv_heads, self.head_dim),
+                          self.dtype)
+            vg = np.zeros_like(kg)
+            for i, (seq, chunks) in enumerate(items):
+                for j, c in enumerate(chunks):
+                    key = (seq, layer, c)
+                    self.access[seq, layer, c] += 1
+                    if key in self._dev_k:
+                        self._touch(key)
+                        kg[i, j], vg[i, j] = self._dev_k[key], self._dev_v[key]
+                        continue
+                    self._record(seq, HOST, DEVICE, "kv",
+                                 self._transit_bytes())
+                    if to_device:
+                        self._promote_device(key, self._host_k[key],
+                                             self._host_v[key])
+                    kg[i, j], vg[i, j] = self._host_k[key], self._host_v[key]
+            return kg, vg, nsel
+
+    # ------------------------------------------------------------------
+    # Pooled path: device-resident slab, delta uploads, real codec
+    # ------------------------------------------------------------------
+    def _stage_disk(self, layer: int, keys: Sequence[Tuple[int, int]], *,
+                    nbytes: float, skip_pool: bool,
+                    retier: bool = False) -> int:
+        """Coalesce disk→host reads for every key lacking a host copy.
+        One fancy-indexed memmap gather; bills ``nbytes`` per chunk read.
+        ``skip_pool``: pool-resident chunks need no host copy.  ``retier``
+        marks staged chunks HOST so a later fetch sees the copy instead of
+        re-reading (and re-billing) the disk."""
+        need = []
+        seen = set()
+        for seq, c in keys:
+            key = (seq, layer, c)
+            if key in seen:
+                continue
+            seen.add(key)
+            if skip_pool and self.pools[layer] is not None \
+                    and (seq, c) in self.pools[layer].slot_of:
+                continue
+            if not skip_pool and key in self._dev_k:
+                continue
+            if key in self._host_k and self.tier[seq, layer, c] != DISK:
+                continue
+            need.append((seq, c))
+        if need:
+            sq = np.array([s for s, _ in need])
+            cq = np.array([c for _, c in need])
             blk = np.asarray(self._disk[sq, layer, cq])   # (n, 2, chunk, ...)
-            for (seq, c), kv in zip(need_disk, blk):
+            for (seq, c), kv in zip(need, blk):
                 key = (seq, layer, c)
-                self._record(seq, DISK, HOST, "kv", self._transit_bytes())
+                self._record(seq, DISK, HOST, "kv", nbytes)
                 self._host_k[key], self._host_v[key] = kv[0], kv[1]
+                if retier:
+                    self.tier[seq, layer, c] = HOST
+        return len(need)
 
-        kg = np.zeros((B, nmax, self.chunk, self.kv_heads, self.head_dim),
-                      self.dtype)
-        vg = np.zeros_like(kg)
-        for i, (seq, chunks) in enumerate(items):
-            for j, c in enumerate(chunks):
-                key = (seq, layer, c)
-                self.access[seq, layer, c] += 1
-                if key in self._dev_k:
-                    self._tick += 1
-                    self._lru[key] = self._tick
-                    kg[i, j], vg[i, j] = self._dev_k[key], self._dev_v[key]
-                    continue
-                self._record(seq, HOST, DEVICE, "kv", self._transit_bytes())
-                if to_device:
-                    self._promote_device(key, self._host_k[key],
-                                         self._host_v[key])
-                kg[i, j], vg[i, j] = self._host_k[key], self._host_v[key]
-        return kg, vg, nsel
+    def stage_host(self, layer: int,
+                   chunks_by_seq: Dict[int, Sequence[int]]) -> int:
+        """Speculative disk→host staging (DTP prefetch).  Pulls predicted
+        chunks off disk so the true fetch finds them host-resident (they
+        are re-tiered HOST — without that the fetch would re-read and
+        re-bill the same chunk, and the prefetch would hide nothing);
+        wrong predictions cost only this read.  Returns #chunks staged."""
+        with self._lock:
+            keys = [(seq, c) for seq, chunks in chunks_by_seq.items()
+                    for c in chunks]
+            return self._stage_disk(layer, keys,
+                                    nbytes=self._disk_read_bytes(),
+                                    skip_pool=True, retier=True)
 
+    def fetch_chunks_pooled(self, layer: int,
+                            chunks_by_seq: Dict[int, Sequence[int]], *,
+                            pad_to: Optional[int] = None,
+                            theta: float = 1.0
+                            ) -> Tuple[np.ndarray, np.ndarray, FetchStats]:
+        """Delta promotion into the layer's device slab.
+
+        Chunks already pool-resident cost NOTHING (no host stack, no
+        upload, no bytes billed); only the missing delta is stacked and
+        scattered into freshly-allocated slots.  With ``real_codec``, the
+        first ``round(theta * missing)`` chunks (canonical key order) cross
+        host→device as packed int4/int8 + f32 scales and are dequantized on
+        device (``kernels.kv_quant``); the rest go as fp16.  Billing is the
+        actual payload per chunk.
+
+        Returns (slots, nsel, stats): slots (B, pad_to) int32 indices into
+        ``pools[layer]`` (padding rows point at slot 0 — the engine masks
+        them), nsel (B,) valid counts.  Rows follow dict order.
+        """
+        assert self.use_pool, "store built without use_pool=True"
+        with self._lock:
+            st = FetchStats()
+            pool = self.pools[layer]
+            items = list(chunks_by_seq.items())
+            B = len(items)
+            nsel = np.array([len(c) for _, c in items], np.int32)
+            nmax = int(pad_to if pad_to is not None
+                       else (nsel.max() if B else 0))
+
+            t0 = time.perf_counter()
+            st.disk_reads = self._stage_disk(
+                layer, [(seq, c) for seq, chunks in items for c in chunks],
+                nbytes=self._disk_read_bytes(), skip_pool=True)
+            st.disk_bytes = st.disk_reads * self._disk_read_bytes()
+            st.gather_s = time.perf_counter() - t0
+
+            slots = np.zeros((B, nmax), np.int32)
+            pinned = {(seq, c) for seq, chunks in items for c in chunks}
+            missing: List[Tuple[int, int, int, int]] = []   # (i, j, seq, c)
+            for i, (seq, chunks) in enumerate(items):
+                for j, c in enumerate(chunks):
+                    self.access[seq, layer, c] += 1
+                    slot = pool.lookup((seq, c))
+                    if slot is None:
+                        missing.append((i, j, seq, c))
+                    else:
+                        slots[i, j] = slot
+                        st.hits += 1
+            t1 = time.perf_counter()
+            if missing:
+                up_slots = []
+                for i, j, seq, c in missing:
+                    slot, evicted = pool.alloc((seq, c), pinned)
+                    if evicted is not None:
+                        self.tier[evicted[0], layer, evicted[1]] = HOST
+                    slots[i, j] = slot
+                    self.tier[seq, layer, c] = DEVICE
+                    up_slots.append(slot)
+                kv_stack = np.stack(
+                    [np.stack((self._host_k[(s, layer, c)],
+                               self._host_v[(s, layer, c)]))
+                     for _, _, s, c in missing])      # (m, 2, c, Hkv, hd)
+                m = len(missing)
+                n_comp = 0
+                if self.real_codec:
+                    n_comp = int(round(min(1.0, max(0.0, theta)) * m))
+                if n_comp:
+                    kd, ks = compression.quantize_chunks(
+                        kv_stack[:n_comp, 0], self.transit_codec)
+                    vd, vsc = compression.quantize_chunks(
+                        kv_stack[:n_comp, 1], self.transit_codec)
+                    from repro.kernels.kv_quant.ops import kv_dequant
+                    dq = lambda d, s: kv_dequant(
+                        jnp.asarray(d), jnp.asarray(s),
+                        codec=self.transit_codec,
+                        out_dtype=self.dtype).reshape(
+                            n_comp, self.chunk, self.kv_heads, self.head_dim)
+                    kv_dev = jnp.stack([dq(kd, ks), dq(vd, vsc)], axis=1)
+                    if n_comp < m:
+                        kv_dev = jnp.concatenate(
+                            [kv_dev, jnp.asarray(kv_stack[n_comp:])])
+                else:
+                    kv_dev = kv_stack
+                # bucket the scatter shape so repeated rounds reuse the
+                # compiled program instead of recompiling per delta size
+                pad_to = -(-m // self.upload_pad) * self.upload_pad
+                self._bill_flushed_rows(
+                    pool.scatter(up_slots, kv_dev, pad_to=pad_to))
+                per_comp = self._packed_bytes() if self.real_codec \
+                    else self._transit_bytes()
+                per_plain = float(self.chunk_bytes) if self.real_codec \
+                    else self._transit_bytes()
+                for idx, (_, _, seq, _) in enumerate(missing):
+                    nb = per_comp if idx < n_comp else per_plain
+                    self._record(seq, HOST, DEVICE, "kv", nb)
+                    st.upload_bytes += nb
+                st.uploads = m
+                st.compressed = n_comp
+                self.codec_uploads += n_comp
+                self.plain_uploads += m - n_comp
+            elif pool.pending:
+                self._bill_flushed_rows(pool.scatter([], None))
+            st.upload_s = time.perf_counter() - t1
+            return slots, nsel, st
+
+    def pool_stats(self) -> Dict[str, float]:
+        """Aggregate pool residency counters across layers (+ hit rate)."""
+        hits = sum(p.hits for p in self.pools if p is not None)
+        misses = sum(p.misses for p in self.pools if p is not None)
+        uploads = sum(p.uploads for p in self.pools if p is not None)
+        return {"hits": hits, "misses": misses, "uploads": uploads,
+                "hit_rate": hits / max(1, hits + misses)}
+
+    # ------------------------------------------------------------------
     def demote(self, layer: int, chunks: Sequence[int], to: str = HOST, *,
                seq: int = 0) -> None:
         """Eviction is free toward disk (replicas, §4.3)."""
-        for c in chunks:
-            key = (seq, layer, c)
-            self._dev_k.pop(key, None)
-            self._dev_v.pop(key, None)
-            self._lru.pop(key, None)
-            if to == DISK:
-                self._host_k.pop(key, None)
-                self._host_v.pop(key, None)
-            self.tier[seq, layer, c] = to
+        with self._lock:
+            for c in chunks:
+                key = (seq, layer, c)
+                self._dev_k.pop(key, None)
+                self._dev_v.pop(key, None)
+                self._lru.pop(key, None)
+                if self.pools[layer] is not None:
+                    self.pools[layer].evict((seq, c))
+                if to == DISK:
+                    self._host_k.pop(key, None)
+                    self._host_v.pop(key, None)
+                self.tier[seq, layer, c] = to
 
     def append_token(self, layer: int, pos: int, k_new: np.ndarray,
                      v_new: np.ndarray, *, seq: int = 0) -> None:
         """Decode-step cache append: update chunk + abstract in place."""
-        c, off = pos // self.chunk, pos % self.chunk
-        self._disk[seq, layer, c, 0, off] = k_new.astype(self.dtype)
-        self._disk[seq, layer, c, 1, off] = v_new.astype(self.dtype)
-        km, kn = self._abstracts.get((seq, layer, c),
-                                     (np.full((self.kv_heads, self.head_dim),
-                                              -np.inf, self.dtype),
-                                      np.full((self.kv_heads, self.head_dim),
-                                              np.inf, self.dtype)))
-        self._abstracts[(seq, layer, c)] = (np.maximum(km, k_new),
-                                            np.minimum(kn, k_new))
-        key = (seq, layer, c)
-        if key in self._host_k:
-            self._host_k[key][off] = k_new
-            self._host_v[key][off] = v_new
-        if key in self._dev_k:
-            self._dev_k[key][off] = k_new
-            self._dev_v[key][off] = v_new
-        self._record(seq, HOST, DISK, "kv_append",
-                     2 * self.kv_heads * self.head_dim * self.dtype.itemsize)
+        self.append_tokens_batch(layer, np.asarray([pos]), k_new[None],
+                                 v_new[None], seqs=[seq])
+
+    def append_tokens_batch(self, layer: int, positions: np.ndarray,
+                            k_news: np.ndarray, v_news: np.ndarray, *,
+                            seqs: Sequence[int]) -> None:
+        """One round's appends for a layer: vectorized disk writes +
+        abstract updates, per-seq host/device mirror updates, and ONE pool
+        row-scatter for resident tail chunks.
+
+        positions: (B,), k_news/v_news: (B, Hkv, hd), seqs: (B,).
+        """
+        with self._lock:
+            sq = np.asarray(list(seqs), np.int64)
+            pos = np.asarray(positions, np.int64)
+            cs, offs = pos // self.chunk, pos % self.chunk
+            kd = k_news.astype(self.dtype)
+            vd = v_news.astype(self.dtype)
+            self._disk[sq, layer, cs, 0, offs] = kd
+            self._disk[sq, layer, cs, 1, offs] = vd
+            self._abs_km[sq, layer, cs] = np.maximum(
+                self._abs_km[sq, layer, cs], k_news)
+            self._abs_kn[sq, layer, cs] = np.minimum(
+                self._abs_kn[sq, layer, cs], k_news)
+            row_bytes = 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
+            pool = self.pools[layer]
+            p_slots, p_offs, p_rows = [], [], []
+            for i in range(len(sq)):
+                seq, c, off = int(sq[i]), int(cs[i]), int(offs[i])
+                key = (seq, layer, c)
+                if key in self._host_k:
+                    self._host_k[key][off] = kd[i]
+                    self._host_v[key][off] = vd[i]
+                if key in self._dev_k:
+                    self._dev_k[key][off] = kd[i]
+                    self._dev_v[key][off] = vd[i]
+                if pool is not None and (seq, c) in pool.slot_of:
+                    # H2D billing happens when the flush actually carries
+                    # the row (see _bill_flushed_rows), not at queue time
+                    pool.queue_row((seq, c), off, np.stack((kd[i], vd[i])))
+                self._record(seq, HOST, DISK, "kv_append", row_bytes)
 
     # ------------------------------------------------------------------
     def clear_seq(self, seq: int) -> None:
@@ -321,17 +774,25 @@ class TieredKVStore:
         shared ``log`` always equals Σ seq_logs + Σ retired_logs.  Stale
         disk data needs no scrub: the next ingest overwrites every chunk it
         will read, and appended chunks are masked by pos <= length."""
-        for d in (self._host_k, self._host_v, self._dev_k, self._dev_v,
-                  self._abstracts, self._lru):
-            for key in [k for k in d if k[0] == seq]:
-                d.pop(key, None)
-        self.tier[seq] = HOST
-        self.access[seq] = 0.0
-        if seq in self.seq_logs:
-            self.retired_logs.append(self.seq_logs.pop(seq))
+        with self._lock:
+            for d in (self._host_k, self._host_v, self._dev_k, self._dev_v,
+                      self._lru):
+                for key in [k for k in d if k[0] == seq]:
+                    d.pop(key, None)
+            for pool in self.pools:
+                if pool is not None:
+                    pool.evict_seq(seq)
+            self._abs_km[seq] = -np.inf
+            self._abs_kn[seq] = np.inf
+            self.tier[seq] = HOST
+            self.access[seq] = 0.0
+            if seq in self.seq_logs:
+                self.retired_logs.append(self.seq_logs.pop(seq))
 
     def device_bytes(self) -> int:
-        return len(self._dev_k) * self.chunk_bytes
+        resident = len(self._dev_k) + sum(
+            len(p.slot_of) for p in self.pools if p is not None)
+        return resident * self.chunk_bytes
 
     def tier_bytes(self) -> Dict[str, float]:
         """Bytes moved so far, by (src, dst) pair — benchmark reporting."""

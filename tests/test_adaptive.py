@@ -7,8 +7,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.abstracts import build_pyramid
-from repro.core.adaptive import (flat_chunk_select, pyramid_eval_count,
-                                 pyramid_select_gqa, tree_select)
+from repro.core.adaptive import (flat_chunk_select, flat_select_chunks,
+                                 pyramid_eval_count, pyramid_select_gqa,
+                                 tree_select, tree_select_chunks)
 
 
 def clustered_scores(rng, n, n_clusters=4, width=24):
@@ -62,6 +63,51 @@ def test_paper_fig10_example():
     assert res.transfer_ratio == 1.0
     flat = flat_chunk_select(scores, 6, 4)
     assert flat.transfer_ratio < 0.80
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([4, 16, 64]),
+       st.booleans())
+def test_tree_select_chunks_matches_token_path(seed, chunk, with_ties):
+    """The engine's chunk-level fast path selects EXACTLY the chunks (and
+    counts exactly the evaluations) of tree_select on the repeated
+    per-token scores — including score ties across chunks."""
+    rng = np.random.RandomState(seed)
+    n_chunks = rng.randint(2, 24)
+    length = rng.randint((n_chunks - 1) * chunk + 1, n_chunks * chunk + 1)
+    if with_ties:   # few distinct values force heap tie-breaking
+        chunk_ub = rng.choice([0.5, 1.0, 2.0], n_chunks).astype(np.float32)
+    else:
+        chunk_ub = rng.randn(n_chunks).astype(np.float32)
+    budget = rng.randint(1, length + 1)
+    per_chunk = chunk_ub / chunk
+    per_tok = np.repeat(per_chunk, chunk)[:length]
+    ref = tree_select(per_tok, budget, chunk)
+    ref_chunks = sorted({int(t) // chunk for t in ref.selected})
+    got_chunks, got_evals = tree_select_chunks(per_chunk, length, budget,
+                                               chunk)
+    assert got_chunks == ref_chunks
+    assert got_evals == ref.evaluations
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([4, 16, 64]))
+def test_flat_select_chunks_matches_token_path(seed, chunk):
+    """Flat (Quest-like) fast path: same chunk set and evaluation count as
+    the per-token baseline on continuous scores."""
+    rng = np.random.RandomState(seed)
+    n_chunks = rng.randint(2, 24)
+    length = rng.randint((n_chunks - 1) * chunk + 1, n_chunks * chunk + 1)
+    chunk_ub = rng.randn(n_chunks).astype(np.float32)
+    budget = rng.randint(1, length + 1)
+    per_chunk = chunk_ub / chunk
+    per_tok = np.repeat(per_chunk, chunk)[:length]
+    ref = flat_chunk_select(per_tok, budget, chunk)
+    ref_chunks = sorted({int(t) // chunk for t in ref.selected})
+    got_chunks, got_evals = flat_select_chunks(per_chunk, length, budget,
+                                               chunk)
+    assert got_chunks == ref_chunks
+    assert got_evals == ref.evaluations
 
 
 def test_pyramid_recall_on_planted(rng):

@@ -1,5 +1,6 @@
 """Batched tiered decoding: token-for-token parity with independent
-single-sequence engines, exact shared-store accounting, scheduler drive."""
+single-sequence engines, exact shared-store accounting, scheduler drive,
+device-pool delta uploads, real transit codec, async DTP pipelining."""
 
 import dataclasses
 
@@ -8,9 +9,10 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core import compression
 from repro.models import lm
 from repro.serving.engine import BatchedLeoAMEngine, EngineCfg, LeoAMEngine
-from repro.serving.offload import DISK, HOST, TieredKVStore
+from repro.serving.offload import DEVICE, DISK, HOST, TieredKVStore
 from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerCfg
 
 
@@ -156,6 +158,254 @@ def test_store_coalesced_fetch_matches_sequential(rng):
     assert bat_store.log.ops == seq_store.log.ops
     seq_store.close()
     bat_store.close()
+
+
+def _decode_streams(cfg, params, prompts, ecfg, n_new=5):
+    """Token streams + the engine's store after n_new rounds."""
+    eng = BatchedLeoAMEngine(cfg, params, ecfg, max_seqs=len(prompts))
+    toks, streams = {}, {}
+    for p in prompts:
+        sid, tok = eng.add_sequence(p)
+        toks[sid] = tok
+        streams[sid] = [tok]
+    per_round_h2d = []
+    per_round_uploads = []
+    for _ in range(n_new - 1):
+        h0 = eng.store.log.total(kind="kv")
+        h2d0 = eng.store.log.bytes.get((HOST, DEVICE, "kv"), 0.0)
+        up0 = sum(p.uploads for p in eng.store.pools if p is not None)
+        toks = eng.decode_round(toks)
+        per_round_h2d.append(
+            eng.store.log.bytes.get((HOST, DEVICE, "kv"), 0.0) - h2d0)
+        per_round_uploads.append(
+            sum(p.uploads for p in eng.store.pools if p is not None) - up0)
+        del h0
+        for sid in sorted(streams):
+            streams[sid].append(toks[sid])
+    out = [streams[s] for s in sorted(streams)]
+    return out, eng, per_round_h2d, per_round_uploads
+
+
+def test_pooled_pipelined_matches_pr1_synchronous(setup, rng):
+    """The tentpole parity guarantee: the device-pool + async-DTP engine
+    decodes token-identical to the PR-1 synchronous full-re-upload engine
+    (speculation only moves residency; the pool holds exact fp16)."""
+    cfg, params = setup
+    prompts = [rng.randint(2, cfg.vocab_size, n) for n in (48, 64, 57)]
+    legacy, e0, _, _ = _decode_streams(
+        cfg, params, prompts, _ecfg(pooled=False, pipeline=False))
+    pooled, e1, _, _ = _decode_streams(
+        cfg, params, prompts, _ecfg(pooled=True, pipeline=False))
+    piped, e2, _, _ = _decode_streams(
+        cfg, params, prompts, _ecfg(pooled=True, pipeline=True))
+    assert pooled == legacy, (pooled, legacy)
+    assert piped == legacy, (piped, legacy)
+    # the pipelined engine actually hit its speculative abstract cache
+    assert e2.store.pool_stats()["hits"] > 0
+    for e in (e0, e1, e2):
+        e.store.close()
+
+
+def test_h2d_bytes_shrink_to_promoted_delta(setup, rng):
+    """Once chunks are pool-resident, per-round HOST→DEVICE "kv" bytes are
+    exactly the newly-promoted delta — uploads × per-chunk transit bytes —
+    and after warm-up that is well below the full working-set re-upload."""
+    cfg, params = setup
+    prompts = [rng.randint(2, cfg.vocab_size, n) for n in (48, 64)]
+    _, eng, h2d, uploads = _decode_streams(
+        cfg, params, prompts, _ecfg(pooled=True, pipeline=True), n_new=6)
+    per_chunk = eng.store._transit_bytes()
+    for round_bytes, round_up in zip(h2d, uploads):
+        assert round_bytes == pytest.approx(round_up * per_chunk)
+    # warm-up: later rounds upload (much) less than the first round, and
+    # far less than re-uploading every selected chunk would cost
+    sel_chunks = sum(s.stats[-1].fetched_chunks for s in eng.seqs.values())
+    full_reupload = sel_chunks * per_chunk
+    assert h2d[-1] < 0.5 * full_reupload
+    assert sum(uploads[2:]) < sum(uploads[:2])
+    eng.store.close()
+
+
+def test_store_pooled_real_codec_values_and_ledger(rng):
+    """Real transit codec: pooled uploads carry actual packed payloads —
+    device values match fp16 within the symmetric-quantization bound and
+    HOST→DEVICE bytes equal chunk_bytes × codec_ratio(codec, chunk)
+    EXACTLY (θ=1), or full fp16 bytes (θ=0)."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    v = rng.randn(64, 2, 8).astype(np.float16)
+    for theta, codec in ((1.0, "int4"), (1.0, "int8"), (0.0, "int4")):
+        st = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec=codec,
+                           use_pool=True, real_codec=True)
+        st.ingest(0, k, v, {c: HOST for c in range(4)})
+        slots, nsel, fst = st.fetch_chunks_pooled(
+            0, {0: [0, 1, 2, 3]}, theta=theta)
+        assert list(nsel) == [4]
+        billed = st.log.bytes[(HOST, DEVICE, "kv")]
+        if theta == 1.0:
+            assert fst.compressed == 4
+            assert billed == 4 * st.chunk_bytes * compression.codec_ratio(
+                codec, group=st.chunk)
+        else:
+            assert fst.compressed == 0
+            assert billed == 4 * float(st.chunk_bytes)
+        kv_slab = np.asarray(st.pools[0].kv)
+        kd = kv_slab[np.asarray(slots)[0], 0]            # (4, 16, 2, 8)
+        vd = kv_slab[np.asarray(slots)[0], 1]
+        if theta == 0.0:
+            np.testing.assert_array_equal(kd.reshape(64, 2, 8), k)
+        else:
+            _, scale_k = compression.quantize_chunks(
+                k.reshape(4, 16, 2, 8), codec)
+            bound = scale_k.reshape(4, 1, 2, 8) / 2 + 2e-3
+            err = np.abs(kd.astype(np.float32)
+                         - k.reshape(4, 16, 2, 8).astype(np.float32))
+            assert np.all(err <= bound)
+            assert np.any(vd != v.reshape(4, 16, 2, 8))  # really quantized
+        # second fetch: fully resident, zero new bytes
+        before = st.log.bytes[(HOST, DEVICE, "kv")]
+        st.fetch_chunks_pooled(0, {0: [0, 1, 2, 3]}, theta=theta)
+        assert st.log.bytes[(HOST, DEVICE, "kv")] == before
+        st.close()
+
+
+def test_real_codec_engine_ledger_is_exact(setup, rng):
+    """Live real-codec engine: total H2D "kv" bytes == packed uploads ×
+    packed bytes + plain uploads × fp16 bytes, exactly."""
+    cfg, params = setup
+    prompts = [rng.randint(2, cfg.vocab_size, 48)]
+    _, eng, _, _ = _decode_streams(
+        cfg, params, prompts, _ecfg(pooled=True, pipeline=True,
+                                    real_codec=True), n_new=4)
+    st = eng.store
+    billed = st.log.bytes.get((HOST, DEVICE, "kv"), 0.0)
+    expect = (st.codec_uploads * st._packed_bytes()
+              + st.plain_uploads * float(st.chunk_bytes))
+    assert billed == pytest.approx(expect, rel=0, abs=1e-6)
+    assert st.codec_uploads + st.plain_uploads > 0
+    st.close()
+
+
+def test_stage_host_prevents_double_disk_read(rng):
+    """Speculative staging re-tiers chunks HOST, so the true fetch finds
+    the copy and bills NO second disk read — without that, DTP prefetch
+    would double the disk ledger and hide nothing."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    st = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec=None,
+                       use_pool=True)
+    st.ingest(0, k, k, {c: DISK for c in range(4)})
+    assert st.stage_host(0, {0: [0, 1]}) == 2
+    d0 = st.log.bytes[(DISK, HOST, "kv")]
+    assert d0 == 2 * st.chunk_bytes
+    _, _, fst = st.fetch_chunks_pooled(0, {0: [0, 1]})
+    assert fst.disk_reads == 0
+    assert st.log.bytes[(DISK, HOST, "kv")] == d0
+    # staging twice is also idempotent
+    assert st.stage_host(0, {0: [0, 1]}) == 0
+    st.close()
+
+
+def test_attend_masks_unwritten_tail_row(rng):
+    """The grid mask is strict (`pos < length`): the not-yet-appended row
+    at pos == length must not leak into attention — garbage there (e.g. a
+    released sequence's stale KV in a reused slot) cannot change output."""
+    import jax.numpy as jnp
+    from repro.serving.engine import _attend_pooled
+    B, nmax, c, Hkv, hd, H = 1, 1, 16, 2, 8, 4
+    length = 9                                    # mid-chunk tail
+    q = jnp.asarray(rng.randn(B, 1, H, hd).astype(np.float32))
+    k_new = jnp.asarray(rng.randn(B, 1, Hkv, hd).astype(np.float32))
+    v_new = jnp.asarray(rng.randn(B, 1, Hkv, hd).astype(np.float32))
+    wo = jnp.asarray(rng.randn(H * hd, 16).astype(np.float32))
+    slab = rng.randn(2, 2, c, Hkv, hd).astype(np.float16)
+    slab[0, :, length:] = 0.0                     # rows past the cache tail
+    slots = jnp.zeros((B, nmax), jnp.int32)
+    ids = jnp.zeros((B, nmax), jnp.int32)
+    lens = jnp.full((B,), length, jnp.int32)
+    y0 = np.asarray(_attend_pooled(q, jnp.asarray(slab), slots, ids, lens,
+                                   k_new, v_new, wo, attn_softcap=None))
+    slab[0, :, length] = 999.0                    # garbage at pos == length
+    y1 = np.asarray(_attend_pooled(q, jnp.asarray(slab), slots, ids, lens,
+                                   k_new, v_new, wo, attn_softcap=None))
+    np.testing.assert_array_equal(y0, y1)
+
+
+def test_device_pool_lru_eviction_order(rng):
+    """Pool eviction is LRU over (seq, chunk) with O(1) OrderedDict ops:
+    touching a resident chunk saves it; the least-recently-used non-pinned
+    resident is evicted and its tier label returns to host."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    st = TieredKVStore(1, 8, 16, 2, 8, n_seqs=1, transit_codec=None,
+                       use_pool=True, pool_slots=3)
+    st.ingest(0, np.tile(k, (2, 1, 1)), np.tile(k, (2, 1, 1)),
+              {c: HOST for c in range(8)})
+    st.fetch_chunks_pooled(0, {0: [0, 1, 2]})     # residency: 0, 1, 2
+    st.fetch_chunks_pooled(0, {0: [0]})           # touch 0 → LRU is 1
+    st.fetch_chunks_pooled(0, {0: [3]})           # evicts 1
+    assert set(st.pools[0].slot_of) == {(0, 0), (0, 2), (0, 3)}
+    assert st.tier[0, 0, 1] == HOST
+    assert st.tier[0, 0, 3] == DEVICE
+    st.fetch_chunks_pooled(0, {0: [4]})           # evicts 2 (next LRU)
+    assert set(st.pools[0].slot_of) == {(0, 0), (0, 3), (0, 4)}
+    st.close()
+
+
+def test_legacy_device_lru_eviction_order(rng):
+    """Legacy dict-tier eviction is LRU too (OrderedDict front pop — the
+    old min-scan was O(n) per demotion)."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    st = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec=None,
+                       device_budget=3)
+    st.ingest(0, k, k, {c: HOST for c in range(4)})
+    st.fetch_chunks(0, [0, 1, 2])
+    st.fetch_chunks(0, [0])                       # touch 0 → LRU is 1
+    st.fetch_chunks(0, [3])                       # evicts 1, not 0
+    assert set(st._dev_k) == {(0, 0, 0), (0, 0, 2), (0, 0, 3)}
+    assert st.tier[0, 0, 1] == HOST
+    st.close()
+
+
+def test_read_abstracts_batch_matches_per_seq(rng):
+    """Vectorized abstract stack: same values and same per-seq abstract
+    billing as the per-sequence read_abstracts loop."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    a = TieredKVStore(1, 4, 16, 2, 8, n_seqs=2, transit_codec=None)
+    b = TieredKVStore(1, 4, 16, 2, 8, n_seqs=2, transit_codec=None)
+    for st in (a, b):
+        st.ingest(0, k, k, {0: HOST, 1: DISK, 2: DISK, 3: HOST}, seq=0)
+        st.ingest(0, k, k, {c: DISK for c in range(4)}, seq=1)
+    sel = {0: [0, 1, 2, 3], 1: [1, 3]}
+    km, kn, billed = a.read_abstracts_batch(0, sel)
+    for i, (s, chunks) in enumerate(sel.items()):
+        km_ref, kn_ref = b.read_abstracts(0, chunks, seq=s)
+        np.testing.assert_array_equal(km[i, :len(chunks)], km_ref)
+        np.testing.assert_array_equal(kn[i, :len(chunks)], kn_ref)
+        assert billed[s] == b.seq_logs[s].total(src=DISK, kind="abstract")
+    assert a.log.total(src=DISK, kind="abstract") == \
+        b.log.total(src=DISK, kind="abstract")
+    a.close()
+    b.close()
+
+
+def test_append_tokens_batch_matches_sequential(rng):
+    """Batched decode-append == per-token appends: disk replica, abstract,
+    host mirrors and byte billing all line up."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    a = TieredKVStore(1, 8, 16, 2, 8, n_seqs=2, transit_codec=None)
+    b = TieredKVStore(1, 8, 16, 2, 8, n_seqs=2, transit_codec=None)
+    for st in (a, b):
+        for s in (0, 1):
+            st.ingest(0, k, k, {c: HOST for c in range(4)}, seq=s)
+    newk = rng.randn(2, 2, 8).astype(np.float16)
+    newv = rng.randn(2, 2, 8).astype(np.float16)
+    a.append_tokens_batch(0, np.array([64, 70]), newk, newv, seqs=[0, 1])
+    b.append_token(0, 64, newk[0], newv[0], seq=0)
+    b.append_token(0, 70, newk[1], newv[1], seq=1)
+    np.testing.assert_array_equal(np.asarray(a._disk), np.asarray(b._disk))
+    np.testing.assert_array_equal(a._abs_km, b._abs_km)
+    np.testing.assert_array_equal(a._abs_kn, b._abs_kn)
+    assert a.log.bytes == b.log.bytes
+    a.close()
+    b.close()
 
 
 def test_store_device_budget_lru(rng):

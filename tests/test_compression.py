@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.compression import (codec_ratio, dequantize, quantize,
+from repro.core.compression import (codec_ratio, dequantize, dequantize_chunks,
+                                    quantize, quantize_chunks,
                                     quantization_rmse)
 
 
@@ -34,3 +35,31 @@ def test_int4_packing_halves_bytes(rng):
 def test_rmse_ordering(rng):
     x = rng.randn(4, 128, 64).astype(np.float32)
     assert quantization_rmse(x, "int8") < quantization_rmse(x, "int4") < 0.2
+
+
+@pytest.mark.parametrize("codec", ["int4", "int8"])
+def test_quantize_chunks_payload_matches_codec_ratio_exactly(rng, codec):
+    """The transit payload of a chunk stack is EXACTLY chunk_bytes ×
+    codec_ratio(codec, group=chunk) — the identity the store's byte
+    ledger relies on."""
+    n, c, H, hd = 5, 16, 2, 8
+    k = rng.randn(n, c, H, hd).astype(np.float16)
+    data, scale = quantize_chunks(k, codec)
+    payload = data.nbytes + scale.nbytes
+    fp16 = n * c * H * hd * 2
+    assert payload == fp16 * codec_ratio(codec, group=c)
+    # K+V per store chunk: both tensors scale identically
+    assert codec_ratio(codec, group=c) == pytest.approx(
+        {"int4": 0.25, "int8": 0.5}[codec] + 2.0 / c)
+
+
+@pytest.mark.parametrize("codec", ["int4", "int8"])
+def test_quantize_chunks_roundtrip_bound(rng, codec):
+    """Chunk-grouped transit roundtrip obeys the scale/2 elementwise
+    bound of symmetric quantization."""
+    n, c, H, hd = 4, 32, 2, 8
+    k = (rng.randn(n, c, H, hd) * rng.uniform(0.1, 4)).astype(np.float16)
+    data, scale = quantize_chunks(k, codec)
+    kq = dequantize_chunks(data, scale, codec, H, hd, dtype=np.float32)
+    bound = scale.reshape(n, 1, H, hd) / 2 + 2e-3   # + fp16 storage noise
+    assert np.all(np.abs(kq - k.astype(np.float32)) <= bound)
