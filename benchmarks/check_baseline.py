@@ -1,0 +1,110 @@
+"""Bench-smoke regression gate.
+
+Compares a ``benchmarks/run.py --smoke`` CSV against the checked-in
+``benchmarks/BENCH_baseline.json`` and fails (exit 1) when any gated
+latency metric regresses past the baseline × tolerance — so CI catches a
+serving-path slowdown instead of only checking the benches still run.
+
+The tolerance is deliberately generous (CI runners differ wildly from the
+box that produced the baseline); the gate exists to catch order-of-
+magnitude regressions — a serialized pipeline, a lost overlap, a per-round
+recompile — not single-digit-percent noise.  A gated metric DISAPPEARING
+from the CSV also fails: benches must keep emitting what the gate watches.
+
+Usage:
+    python benchmarks/run.py --smoke | tee bench.csv
+    python benchmarks/check_baseline.py bench.csv            # gate
+    python benchmarks/check_baseline.py bench.csv --update   # refresh json
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict
+
+_DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "BENCH_baseline.json")
+
+# the serving-path latencies this PR series optimizes: decode round time
+# (pooled sync + pipelined) and TTFT (admission serial/overlapped, queued
+# arrivals) — all in us as emitted by benchmarks.common.emit
+GATED = [
+    "fig13/engine/round/serial",
+    "fig13/engine/round/pipelined",
+    "fig13/admit/engine/serial",
+    "fig13/admit/engine/overlapped",
+    "fig15/queued/serial/mean_ttft",
+    "fig15/queued/overlap/mean_ttft",
+]
+
+
+def parse_csv(path: str) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    with open(path) as fh:
+        for line in fh:
+            parts = line.strip().split(",")
+            if len(parts) < 2 or parts[0] in ("name", ""):
+                continue
+            try:
+                out[parts[0]] = float(parts[1])
+            except ValueError:
+                continue
+    return out
+
+
+def main() -> int:
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    if not args:
+        print(__doc__, file=sys.stderr)
+        return 2
+    rows = parse_csv(args[0])
+    baseline_path = _DEFAULT_BASELINE
+    for a in sys.argv[1:]:
+        if a.startswith("--baseline="):
+            baseline_path = a.split("=", 1)[1]
+
+    if "--update" in sys.argv:
+        missing = [n for n in GATED if n not in rows]
+        if missing:
+            print(f"refusing to update: CSV lacks {missing}",
+                  file=sys.stderr)
+            return 1
+        data = {"tolerance": 4.0,
+                "metrics_us": {n: round(rows[n], 1) for n in GATED}}
+        with open(baseline_path, "w") as fh:
+            json.dump(data, fh, indent=2)
+            fh.write("\n")
+        print(f"baseline written: {baseline_path}")
+        return 0
+
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    tol = float(base.get("tolerance", 4.0))
+    failures = []
+    for name, want_us in base["metrics_us"].items():
+        got = rows.get(name)
+        if got is None:
+            failures.append(f"{name}: MISSING from CSV (baseline "
+                            f"{want_us:.0f}us)")
+            continue
+        limit = want_us * tol
+        verdict = "ok" if got <= limit else "REGRESSION"
+        print(f"{name}: {got:.0f}us vs baseline {want_us:.0f}us "
+              f"(limit {limit:.0f}us, x{tol:.1f}) -> {verdict}")
+        if got > limit:
+            failures.append(f"{name}: {got:.0f}us > {limit:.0f}us "
+                            f"({got / want_us:.1f}x baseline)")
+    if failures:
+        print("\nbench smoke regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("bench smoke regression gate passed "
+          f"({len(base['metrics_us'])} metrics, x{tol:.1f} tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

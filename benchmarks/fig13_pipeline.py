@@ -1,11 +1,13 @@
 """Paper Fig. 13: decode-step timelines — serial vs prefetch-pipelined vs
 DTP with dynamic compression (GPU idle time is the paper's target metric).
 
-Two parts: the analytic event-timeline model (the original figure), and a
+Three parts: the analytic event-timeline model (the original figure), a
 MEASURED decode-round breakdown on the live engine — eval / disk gather /
 upload / attend wall-clock for the synchronous pooled engine next to the
-pipelined engine's round time, so the simulated overlap can be checked
-against what the engine actually achieves.
+pipelined engine's round time — and a TTFT (admission) breakdown: prefill
+compute vs the tier-write stall, serial ingest vs the write-behind
+layer-streamed path, analytic (``prefill_schedule``) and measured
+(``engine.admit_profiles``) side by side.
 """
 
 from __future__ import annotations
@@ -17,7 +19,8 @@ import numpy as np
 from benchmarks import common
 from benchmarks.common import emit
 from repro.configs import get_config
-from repro.core.pipeline import TierBW, schedule
+from repro.core.pipeline import (PrefillLayerCost, TierBW, prefill_schedule,
+                                 schedule)
 from repro.serving.simulator import HWCfg, ServeCfg, decode_step_costs
 
 
@@ -85,6 +88,67 @@ def run_engine_overlap() -> None:
          f"overlap_gain={total_sync / max(total_pipe, 1e-12):.2f}x")
 
 
+def run_admission_ttft() -> None:
+    """TTFT breakdown: prefill compute vs tier-write stall, serial vs
+    write-behind overlapped ingest — the analytic ``prefill_schedule``
+    model next to measured ``add_sequence`` wall-clock."""
+    # analytic: 7B-class geometry, 8k prompt, per-layer replica+abstract
+    # bytes against the sustained disk link
+    cfg = get_config("longchat-7b-32k")
+    hw = HWCfg()
+    prompt = 8192
+    d = cfg.n_kv_heads * cfg.hd
+    replica = prompt * d * 2 * 2 + (prompt // cfg.leoam.chunk_size) * d * 2 * 2
+    flops = 2 * prompt * cfg.d_model * (4 * cfg.d_model + 2 * 4 * cfg.d_model)
+    layers = [PrefillLayerCost(compute=flops / hw.gpu_flops,
+                               replica_bytes=float(replica))
+              for _ in range(cfg.n_layers)]
+    serial = prefill_schedule(layers, hw.disk_bw, write_behind=False)
+    wb = prefill_schedule(layers, hw.disk_bw, write_behind=True)
+    stall = serial.compute[-1][1] - wb.compute[-1][1]
+    emit("fig13/admit/model/serial_ttft", serial.compute[-1][1] * 1e6,
+         f"tier_write_stall={stall * 1e3:.1f}ms")
+    emit("fig13/admit/model/write_behind_ttft", wb.compute[-1][1] * 1e6,
+         f"gain={serial.compute[-1][1] / max(wb.compute[-1][1], 1e-12):.2f}x,"
+         f"write_tail={(wb.makespan - wb.compute[-1][1]) * 1e3:.1f}ms")
+
+    # measured: smoke engine, serial vs overlapped admission wall-clock
+    import jax
+    from repro.models import lm
+    from repro.serving.engine import BatchedLeoAMEngine, EngineCfg
+
+    mcfg = get_config("longchat-7b-32k", smoke=True)
+    mcfg = dataclasses.replace(
+        mcfg, leoam=dataclasses.replace(mcfg.leoam, chunk_size=16,
+                                        importance_rate=0.3, early_rate=0.5,
+                                        min_seq_for_sparse=32))
+    params = lm.init(mcfg, jax.random.PRNGKey(1))
+    rng = np.random.RandomState(0)
+    n_adds = 3 if common.SMOKE else 5
+    prompts = [rng.randint(2, mcfg.vocab_size, 96) for _ in range(n_adds)]
+
+    def admits(overlap: bool):
+        eng = BatchedLeoAMEngine(
+            mcfg, params, EngineCfg(max_len=160, overlap_ingest=overlap),
+            max_seqs=n_adds)
+        for p in prompts:
+            eng.add_sequence(p)
+        profs = eng.admit_profiles[1:]        # drop the jit-warmup admit
+        eng.store.close()                     # fences any write-behind tail
+        return profs
+
+    ser = admits(False)
+    ovl = admits(True)
+    t_ser = float(np.mean([p["total_s"] for p in ser]))
+    t_ovl = float(np.mean([p["total_s"] for p in ovl]))
+    emit("fig13/admit/engine/serial", t_ser * 1e6,
+         f"prefill={np.mean([p['prefill_s'] for p in ser]) * 1e3:.1f}ms,"
+         f"tier_write={np.mean([p['ingest_s'] for p in ser]) * 1e3:.1f}ms")
+    emit("fig13/admit/engine/overlapped", t_ovl * 1e6,
+         f"gain={t_ser / max(t_ovl, 1e-12):.2f}x")
+
+
 def run() -> None:
     run_simulated()
     run_engine_overlap()
+    run_admission_ttft()

@@ -70,6 +70,25 @@ def dequantize(qkv: QuantizedKV, group: int = 64,
     return out.reshape(qkv.shape).astype(dtype)
 
 
+def packed_dim(codec: str, d: int) -> int:
+    """Payload channel width of :func:`quantize_chunks` for ``d`` fp16
+    channels: int4 packs two nibbles per byte along the channel dim."""
+    if codec == "int4":
+        assert d % 2 == 0, d
+        return d // 2
+    assert codec == "int8", codec
+    return d
+
+
+def packed_chunk_bytes(codec: str, chunk: int, d: int) -> int:
+    """Exact packed bytes of ONE (chunk, d) plane through
+    :func:`quantize_chunks` (int payload + one f32 scale per channel).
+    ``2 * packed_chunk_bytes == chunk_bytes * codec_ratio(codec, chunk)``
+    for a K+V chunk pair — the sidecar/billing identity the offload store
+    relies on (tested)."""
+    return chunk * packed_dim(codec, d) + 4 * d
+
+
 def codec_ratio(codec: str, group: int = 64) -> float:
     """Compressed bytes / fp16 bytes (scales amortized over ``group``).
 

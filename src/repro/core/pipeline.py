@@ -13,6 +13,14 @@ Two parts:
   layer pipeline: disk→CPU abstract loads, CPU evaluation, CPU→GPU selected-KV
   transfer, GPU layer compute; with per-layer overlap (the paper's Fig. 13).
   The discrete-event serving simulator and the Fig.13/16 benchmarks use it.
+
+* :func:`prefill_schedule` — the ADMISSION-side counterpart: per-layer
+  prefill compute vs the layer's tier writes (disk replica + abstract,
+  optionally packed through the transit codec).  Serial admission stalls
+  compute behind every write; write-behind admission drains the writes on
+  the disk link under the remaining layers' compute, so TTFT collapses to
+  the compute chain plus whatever write tail outlives it — the model the
+  fig13 TTFT-breakdown benchmark checks the live engine against.
 """
 
 from __future__ import annotations
@@ -60,6 +68,45 @@ def theta_from_measured(upload_bytes: float, disk_bytes: float,
     return optimal_theta(upload_bytes, bw.pcie,
                          bw.delta if delta is None else delta,
                          disk_bytes / bw.disk, compute_s, bw.kappa)
+
+
+@dataclass
+class PrefillLayerCost:
+    """Per-layer admission costs: prefill compute + tier-write bytes."""
+    compute: float                 # GPU prefill compute for the layer
+    replica_bytes: float           # host->disk replica + abstract bytes
+                                   # (packed bytes when the sidecar is on)
+
+
+def prefill_schedule(layers: Sequence["PrefillLayerCost"], disk_bw: float, *,
+                     write_behind: bool = True) -> "Timeline":
+    """Admission (TTFT) timeline: layer-streamed prefill vs serial ingest.
+
+    Serial: each layer's replica/abstract writes stall the admission chain
+    (compute → write → next layer).  Write-behind: writes queue on the disk
+    link as soon as their layer's compute finishes and drain under the
+    remaining layers' compute; the first token is ready at the end of the
+    compute chain (``Timeline.compute[-1][1]``), while ``makespan`` extends
+    to the last write landing — the window the completion fence covers.
+    """
+    tl = Timeline()
+    t = 0.0
+    disk_free = 0.0
+    for lc in layers:
+        c0, c1 = t, t + lc.compute
+        w = lc.replica_bytes / disk_bw
+        if write_behind:
+            x0 = max(c1, disk_free)
+            x1 = x0 + w
+            disk_free = x1
+            t = c1
+        else:
+            x0, x1 = c1, c1 + w
+            t = x1
+        tl.compute.append((c0, c1))
+        tl.transfer.append((x0, x1))
+        tl.thetas.append(0.0)
+    return tl
 
 
 @dataclass

@@ -38,8 +38,22 @@ disk→host.  Predictions only move residency, never values — a miss falls
 back to the synchronous path, so pipelined output is bit-identical to
 ``pipeline=False``.
 
+The ADMISSION path is pipelined too (PR 3): ``add_sequence`` streams each
+attention layer's K/V into the tier store as it is forced off the device,
+with the disk replica + abstract writes running write-behind on the shared
+prefetch executor under the remaining layers' prefill compute
+(``overlap_ingest``; a per-sequence completion fence at decode-round entry
+and release keeps every read ordered after the writes).
+``add_sequence_async`` runs the whole prefill+ingest on a one-worker
+admission executor so new requests admit UNDER the active batch's decode
+rounds — only the store's lock-protected critical sections serialize, and
+the new sequence defers device-pool placement so the decode thread's
+attention gathers never race a pool scatter.  Both are token-identical to
+the serial path (tested): write-behind moves bytes, never values.
+
 ``pooled=False, pipeline=False`` reproduces the PR-1 synchronous engine
-(full working-set re-upload per layer) for A/B tests and benchmarks.
+(full working-set re-upload per layer) for A/B tests and benchmarks;
+``overlap_ingest=False`` reproduces the PR-2 serial admission path.
 
 ``LeoAMEngine`` is the single-sequence view: a thin wrapper over a B=1
 batched engine preserving the original prefill/decode_step/generate API.
@@ -85,6 +99,24 @@ class EngineCfg:
     pipeline: bool = True            # async DTP overlap (prefetch thread)
     real_codec: bool = False         # carry actual packed int4/int8 transit
                                      # payloads (vs ledger-only scaling)
+    overlap_ingest: bool = True      # write-behind prefill ingest: replica/
+                                     # abstract writes ride the shared
+                                     # prefetch executor under the next
+                                     # layer's prefill compute (fenced);
+                                     # False = PR-2 serial ingest
+    jit_prefill: bool = True         # compile lm.prefill per prompt length
+                                     # (one XLA call per admission instead
+                                     # of thousands of GIL-bound op
+                                     # dispatches — admission under decode
+                                     # then truly overlaps, and TTFT drops
+                                     # even standalone)
+    disk_sidecar: bool = False       # packed int4/int8 disk replicas: tier
+                                     # writes + disk->host promotions move
+                                     # packed bytes (fp16 stays as the
+                                     # lossless fallback)
+    sidecar_lossless: bool = False   # flag the fallback on: promotions
+                                     # read the fp16 replica (full bytes)
+                                     # even when the sidecar is valid
     profile: bool = False            # block per stage, fill round_profiles
     # measured-cost θ balance (paper §4.4); defaults mirror TierBW
     pcie_bw: float = 16e9
@@ -94,8 +126,16 @@ class EngineCfg:
 
 # one process-wide DTP prefetch worker, shared by every pipelined engine:
 # per-engine executors would leak a thread per engine (benchmark sweeps
-# build dozens), and a single queue preserves per-engine FIFO ordering
+# build dozens), and a single queue preserves per-engine FIFO ordering.
+# Write-behind ingest rides the SAME worker: its FIFO order guarantees a
+# layer's replica/abstract writes land before any prefetch submitted later,
+# and the per-seq ingest fence covers everything else.
 _PF_EXECUTOR: Optional[ThreadPoolExecutor] = None
+
+# a separate one-worker admission executor runs whole add_sequence calls
+# (prefill + ingest) under the active batch's decode rounds — on the DTP
+# worker a long prefill would stall every decode round's prefetch
+_ADMIT_EXECUTOR: Optional[ThreadPoolExecutor] = None
 
 
 def _prefetch_executor() -> ThreadPoolExecutor:
@@ -104,6 +144,14 @@ def _prefetch_executor() -> ThreadPoolExecutor:
         _PF_EXECUTOR = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix="leoam-dtp")
     return _PF_EXECUTOR
+
+
+def _admit_executor() -> ThreadPoolExecutor:
+    global _ADMIT_EXECUTOR
+    if _ADMIT_EXECUTOR is None:
+        _ADMIT_EXECUTOR = ThreadPoolExecutor(max_workers=1,
+                                             thread_name_prefix="leoam-admit")
+    return _ADMIT_EXECUTOR
 
 
 @dataclass
@@ -214,17 +262,22 @@ class BatchedLeoAMEngine:
             cfg.n_kv_heads, cfg.hd, n_seqs=max_seqs,
             transit_codec=ecfg.transit_codec, device_budget=budget,
             use_pool=ecfg.pooled, pool_slots=device_chunk_budget,
-            real_codec=ecfg.real_codec)
+            real_codec=ecfg.real_codec, disk_sidecar=ecfg.disk_sidecar,
+            sidecar_lossless=ecfg.sidecar_lossless)
         self.seqs: Dict[int, _SeqState] = {}
         self._free: List[int] = list(range(max_seqs - 1, -1, -1))
         # DTP state: prefetch executor, per-(seq, layer) previous-round
         # selections, per-layer abstract cache, per-layer measured costs
         self._executor = _prefetch_executor() if ecfg.pipeline else None
+        self._ingest_exec = (_prefetch_executor() if ecfg.overlap_ingest
+                             else None)
         self._pf_futs: Dict[int, Future] = {}
         self._abs_cache: Dict[int, Tuple] = {}
         self._prev_sels: Dict[Tuple[int, int], List[int]] = {}
         self._lcost: Dict[int, Dict[str, float]] = {}
         self.round_profiles: List[Dict[str, float]] = []
+        self.admit_profiles: List[Dict[str, float]] = []
+        self._prefill_cache: Dict[int, Any] = {}
 
     @property
     def free_slots(self) -> int:
@@ -238,19 +291,50 @@ class BatchedLeoAMEngine:
         """Prefill one request into a free store slot.
 
         tokens: (S,).  Runs model prefill; K/V moves into the shared tier
-        store under this sequence's slot.  Returns (seq id, first token).
+        store under this sequence's slot.  With ``overlap_ingest`` each
+        attention layer's K/V is handed to the store as soon as it is
+        forced off the device, and the layer's disk replica + abstract
+        writes run write-behind on the shared prefetch executor, overlapped
+        under the remaining layers' prefill compute; ``decode_round`` and
+        ``release`` fence them before any read.  Returns (seq id, first
+        token).
         """
         assert self._free, "engine is at max_seqs capacity"
+        self._check_prompt(tokens)     # validate BEFORE taking the slot
+        sid = self._free.pop()
+        return self._admit(sid, tokens, pool_place=True)
+
+    def add_sequence_async(self, tokens: np.ndarray) -> Future:
+        """Admission under decode: reserve a slot NOW, run the prefill +
+        ingest on the process-wide admission worker, overlapped with the
+        active batch's decode rounds — only the store-mutation critical
+        sections serialize (the store lock).  The admitted sequence skips
+        initial device-pool placement (the pool slab is read by decode's
+        attention gathers outside the lock; the first decode round promotes
+        its chunks instead — residency-only, token streams are unchanged).
+        Returns a Future resolving to (seq id, first token); the sequence
+        may join a decode round only after it resolves."""
+        assert self._free, "engine is at max_seqs capacity"
+        self._check_prompt(tokens)     # validate BEFORE taking the slot
+        sid = self._free.pop()
+        return _admit_executor().submit(self._admit, sid, tokens,
+                                        pool_place=False)
+
+    def _check_prompt(self, tokens: np.ndarray) -> None:
+        """Reject oversized prompts before a slot is reserved — an assert
+        after the ``_free.pop()`` would leak the slot."""
+        S = len(tokens)
+        assert S < self.ecfg.max_len, (
+            f"prompt length {S} needs < max_len={self.ecfg.max_len} "
+            f"(decode appends past the prompt)")
+
+    def _admit(self, sid: int, tokens: np.ndarray, *,
+               pool_place: bool) -> Tuple[int, int]:
         cfg, ecfg = self.cfg, self.ecfg
         S = len(tokens)
-        assert S < ecfg.max_len, (
-            f"prompt length {S} needs < max_len={ecfg.max_len} "
-            f"(decode appends past the prompt)")
-        sid = self._free.pop()
+        t0 = time.perf_counter()
         batch = {"tokens": jnp.asarray(np.asarray(tokens)[None], jnp.int32)}
-        logits, cache = lm.prefill(self.params, cfg, batch,
-                                   max_len=ecfg.max_len)
-        cache = jax.tree.map(np.asarray, cache)
+        logits, cache = self._prefill(batch, S)
 
         n_gpu = max(1, int(self.n_chunks * ecfg.gpu_chunk_frac))
         n_cpu = max(1, int(self.n_chunks * ecfg.cpu_chunk_frac))
@@ -258,25 +342,103 @@ class BatchedLeoAMEngine:
         for c in range(self.n_chunks):
             placement[c] = DEVICE if c < n_gpu else (
                 HOST if c < n_gpu + n_cpu else DISK)
-        for li, layer in enumerate(self.attn_layers):
-            k, v = self._layer_kv(cache, layer)
-            early = layer < cfg.leoam.early_layers
-            pl = dict(placement)
-            if early:                   # early layers never go to disk (§4.3)
-                pl = {c: (DEVICE if placement[c] == DEVICE else HOST)
-                      for c in placement}
-            self.store.ingest(li, k[0], v[0], pl, seq=sid)
+        prefill_s = ingest_s = 0.0
+        if self._ingest_exec is None:
+            # serial path (PR-2): force the whole prefill, then ingest and
+            # write every layer's replicas inline — the A/B baseline the
+            # fig13 TTFT breakdown measures the tier-write stall against
+            cache = jax.tree.map(np.asarray, cache)
+            prefill_s = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            for li, layer in enumerate(self.attn_layers):
+                k, v = self._layer_kv(cache, layer)
+                self.store.ingest(li, k[0], v[0],
+                                  self._layer_placement(layer, placement),
+                                  seq=sid, pool_place=pool_place)
+            ingest_s = time.perf_counter() - t1
+        else:
+            # layer-streamed: force each attention layer's K/V in layer
+            # order and hand it off immediately — the hot placement is
+            # synchronous, the replica/abstract writes go write-behind on
+            # the shared executor while later layers still compute
+            for li, layer in enumerate(self.attn_layers):
+                k, v = self._layer_kv(cache, layer)
+                t1 = time.perf_counter()
+                self.store.ingest(li, k[0], v[0],
+                                  self._layer_placement(layer, placement),
+                                  seq=sid, executor=self._ingest_exec,
+                                  pool_place=pool_place)
+                ingest_s += time.perf_counter() - t1
+            cache = jax.tree.map(np.asarray, cache)
+            prefill_s = time.perf_counter() - t0 - ingest_s
+        tok = int(np.argmax(np.asarray(logits)[0]))
         self.seqs[sid] = _SeqState(cache=cache, length=S,
                                    access=AccessTable(self.n_chunks))
-        return sid, int(np.argmax(np.asarray(logits)[0]))
+        self.admit_profiles.append({
+            "total_s": time.perf_counter() - t0, "prefill_s": prefill_s,
+            "ingest_s": ingest_s,
+            "overlapped": float(self._ingest_exec is not None)})
+        return sid, tok
+
+    def _prefill(self, batch: Dict[str, Any], S: int):
+        """Model prefill, jit-compiled per prompt length.  One XLA call
+        replaces thousands of eager op dispatches: admission cost drops
+        several-fold, and the GIL is free for the decode thread while an
+        async admission's prefill executes (the overlap that makes
+        admission-under-decode pay off on a shared host)."""
+        if not self.ecfg.jit_prefill:
+            return lm.prefill(self.params, self.cfg, batch,
+                              max_len=self.ecfg.max_len)
+        fn = self._prefill_cache.get(S)
+        if fn is None:
+            cfg, max_len = self.cfg, self.ecfg.max_len
+            fn = jax.jit(lambda p, b: lm.prefill(p, cfg, b, max_len=max_len))
+            self._prefill_cache[S] = fn
+        return fn(self.params, batch)
+
+    def _layer_placement(self, layer: int,
+                         placement: Dict[int, str]) -> Dict[int, str]:
+        if layer < self.cfg.leoam.early_layers:
+            # early layers never go to disk (§4.3)
+            return {c: (DEVICE if placement[c] == DEVICE else HOST)
+                    for c in placement}
+        return dict(placement)
 
     def release(self, sid: int) -> None:
-        """Retire a sequence and recycle its store slot."""
+        """Retire a sequence and recycle its store slot.
+
+        Drains every in-flight future that may still reference the slot —
+        write-behind ingest writes (per-seq fence) and the DTP prefetch
+        worker's staged reads — BEFORE clearing the store, so a slow
+        replica write can never land in a recycled slot's fresh data."""
+        self.store.ingest_fence(sid)
+        for li in list(self._pf_futs):
+            fut = self._pf_futs.pop(li, None)
+            if fut is not None:
+                fut.result()
+        self._abs_cache.clear()
         self.store.clear_seq(sid)
         self.seqs.pop(sid, None)
         for key in [k for k in self._prev_sels if k[0] == sid]:
             self._prev_sels.pop(key, None)
         self._free.append(sid)
+
+    def pool_stats(self) -> Dict[str, float]:
+        """Live device-pool occupancy/hit counters (scheduler-facing)."""
+        return self.store.pool_stats()
+
+    def admission_need_chunks(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case per-round device working set of one request, in pool
+        slots per layer — what pool-aware admission charges a sequence
+        (far below the analytic ``max_len``-chunks worst case)."""
+        cfg, ecfg = self.cfg, self.ecfg
+        L = min(prompt_len + max_new, ecfg.max_len)
+        nv = -(-L // self.chunk)
+        rate = max(cfg.leoam.importance_rate, cfg.leoam.early_rate)
+        sel = -(-max(self.chunk, math.ceil(L * rate)) // self.chunk)
+        forced = (cfg.leoam.sink_chunks + cfg.leoam.recent_chunks
+                  + math.ceil(ecfg.hot_frac * nv))
+        return min(nv, sel + forced)
 
     def _layer_kv(self, cache, layer: int) -> Tuple[np.ndarray, np.ndarray]:
         """Pull (k, v) (B, S, Hkv, hd) for a layer out of a model cache."""
@@ -439,6 +601,8 @@ class BatchedLeoAMEngine:
         order = sorted(tokens)
         B = len(order)
         assert B > 0, "decode_round needs at least one sequence"
+        for sid in order:               # write-behind completion fence: no
+            self.store.ingest_fence(sid)  # read sees a half-written replica
         states = [self.seqs[sid] for sid in order]
         lengths = np.array([s.length for s in states], np.int64)
         x = jnp.asarray([[tokens[sid]] for sid in order], jnp.int32)
@@ -636,6 +800,10 @@ class LeoAMEngine:
     @property
     def round_profiles(self):
         return self._engine.round_profiles
+
+    @property
+    def admit_profiles(self):
+        return self._engine.admit_profiles
 
     @property
     def length(self) -> int:

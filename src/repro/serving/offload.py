@@ -28,6 +28,27 @@ Batched round support:
 * ``stage_host`` lets the engine's DTP prefetch thread speculatively pull
   predicted chunks disk→host under the previous layer's compute — a miss
   costs only the staging read, never a wrong output;
+* **write-behind prefill ingest**: ``ingest(..., executor=...)`` applies
+  the hot-tier placement synchronously (tier labels, host copies, pool
+  slots) and runs the cold half — the disk replica write, the packed
+  sidecar write, the LKA abstract update and their billing — on the given
+  executor.  Every deferred write is tracked as a per-sequence future;
+  :meth:`TieredKVStore.ingest_fence` is the COMPLETION FENCE: it blocks
+  until every in-flight cold write of the sequence has landed (and
+  re-raises worker exceptions), so a reader that fences first can never
+  observe a half-written replica or a stale abstract.  The engine fences
+  each sequence at decode-round entry and before releasing its slot; the
+  cold work itself takes the store lock, so fence callers must NOT hold it;
+* **packed int4 disk sidecar** (``disk_sidecar=True``): next to the fp16
+  replica memmap the store keeps ``kv_q.bin`` (int payload, two nibbles
+  per byte for int4) and ``kv_scale.bin`` (one f32 scale per channel per
+  chunk plane) — the layout of ``compression.quantize_chunks`` with
+  group == chunk, so one chunk's K+V sidecar bytes are EXACTLY
+  ``chunk_bytes * codec_ratio(codec, chunk)``.  Replica writes and
+  disk→host promotions then move packed bytes (billed at that exact
+  figure); decode appends invalidate the touched chunk's sidecar (its
+  per-chunk scales would be stale), falling back to the lossless fp16
+  replica, which also serves all reads when ``sidecar_lossless=True``;
 * per-sequence ``TrafficLog`` mirrors: every byte recorded in the shared
   ``log`` is also attributed to its sequence (retired sequences' logs move
   to ``retired_logs`` so reused slots audit fresh), and benchmarks assert
@@ -136,6 +157,12 @@ class DeviceChunkPool:
         # decode appends queue here and are folded into the next round's
         # slot upload — one slab update per (layer, round), not two
         self.pending: Dict[Tuple[int, int], Tuple[int, np.ndarray]] = {}
+        # deferred prefill placements (admission under decode): the ingest
+        # thread must never scatter into the slab the decode thread's
+        # attention reads, so device-bound chunks queue here and the NEXT
+        # pooled fetch folds them in — unbilled, exactly like the
+        # synchronous prefill placement (the KV was produced on device)
+        self.pending_place: Dict[Tuple[int, int], np.ndarray] = {}
         self.hits = 0
         self.misses = 0
         self.uploads = 0
@@ -172,12 +199,15 @@ class DeviceChunkPool:
     def evict(self, key: Tuple[int, int]) -> None:
         slot = self.slot_of.pop(key, None)
         self.pending.pop(key, None)
+        self.pending_place.pop(key, None)
         if slot is not None:
             self.free.append(slot)
 
     def evict_seq(self, seq: int) -> None:
         for key in [k for k in self.slot_of if k[0] == seq]:
             self.evict(key)
+        for key in [k for k in self.pending_place if k[0] == seq]:
+            self.pending_place.pop(key, None)
 
     def scatter(self, slots: Sequence[int], kv_new, *,
                 pad_to: Optional[int] = None,
@@ -260,13 +290,16 @@ class TieredKVStore:
                  transit_codec="int4", root: Optional[str] = None,
                  device_budget: Optional[int] = None,
                  use_pool: bool = False, pool_slots: Optional[int] = None,
-                 real_codec: bool = False):
+                 real_codec: bool = False, disk_sidecar: bool = False,
+                 sidecar_lossless: bool = False):
         self.n_seqs = n_seqs
         self.n_layers, self.n_chunks, self.chunk = n_layers, n_chunks, chunk
         self.kv_heads, self.head_dim = kv_heads, head_dim
         self.dtype = np.dtype(dtype)
         self.transit_codec = transit_codec
         self.real_codec = real_codec and transit_codec is not None
+        self.disk_sidecar = disk_sidecar and transit_codec is not None
+        self.sidecar_lossless = sidecar_lossless
         self.device_budget = device_budget
         self.tier: np.ndarray = np.full((n_seqs, n_layers, n_chunks), HOST,
                                         object)
@@ -302,6 +335,26 @@ class TieredKVStore:
         self._root = root or tempfile.mkdtemp(prefix="leoam_kv_")
         self._disk = np.memmap(os.path.join(self._root, "kv.bin"),
                                dtype=self.dtype, mode="w+", shape=shape)
+        # packed sidecar: quantize_chunks(group=chunk) layout per (seq,
+        # layer, chunk, K|V plane) — int payload + f32 per-channel scales.
+        # _sidecar_valid gates reads: decode appends invalidate the chunk
+        # (its scales go stale) and the fp16 replica serves as fallback.
+        self._disk_q = self._disk_scale = None
+        self._sidecar_valid = np.zeros((n_seqs, n_layers, n_chunks), bool)
+        if self.disk_sidecar:
+            d = kv_heads * head_dim
+            dq = compression.packed_dim(transit_codec, d)
+            self._disk_q = np.memmap(
+                os.path.join(self._root, "kv_q.bin"), dtype=np.int8,
+                mode="w+", shape=(n_seqs, n_layers, n_chunks, 2, chunk, dq))
+            self._disk_scale = np.memmap(
+                os.path.join(self._root, "kv_scale.bin"), dtype=np.float32,
+                mode="w+", shape=(n_seqs, n_layers, n_chunks, 2, d))
+        # write-behind ingest: per-seq in-flight cold-write futures; the
+        # fence pops under _futs_lock and waits OUTSIDE the store lock
+        # (workers need the store lock to land their writes)
+        self._ingest_futs: Dict[int, List] = defaultdict(list)
+        self._futs_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     @property
@@ -349,19 +402,58 @@ class TieredKVStore:
             self.transit_codec, group=self.chunk)
 
     def _disk_read_bytes(self) -> float:
-        """Disk→host promotion bytes: the memmap replica is fp16, so the
-        real-codec store bills the honest full read; the legacy store kept
-        the ledger-only codec scaling."""
-        return float(self.chunk_bytes) if self.real_codec \
+        """Disk→host promotion bytes for a chunk read off the FP16 replica:
+        the real-codec / sidecar stores bill the honest full read; the
+        legacy store kept the ledger-only codec scaling.  Sidecar-valid
+        chunks never pay this — they move :meth:`_packed_bytes` instead
+        (decided per key in :meth:`_stage_disk`)."""
+        return float(self.chunk_bytes) if (self.real_codec
+                                           or self.disk_sidecar) \
             else self._transit_bytes()
 
+    def _sidecar_ok(self, seq: int, layer: int, c: int) -> bool:
+        """True when the packed sidecar serves this chunk's disk reads."""
+        return (self.disk_sidecar and not self.sidecar_lossless
+                and bool(self._sidecar_valid[seq, layer, c]))
+
+    def _read_sidecar(self, layer: int, keys: Sequence[Tuple[int, int]]
+                      ) -> np.ndarray:
+        """Coalesced packed-sidecar read: dequantize K and V planes for
+        every (seq, chunk) key.  Returns (n, 2, chunk, Hkv, hd) in store
+        dtype."""
+        sq = np.array([s for s, _ in keys])
+        cq = np.array([c for _, c in keys])
+        data = np.asarray(self._disk_q[sq, layer, cq])      # (n, 2, c, dq)
+        scale = np.asarray(self._disk_scale[sq, layer, cq])  # (n, 2, d)
+        out = np.empty((len(keys), 2, self.chunk, self.kv_heads,
+                        self.head_dim), self.dtype)
+        for plane in (0, 1):
+            out[:, plane] = compression.dequantize_chunks(
+                data[:, plane], scale[:, plane], self.transit_codec,
+                self.kv_heads, self.head_dim, dtype=self.dtype)
+        return out
+
     def ingest(self, layer: int, k: np.ndarray, v: np.ndarray,
-               placement: Dict[int, str], *, seq: int = 0) -> None:
+               placement: Dict[int, str], *, seq: int = 0,
+               executor=None, pool_place: bool = True) -> None:
         """Store prefill KV.  k/v: (S, Hkv, hd).  Every chunk is replicated
-        to disk (with its abstract); ``placement`` assigns the hot tier."""
+        to disk (with its abstract); ``placement`` assigns the hot tier.
+
+        With ``executor`` the cold half (disk replica + sidecar + abstract
+        writes and their billing) runs write-behind on that executor; the
+        hot-tier placement is applied synchronously, so host/device reads
+        are immediately valid while disk/abstract reads need
+        :meth:`ingest_fence` first.  ``pool_place=False`` downgrades
+        would-be device-pool placements to HOST — used when ingest runs
+        concurrently with decode rounds, whose attention gathers read the
+        pool slab outside the store lock (the first fetch promotes the
+        chunks instead; residency-only, so outputs never change)."""
         with self._lock:
             S = k.shape[0]
             to_pool: List[Tuple[int, np.ndarray, np.ndarray]] = []
+            cids: List[int] = []
+            kcs: List[np.ndarray] = []
+            vcs: List[np.ndarray] = []
             for c in range(min(self.n_chunks,
                                (S + self.chunk - 1) // self.chunk)):
                 kc = k[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
@@ -370,13 +462,18 @@ class TieredKVStore:
                     pad = self.chunk - kc.shape[0]
                     kc = np.pad(kc, ((0, pad), (0, 0), (0, 0)))
                     vc = np.pad(vc, ((0, pad), (0, 0), (0, 0)))
-                self._disk[seq, layer, c, 0] = kc
-                self._disk[seq, layer, c, 1] = vc
-                self._abs_km[seq, layer, c] = kc.max(0)
-                self._abs_kn[seq, layer, c] = kc.min(0)
-                self._record(seq, HOST, DISK, "kv_replica", self.chunk_bytes)
-                self._record(seq, HOST, DISK, "abstract", self.abstract_bytes)
+                cids.append(c)
+                kcs.append(kc)
+                vcs.append(vc)
                 where = placement.get(c, HOST)
+                defer = where == DEVICE and self.use_pool and not pool_place
+                if defer:
+                    # decode thread reads the slab outside the lock: queue
+                    # the placement; the next pooled fetch folds it in
+                    # unbilled (device-produced KV, same as _pool_place)
+                    self.pools[layer].pending_place[(seq, c)] = \
+                        np.stack((kc, vc))
+                    where = HOST
                 self.tier[seq, layer, c] = where
                 key = (seq, layer, c)
                 if where in (HOST, DEVICE):
@@ -388,6 +485,67 @@ class TieredKVStore:
                         self._promote_device(key, kc, vc)
             if to_pool:
                 self._pool_place(layer, seq, to_pool)
+        if not cids:
+            return
+        ks = np.stack(kcs)
+        vs = np.stack(vcs)
+        if executor is None:
+            self._ingest_cold(layer, seq, cids, ks, vs)
+        else:
+            fut = executor.submit(self._ingest_cold, layer, seq, cids, ks, vs)
+            with self._futs_lock:
+                self._ingest_futs[seq].append(fut)
+
+    def _ingest_cold(self, layer: int, seq: int, cids: List[int],
+                     kcs: np.ndarray, vcs: np.ndarray) -> None:
+        """The write-behind half of :meth:`ingest`: fp16 replica + packed
+        sidecar + abstract writes, with their billing.  kcs/vcs: (n, chunk,
+        Hkv, hd) in store dtype, rows matching ``cids``."""
+        packed = None
+        if self.disk_sidecar:
+            # quantize OUTSIDE the lock (pure compute on private arrays) —
+            # holding it here would stall decode fetches for the duration
+            packed = (compression.quantize_chunks(kcs, self.transit_codec),
+                      compression.quantize_chunks(vcs, self.transit_codec))
+        with self._lock:
+            idx = np.asarray(cids, np.int64)
+            self._disk[seq, layer, idx, 0] = kcs
+            self._disk[seq, layer, idx, 1] = vcs
+            self._abs_km[seq, layer, idx] = kcs.max(1)
+            self._abs_kn[seq, layer, idx] = kcs.min(1)
+            rep_bytes = float(self.chunk_bytes)
+            if packed is not None:
+                (kd, ksc), (vd, vsc) = packed
+                n = len(cids)
+                self._disk_q[seq, layer, idx, 0] = kd.reshape(
+                    n, self.chunk, -1)
+                self._disk_q[seq, layer, idx, 1] = vd.reshape(
+                    n, self.chunk, -1)
+                self._disk_scale[seq, layer, idx, 0] = ksc
+                self._disk_scale[seq, layer, idx, 1] = vsc
+                self._sidecar_valid[seq, layer, idx] = True
+                rep_bytes = self._packed_bytes()
+            for _c in cids:
+                self._record(seq, HOST, DISK, "kv_replica", rep_bytes)
+                self._record(seq, HOST, DISK, "abstract", self.abstract_bytes)
+
+    def ingest_fence(self, seq: int) -> None:
+        """Block until every in-flight write-behind ingest of ``seq`` has
+        landed (replicas, sidecars, abstracts, billing).  Reads of the
+        sequence's disk tier or abstracts are only ordered after this
+        fence.  Must be called WITHOUT the store lock held — the pending
+        workers need it to complete."""
+        with self._futs_lock:
+            futs = self._ingest_futs.pop(seq, [])
+        for fut in futs:
+            fut.result()
+
+    def ingest_fence_all(self) -> None:
+        """Fence every sequence (shutdown path)."""
+        with self._futs_lock:
+            seqs = list(self._ingest_futs)
+        for s in seqs:
+            self.ingest_fence(s)
 
     def _pool_place(self, layer: int, seq: int,
                     items: List[Tuple[int, np.ndarray, np.ndarray]]) -> None:
@@ -480,9 +638,16 @@ class TieredKVStore:
                     vs.append(self._dev_v[key])
                     continue
                 if self.tier[seq, layer, c] == DISK or key not in self._host_k:
-                    kc = np.asarray(self._disk[seq, layer, c, 0])
-                    vc = np.asarray(self._disk[seq, layer, c, 1])
-                    self._record(seq, DISK, HOST, "kv", self._transit_bytes())
+                    if self._sidecar_ok(seq, layer, c):
+                        kv = self._read_sidecar(layer, [(seq, c)])[0]
+                        kc, vc = kv[0], kv[1]
+                        nb = self._packed_bytes()
+                    else:
+                        kc = np.asarray(self._disk[seq, layer, c, 0])
+                        vc = np.asarray(self._disk[seq, layer, c, 1])
+                        nb = (self._disk_read_bytes() if self.disk_sidecar
+                              else self._transit_bytes())
+                    self._record(seq, DISK, HOST, "kv", nb)
                     self._host_k[key], self._host_v[key] = kc, vc
                 kc, vc = self._host_k[key], self._host_v[key]
                 self._record(seq, HOST, DEVICE, "kv", self._transit_bytes())
@@ -517,7 +682,9 @@ class TieredKVStore:
 
             self._stage_disk(layer, [(seq, c) for seq, chunks in items
                                      for c in chunks],
-                             nbytes=self._transit_bytes(),
+                             nbytes=(self._disk_read_bytes()
+                                     if self.disk_sidecar
+                                     else self._transit_bytes()),
                              skip_pool=False)
 
             kg = np.zeros((B, nmax, self.chunk, self.kv_heads, self.head_dim),
@@ -544,12 +711,14 @@ class TieredKVStore:
     # ------------------------------------------------------------------
     def _stage_disk(self, layer: int, keys: Sequence[Tuple[int, int]], *,
                     nbytes: float, skip_pool: bool,
-                    retier: bool = False) -> int:
+                    retier: bool = False) -> Tuple[int, float]:
         """Coalesce disk→host reads for every key lacking a host copy.
-        One fancy-indexed memmap gather; bills ``nbytes`` per chunk read.
-        ``skip_pool``: pool-resident chunks need no host copy.  ``retier``
-        marks staged chunks HOST so a later fetch sees the copy instead of
-        re-reading (and re-billing) the disk."""
+        One fancy-indexed memmap gather per representation: sidecar-valid
+        chunks move packed bytes (dequantized host-side), the rest read
+        the fp16 replica and bill ``nbytes``.  ``skip_pool``: pool-resident
+        chunks need no host copy.  ``retier`` marks staged chunks HOST so a
+        later fetch sees the copy instead of re-reading (and re-billing)
+        the disk.  Returns (chunks read, bytes billed)."""
         need = []
         seen = set()
         for seq, c in keys:
@@ -565,17 +734,28 @@ class TieredKVStore:
             if key in self._host_k and self.tier[seq, layer, c] != DISK:
                 continue
             need.append((seq, c))
-        if need:
-            sq = np.array([s for s, _ in need])
-            cq = np.array([c for _, c in need])
-            blk = np.asarray(self._disk[sq, layer, cq])   # (n, 2, chunk, ...)
-            for (seq, c), kv in zip(need, blk):
+        billed = 0.0
+        need_q = [kc for kc in need if self._sidecar_ok(kc[0], layer, kc[1])]
+        need_fp = [kc for kc in need if not self._sidecar_ok(kc[0], layer,
+                                                             kc[1])]
+        for group in (need_fp, need_q):
+            if not group:
+                continue
+            per_chunk = self._packed_bytes() if group is need_q else nbytes
+            if group is need_q:
+                blk = self._read_sidecar(layer, group)
+            else:
+                sq = np.array([s for s, _ in group])
+                cq = np.array([c for _, c in group])
+                blk = np.asarray(self._disk[sq, layer, cq])  # (n, 2, c, ...)
+            for (seq, c), kv in zip(group, blk):
                 key = (seq, layer, c)
-                self._record(seq, DISK, HOST, "kv", nbytes)
+                self._record(seq, DISK, HOST, "kv", per_chunk)
+                billed += per_chunk
                 self._host_k[key], self._host_v[key] = kv[0], kv[1]
                 if retier:
                     self.tier[seq, layer, c] = HOST
-        return len(need)
+        return len(need), billed
 
     def stage_host(self, layer: int,
                    chunks_by_seq: Dict[int, Sequence[int]]) -> int:
@@ -587,9 +767,10 @@ class TieredKVStore:
         with self._lock:
             keys = [(seq, c) for seq, chunks in chunks_by_seq.items()
                     for c in chunks]
-            return self._stage_disk(layer, keys,
+            n, _ = self._stage_disk(layer, keys,
                                     nbytes=self._disk_read_bytes(),
                                     skip_pool=True, retier=True)
+            return n
 
     def fetch_chunks_pooled(self, layer: int,
                             chunks_by_seq: Dict[int, Sequence[int]], *,
@@ -621,14 +802,30 @@ class TieredKVStore:
                        else (nsel.max() if B else 0))
 
             t0 = time.perf_counter()
-            st.disk_reads = self._stage_disk(
+            st.disk_reads, st.disk_bytes = self._stage_disk(
                 layer, [(seq, c) for seq, chunks in items for c in chunks],
                 nbytes=self._disk_read_bytes(), skip_pool=True)
-            st.disk_bytes = st.disk_reads * self._disk_read_bytes()
             st.gather_s = time.perf_counter() - t0
 
             slots = np.zeros((B, nmax), np.int32)
             pinned = {(seq, c) for seq, chunks in items for c in chunks}
+            # fold deferred prefill placements (admission under decode)
+            # into this round's slab update — unbilled, the decode thread
+            # is the only pool mutator so the attend gather never races
+            place_slots: List[int] = []
+            place_kv: List[np.ndarray] = []
+            if pool.pending_place:
+                for key, kv in list(pool.pending_place.items()):
+                    pool.pending_place.pop(key)
+                    if not pool.free and all(v in pinned
+                                             for v in pool.slot_of):
+                        continue       # pool pinned solid: stays on host
+                    slot, evicted = pool.alloc(key, pinned)
+                    if evicted is not None:
+                        self.tier[evicted[0], layer, evicted[1]] = HOST
+                    self.tier[key[0], layer, key[1]] = DEVICE
+                    place_slots.append(slot)
+                    place_kv.append(kv)
             missing: List[Tuple[int, int, int, int]] = []   # (i, j, seq, c)
             for i, (seq, chunks) in enumerate(items):
                 for j, c in enumerate(chunks):
@@ -674,9 +871,16 @@ class TieredKVStore:
                             [kv_dev, jnp.asarray(kv_stack[n_comp:])])
                 else:
                     kv_dev = kv_stack
+                if place_kv:           # deferred placements ride along
+                    pk = np.stack(place_kv)
+                    kv_dev = jnp.concatenate([kv_dev, jnp.asarray(pk)]) \
+                        if isinstance(kv_dev, jnp.ndarray) \
+                        else np.concatenate([kv_dev, pk])
+                    up_slots = up_slots + place_slots
                 # bucket the scatter shape so repeated rounds reuse the
                 # compiled program instead of recompiling per delta size
-                pad_to = -(-m // self.upload_pad) * self.upload_pad
+                pad_to = -(-len(up_slots) // self.upload_pad) \
+                    * self.upload_pad
                 self._bill_flushed_rows(
                     pool.scatter(up_slots, kv_dev, pad_to=pad_to))
                 per_comp = self._packed_bytes() if self.real_codec \
@@ -691,18 +895,32 @@ class TieredKVStore:
                 st.compressed = n_comp
                 self.codec_uploads += n_comp
                 self.plain_uploads += m - n_comp
+            elif place_slots:
+                pad_to = -(-len(place_slots) // self.upload_pad) \
+                    * self.upload_pad
+                self._bill_flushed_rows(
+                    pool.scatter(place_slots, np.stack(place_kv),
+                                 pad_to=pad_to))
             elif pool.pending:
                 self._bill_flushed_rows(pool.scatter([], None))
             st.upload_s = time.perf_counter() - t1
             return slots, nsel, st
 
     def pool_stats(self) -> Dict[str, float]:
-        """Aggregate pool residency counters across layers (+ hit rate)."""
-        hits = sum(p.hits for p in self.pools if p is not None)
-        misses = sum(p.misses for p in self.pools if p is not None)
-        uploads = sum(p.uploads for p in self.pools if p is not None)
+        """Aggregate pool residency counters across layers (+ hit rate and
+        live occupancy — the scheduler's pool-aware admission reads the
+        free/resident slot counts instead of estimating analytically)."""
+        pools = [p for p in self.pools if p is not None]
+        hits = sum(p.hits for p in pools)
+        misses = sum(p.misses for p in pools)
+        uploads = sum(p.uploads for p in pools)
         return {"hits": hits, "misses": misses, "uploads": uploads,
-                "hit_rate": hits / max(1, hits + misses)}
+                "hit_rate": hits / max(1, hits + misses),
+                "slots": pools[0].n_slots if pools else 0,
+                "free_slots": (min(len(p.free) for p in pools)
+                               if pools else 0),
+                "resident": (max(len(p.slot_of) for p in pools)
+                             if pools else 0)}
 
     # ------------------------------------------------------------------
     def demote(self, layer: int, chunks: Sequence[int], to: str = HOST, *,
@@ -744,6 +962,10 @@ class TieredKVStore:
             vd = v_news.astype(self.dtype)
             self._disk[sq, layer, cs, 0, offs] = kd
             self._disk[sq, layer, cs, 1, offs] = vd
+            if self.disk_sidecar:
+                # the chunk's per-channel scales no longer cover the new
+                # row — reads fall back to the lossless fp16 replica
+                self._sidecar_valid[sq, layer, cs] = False
             self._abs_km[sq, layer, cs] = np.maximum(
                 self._abs_km[sq, layer, cs], k_news)
             self._abs_kn[sq, layer, cs] = np.minimum(
@@ -786,6 +1008,7 @@ class TieredKVStore:
             self._abs_kn[seq] = np.inf
             self.tier[seq] = HOST
             self.access[seq] = 0.0
+            self._sidecar_valid[seq] = False
             if seq in self.seq_logs:
                 self.retired_logs.append(self.seq_logs.pop(seq))
 
@@ -802,4 +1025,9 @@ class TieredKVStore:
         return dict(out)
 
     def close(self) -> None:
-        del self._disk
+        self.ingest_fence_all()        # never tear the memmaps out from
+        del self._disk                 # under an in-flight cold write
+        if self._disk_q is not None:
+            del self._disk_q
+            del self._disk_scale
+            self._disk_q = self._disk_scale = None

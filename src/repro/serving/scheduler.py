@@ -1,10 +1,27 @@
 """Continuous-batching request scheduler for the LeoAM serving engine.
 
-Admission is KV-budget-aware across the three tiers: a request is admitted
-when its max_len worth of chunks fits the configured device+host budget
-(disk replicas are assumed plentiful, per the paper).  Decode proceeds in
-rounds over all active requests; finished requests retire immediately and
-the queue backfills — the standard continuous-batching loop.
+Admission is KV-budget-aware across the three tiers.  Two admission
+policies:
+
+* **analytic** (legacy / non-pooled engines): a request is admitted when
+  its max_len worth of chunks fits the configured device budget — the
+  worst-case estimate, which leaves most of the device slab idle;
+* **pool-aware** (batched engine with a device chunk pool): admission is
+  driven off the engine's LIVE ``pool_stats()`` — a request is charged its
+  worst-case per-ROUND working set (``engine.admission_need_chunks``,
+  selection budget + forced sink/recent/hot chunks per layer) against the
+  actual pool slot count, optionally gated on the pool hit rate so a
+  thrashing pool pauses admission.  Per-round working sets are far below
+  max_len chunk counts, so the same device budget serves more concurrent
+  sequences.
+
+Decode proceeds in rounds over all active requests; finished requests
+retire immediately and the queue backfills — the standard continuous-
+batching loop.  With ``overlap_admission=True`` (batched mode) admission
+runs UNDER decode: queued requests prefill on the engine's admission
+worker while the active batch keeps decoding, and join the next round
+after their prefill future resolves — TTFT for queued requests drops by
+roughly the decode time they no longer wait out.
 
 Two drive modes:
 
@@ -23,7 +40,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -51,6 +68,23 @@ class SchedulerCfg:
     max_active: int = 4
     device_chunk_budget: int = 512     # total device-resident chunks
     chunk: int = 64
+    overlap_admission: bool = False    # admit under decode: prefill queued
+                                       # requests on the engine's admission
+                                       # worker while rounds run
+    prefill_ahead: int = 1             # async admissions may run this far
+                                       # ahead of a free decode slot (the
+                                       # engine needs max_active +
+                                       # prefill_ahead sequence slots); a
+                                       # retired slot is backfilled by an
+                                       # ALREADY-PREFILLED request, so the
+                                       # batch never starves while a
+                                       # prefill runs
+    pool_aware: bool = True            # drive admission off live
+                                       # engine.pool_stats() when the
+                                       # engine has a device chunk pool
+    min_pool_hit_rate: float = 0.0     # hold admission while the warm pool
+                                       # hit rate sits below this (0 = off)
+    hit_rate_warmup: int = 64          # pool lookups before the gate arms
 
 
 class ContinuousBatcher:
@@ -58,7 +92,11 @@ class ContinuousBatcher:
 
     ``active`` maps rid -> (request, handle, last token); ``handle`` is the
     per-request engine in legacy mode or the shared engine's sequence id in
-    batched mode.
+    batched mode.  ``_pending`` holds (request, future) pairs admitted
+    asynchronously whose prefill has not resolved yet; ``_ready`` holds
+    resolved admissions waiting for a free decode slot (their first token
+    already exists — TTFT stops there).  Both own engine slots and count
+    against every admission budget.
     """
 
     def __init__(self, make_engine: Optional[Callable[[], "object"]] = None,
@@ -70,29 +108,75 @@ class ContinuousBatcher:
         self.cfg = cfg or SchedulerCfg()
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, tuple] = {}
+        self._pending: List[Tuple[Request, "object"]] = []
+        self._ready: List[Tuple[Request, "object", int]] = []
         self.finished: List[Request] = []
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+    def _pool_mode(self) -> bool:
+        return (self.cfg.pool_aware and self.engine is not None
+                and getattr(getattr(self.engine, "store", None),
+                            "use_pool", False)
+                and hasattr(self.engine, "pool_stats"))
+
     def _chunks_needed(self, req: Request) -> int:
         return (len(req.prompt) + req.max_new + self.cfg.chunk - 1) \
             // self.cfg.chunk
 
+    def _need(self, req: Request) -> int:
+        """Device chunks a request is charged at admission: its per-round
+        working set in pool mode, its analytic max_len worst case else."""
+        if self._pool_mode():
+            return self.engine.admission_need_chunks(len(req.prompt),
+                                                     req.max_new)
+        return self._chunks_needed(req)
+
     def _device_chunks_used(self) -> int:
-        return sum(self._chunks_needed(r) for r, _, _ in self.active.values())
+        reqs = [r for r, _, _ in self.active.values()] \
+            + [r for r, _ in self._pending] \
+            + [r for r, _, _ in self._ready]
+        return sum(self._need(r) for r in reqs)
+
+    def _overlap(self) -> bool:
+        return (self.cfg.overlap_admission and self.engine is not None
+                and hasattr(self.engine, "add_sequence_async"))
 
     def _can_admit(self) -> bool:
-        if not self.queue or len(self.active) >= self.cfg.max_active:
+        # async admissions may run prefill_ahead past the decode slots:
+        # the ready queue backfills a retiring slot with zero prefill stall
+        cap = self.cfg.max_active + (self.cfg.prefill_ahead
+                                     if self._overlap() else 0)
+        if not self.queue or \
+                len(self.active) + len(self._pending) \
+                + len(self._ready) >= cap:
             return False
-        if (self._device_chunks_used() + self._chunks_needed(self.queue[0])
-                > self.cfg.device_chunk_budget):
+        if self._pool_mode():
+            ps = self.engine.pool_stats()
+            budget = ps["slots"] or self.cfg.device_chunk_budget
+            looks = ps["hits"] + ps["misses"]
+            if (self.cfg.min_pool_hit_rate > 0.0 and self.active
+                    and looks >= self.cfg.hit_rate_warmup
+                    and ps["hit_rate"] < self.cfg.min_pool_hit_rate):
+                return False           # pool is thrashing: hold admission
+        else:
+            budget = self.cfg.device_chunk_budget
+        if self._device_chunks_used() + self._need(self.queue[0]) > budget:
             return False
         return self.engine is None or self.engine.free_slots > 0
 
     def _admit(self) -> None:
+        overlap = self._overlap()
         while self._can_admit():
             req = self.queue.popleft()
+            if overlap:
+                fut = self.engine.add_sequence_async(req.prompt)
+                self._pending.append((req, fut))
+                continue
             if self.engine is not None:
                 handle, tok = self.engine.add_sequence(req.prompt)
             else:
@@ -101,6 +185,25 @@ class ContinuousBatcher:
             req.t_first = time.perf_counter()
             req.out.append(tok)
             self.active[req.rid] = (req, handle, tok)
+
+    def _collect_admitted(self, block: bool = False) -> None:
+        """Resolve async admissions (TTFT stops when the prefill future
+        lands) and activate ready requests as decode slots allow.
+        ``block`` waits for at least the first pending future — used when
+        nothing is decoding, so the loop always makes progress."""
+        still = []
+        for i, (req, fut) in enumerate(self._pending):
+            if fut.done() or (block and i == 0 and not self._ready):
+                sid, tok = fut.result()
+                req.t_first = time.perf_counter()
+                req.out.append(tok)
+                self._ready.append((req, sid, tok))
+            else:
+                still.append((req, fut))
+        self._pending = still
+        while self._ready and len(self.active) < self.cfg.max_active:
+            req, sid, tok = self._ready.pop(0)
+            self.active[req.rid] = (req, sid, tok)
 
     def _retire(self, rids: List[int]) -> None:
         for rid in rids:
@@ -115,11 +218,13 @@ class ContinuousBatcher:
     def step(self) -> int:
         """One decode round over all active requests; returns #active."""
         self._admit()
+        self._collect_admitted(block=not self.active and bool(self._pending))
         retired = [rid for rid, (req, _, _) in self.active.items() if req.done]
         live = {rid: v for rid, v in self.active.items()
                 if rid not in retired}
         if self.engine is not None and live:
-            # ONE batched decode round for every live sequence
+            # ONE batched decode round for every live sequence; async
+            # admissions prefill underneath it on the admission worker
             toks = self.engine.decode_round(
                 {sid: tok for (_, sid, tok) in live.values()})
             for rid, (req, sid, _) in live.items():
@@ -137,24 +242,46 @@ class ContinuousBatcher:
                     retired.append(rid)
         self._retire(retired)
         self._admit()
+        self._collect_admitted(block=not self.active and bool(self._pending))
         return len(self.active)
 
     def run(self, max_rounds: int = 10_000) -> List[Request]:
         rounds = 0
-        while (self.queue or self.active) and rounds < max_rounds:
+        while (self.queue or self.active or self._pending or self._ready) \
+                and rounds < max_rounds:
             self.step()
             rounds += 1
         return self.finished
 
     def stats(self) -> Dict[str, float]:
-        if not self.finished:
+        """Fleet metrics over finished requests: p50/p95 TTFT and
+        per-request decode tok/s alongside the means.  Requests may finish
+        out of submit order (continuous batching retires early finishers
+        first), so the makespan is guarded to stay positive and every
+        per-request rate divides by a clamped span."""
+        done = [r for r in self.finished
+                if r.t_first is not None and r.t_done is not None]
+        if not done:
             return {}
-        ttft = [r.t_first - r.t_submit for r in self.finished]
-        lat = [r.t_done - r.t_submit for r in self.finished]
-        toks = sum(len(r.out) for r in self.finished)
-        span = max(r.t_done for r in self.finished) - min(
-            r.t_submit for r in self.finished)
-        return {"requests": len(self.finished),
-                "mean_ttft_s": float(np.mean(ttft)),
-                "mean_latency_s": float(np.mean(lat)),
-                "throughput_tok_s": toks / max(span, 1e-9)}
+        ttft = np.array([r.t_first - r.t_submit for r in done])
+        lat = np.array([r.t_done - r.t_submit for r in done])
+        # per-request decode rate: tokens after the first, over the decode
+        # span (first-token to done); 1-token requests never decoded
+        dec = np.array([(len(r.out) - 1) / max(r.t_done - r.t_first, 1e-9)
+                        for r in done if len(r.out) > 1])
+        toks = sum(len(r.out) for r in done)
+        span = max(max(r.t_done for r in done)
+                   - min(r.t_submit for r in done), 1e-9)
+        out = {"requests": len(done),
+               "mean_ttft_s": float(ttft.mean()),
+               "p50_ttft_s": float(np.percentile(ttft, 50)),
+               "p95_ttft_s": float(np.percentile(ttft, 95)),
+               "mean_latency_s": float(lat.mean()),
+               "p95_latency_s": float(np.percentile(lat, 95)),
+               "throughput_tok_s": toks / span}
+        if len(dec):
+            out.update({"mean_decode_tok_s": float(dec.mean()),
+                        "p50_decode_tok_s": float(np.percentile(dec, 50)),
+                        "p95_decode_tok_s": float(np.percentile(dec, 95)),
+                        "p05_decode_tok_s": float(np.percentile(dec, 5))})
+        return out

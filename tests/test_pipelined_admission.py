@@ -1,0 +1,347 @@
+"""Pipelined admission path (PR 3): write-behind prefill ingest behind a
+completion fence, admission under decode, pool-aware scheduler admission,
+and packed int4 disk replicas — parity, billing and drain guarantees."""
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import compression
+from repro.core.pipeline import PrefillLayerCost, prefill_schedule
+from repro.serving.offload import DEVICE, DISK, HOST, TieredKVStore
+from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerCfg
+
+_SETUP = {}
+
+
+def _setup():
+    """Module-lazy smoke model (the hypothesis shim can't take fixtures)."""
+    if not _SETUP:
+        import jax
+        from repro.configs import get_config
+        from repro.models import lm
+        cfg = get_config("longchat-7b-32k", smoke=True)
+        cfg = dataclasses.replace(
+            cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                           importance_rate=0.4,
+                                           early_rate=0.6,
+                                           min_seq_for_sparse=32))
+        _SETUP["cfg"] = cfg
+        _SETUP["params"] = lm.init(cfg, jax.random.PRNGKey(1))
+        rng = np.random.RandomState(7)
+        _SETUP["prompts"] = [rng.randint(2, cfg.vocab_size, n)
+                             for n in (48, 57, 64, 50)]
+    return _SETUP["cfg"], _SETUP["params"], _SETUP["prompts"]
+
+
+def _ecfg(**kw):
+    from repro.serving.engine import EngineCfg
+    return EngineCfg(max_len=128, selection="tree", **kw)
+
+
+def _drive(order, *, overlap, max_new=4, scfg_kw=None, ecfg_kw=None):
+    """Run the continuous batcher over ``prompts[i] for i in order``;
+    returns ({rid: tokens}, stats, engine-before-close pool stats)."""
+    from repro.serving.engine import BatchedLeoAMEngine
+    cfg, params, prompts = _setup()
+    eng = BatchedLeoAMEngine(
+        cfg, params, _ecfg(overlap_ingest=overlap, **(ecfg_kw or {})),
+        max_seqs=2)
+    b = ContinuousBatcher(
+        cfg=SchedulerCfg(max_active=2, chunk=16, overlap_admission=overlap,
+                         **(scfg_kw or {})),
+        engine=eng)
+    for i in order:
+        b.submit(Request(i, prompts[i], max_new=max_new))
+    out = {r.rid: r.out for r in b.run()}
+    stats = b.stats()
+    ps = eng.pool_stats()
+    eng.store.close()
+    return out, stats, ps
+
+
+_SERIAL_REF = {}
+
+
+def _serial_reference(max_new=4):
+    if max_new not in _SERIAL_REF:
+        _SERIAL_REF[max_new] = _drive(range(4), overlap=False,
+                                      max_new=max_new)[0]
+    return _SERIAL_REF[max_new]
+
+
+def test_overlap_ingest_token_identical():
+    """Write-behind ingest (layer-streamed, fenced) decodes exactly the
+    serial-ingest token streams; the admit profile records the overlap."""
+    from repro.serving.engine import BatchedLeoAMEngine
+    cfg, params, prompts = _setup()
+    streams = {}
+    for overlap in (False, True):
+        eng = BatchedLeoAMEngine(cfg, params,
+                                 _ecfg(overlap_ingest=overlap), max_seqs=2)
+        toks = {}
+        for p in prompts[:2]:
+            sid, tok = eng.add_sequence(p)
+            toks[sid] = tok
+        outs = {sid: [t] for sid, t in toks.items()}
+        for _ in range(4):
+            toks = eng.decode_round(toks)
+            for sid, t in toks.items():
+                outs[sid].append(t)
+        assert all(p["overlapped"] == float(overlap)
+                   for p in eng.admit_profiles)
+        streams[overlap] = [outs[s] for s in sorted(outs)]
+        eng.store.close()
+    assert streams[True] == streams[False]
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_admission_under_decode_arrival_order_parity(seed):
+    """Property: overlapped admission + write-behind ingest produce
+    token-identical outputs to the serial path for EVERY queue arrival
+    order — admission timing and batch composition move residency and
+    latency, never values."""
+    order = list(np.random.RandomState(seed).permutation(4))
+    got, _, _ = _drive(order, overlap=True)
+    assert got == _serial_reference(), (order, got)
+
+
+def test_release_drains_inflight_writes_before_slot_reuse():
+    """A retired sequence's write-behind ingest is drained by release();
+    the slot's next occupant decodes exactly as on a fresh engine."""
+    from repro.serving.engine import BatchedLeoAMEngine
+    cfg, params, prompts = _setup()
+
+    def gen(eng, p, n=4):
+        sid, tok = eng.add_sequence(p)
+        out = [tok]
+        toks = {sid: tok}
+        for _ in range(n):
+            toks = eng.decode_round(toks)
+            out.append(toks[sid])
+        return sid, out
+
+    fresh = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=1)
+    _, want = gen(fresh, prompts[1])
+    fresh.store.close()
+
+    eng = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=1)
+    sid, _tok = eng.add_sequence(prompts[0])
+    eng.release(sid)                  # cold writes may still be in flight
+    sid2, got = gen(eng, prompts[1])
+    assert sid2 == sid                # the slot really was recycled
+    assert got == want
+    eng.store.close()
+
+
+def test_oversized_prompt_rejected_without_slot_leak():
+    """Prompt-length validation runs BEFORE the slot pop: a rejected
+    oversized request must not eat a sequence slot (sync or async)."""
+    from repro.serving.engine import BatchedLeoAMEngine
+    cfg, params, _prompts_unused = _setup()
+    eng = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=1)
+    too_long = np.arange(2, 200, dtype=np.int64) % cfg.vocab_size
+    for add in (eng.add_sequence, eng.add_sequence_async):
+        with pytest.raises(AssertionError):
+            add(too_long)
+        assert eng.free_slots == 1
+    eng.store.close()
+
+
+def test_ingest_fence_orders_cold_writes(rng):
+    """The completion fence: abstracts/replicas written behind a slow
+    executor are invisible until ingest_fence returns, complete after."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    st_ = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec=None)
+    ex = ThreadPoolExecutor(max_workers=1)
+    gate = threading.Event()
+    ex.submit(gate.wait)              # stall the queue behind a gate
+    st_.ingest(0, k, k, {c: DISK for c in range(4)}, executor=ex)
+    assert st_.log.total(kind="kv_replica") == 0.0   # still queued
+    assert np.all(np.isinf(st_._abs_km[0, 0, 0]))
+    gate.set()
+    st_.ingest_fence(0)
+    assert st_.log.total(kind="kv_replica") == 4 * st_.chunk_bytes
+    km, _ = st_.read_abstracts(0, [0])
+    np.testing.assert_array_equal(km[0], k[:16].max(0))
+    # fencing again is a no-op; the disk payload is complete
+    st_.ingest_fence(0)
+    ks, _ = st_.fetch_chunks(0, [0, 1, 2, 3])
+    np.testing.assert_array_equal(ks.reshape(64, 2, 8), k)
+    st_.close()
+    ex.shutdown()
+
+
+def test_sidecar_promotion_bytes_and_values(rng):
+    """Packed int4/int8 disk replicas: replica writes AND disk→host
+    promotions bill exactly chunk_bytes × codec_ratio(codec, chunk); the
+    promoted values match fp16 within the symmetric-quantization bound.
+    The fp16 replica stays the lossless fallback behind the flag."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    v = rng.randn(64, 2, 8).astype(np.float16)
+    for codec in ("int4", "int8"):
+        st_ = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec=codec,
+                            use_pool=True, real_codec=True,
+                            disk_sidecar=True)
+        packed = st_.chunk_bytes * compression.codec_ratio(codec,
+                                                           group=st_.chunk)
+        # the compression-module identity the sidecar layout relies on
+        assert 2 * compression.packed_chunk_bytes(codec, 16, 16) == packed
+        st_.ingest(0, k, v, {c: DISK for c in range(4)})
+        assert st_.log.total(kind="kv_replica") == pytest.approx(4 * packed)
+        _, _, fst = st_.fetch_chunks_pooled(0, {0: [0, 1, 2, 3]}, theta=0.0)
+        assert fst.disk_reads == 4
+        assert fst.disk_bytes == pytest.approx(4 * packed)
+        assert st_.log.bytes[(DISK, HOST, "kv")] == pytest.approx(4 * packed)
+        # promoted values: per-chunk symmetric quantization error bound
+        _, scale_k = compression.quantize_chunks(k.reshape(4, 16, 2, 8),
+                                                 codec)
+        got = np.stack([st_._host_k[(0, 0, c)] for c in range(4)])
+        err = np.abs(got.astype(np.float32)
+                     - k.reshape(4, 16, 2, 8).astype(np.float32))
+        assert np.all(err <= scale_k.reshape(4, 1, 2, 8) / 2 + 2e-3)
+        st_.close()
+
+    # lossless fallback flag: reads bypass the sidecar, bill full fp16
+    st_ = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec="int4",
+                        use_pool=True, disk_sidecar=True,
+                        sidecar_lossless=True)
+    st_.ingest(0, k, v, {c: DISK for c in range(4)})
+    _, _, fst = st_.fetch_chunks_pooled(0, {0: [0, 1]})
+    assert fst.disk_bytes == pytest.approx(2 * float(st_.chunk_bytes))
+    np.testing.assert_array_equal(
+        np.stack([st_._host_k[(0, 0, c)] for c in range(2)]).reshape(
+            32, 2, 8), k[:32])
+    st_.close()
+
+
+def test_sidecar_append_invalidates_chunk(rng):
+    """A decode append stales the chunk's per-chunk scales: the sidecar is
+    invalidated and the next promotion reads the lossless fp16 replica
+    (full bytes, exact values — including the appended row)."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    st_ = TieredKVStore(1, 8, 16, 2, 8, n_seqs=1, transit_codec="int4",
+                        use_pool=True, disk_sidecar=True)
+    st_.ingest(0, k, k, {c: DISK for c in range(4)})
+    assert bool(st_._sidecar_valid[0, 0, 3])
+    newk = rng.randn(2, 8).astype(np.float16)
+    st_.append_token(0, 63, newk, newk)         # last row of chunk 3
+    assert not st_._sidecar_valid[0, 0, 3]
+    assert bool(st_._sidecar_valid[0, 0, 2])    # untouched chunks keep it
+    _, _, fst = st_.fetch_chunks_pooled(0, {0: [3]})
+    assert fst.disk_bytes == pytest.approx(float(st_.chunk_bytes))
+    np.testing.assert_array_equal(st_._host_k[(0, 0, 3)][15], newk)
+    st_.close()
+
+
+def test_deferred_pool_placement_folds_unbilled(rng):
+    """Admission under decode defers device placements (the decode thread
+    owns the slab); the next pooled fetch folds them into its slab update
+    with ZERO H2D billing — same semantics as the synchronous prefill
+    placement, whose KV was produced on device."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    st_ = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec=None,
+                        use_pool=True)
+    st_.ingest(0, k, k, {0: DEVICE, 1: DEVICE, 2: HOST, 3: HOST},
+               pool_place=False)
+    assert (0, 0) in st_.pools[0].pending_place
+    assert st_.tier[0, 0, 0] == HOST          # host-tiered until folded
+    st_.fetch_chunks_pooled(0, {0: [2]})
+    assert not st_.pools[0].pending_place
+    assert (0, 0) in st_.pools[0].slot_of and (0, 1) in st_.pools[0].slot_of
+    assert st_.tier[0, 0, 0] == DEVICE
+    # only the SELECTED chunk's upload was billed; the folds were free
+    assert st_.log.bytes.get((HOST, DEVICE, "kv"), 0.0) == st_.chunk_bytes
+    kv = np.asarray(st_.pools[0].kv)
+    np.testing.assert_array_equal(kv[st_.pools[0].slot_of[(0, 0)], 0],
+                                  k[:16])
+    # a later selection of the folded chunk is a pool hit: still no bytes
+    st_.fetch_chunks_pooled(0, {0: [0, 1]})
+    assert st_.log.bytes.get((HOST, DEVICE, "kv"), 0.0) == st_.chunk_bytes
+    st_.close()
+
+
+def test_pool_aware_admission_beats_analytic_budget():
+    """Pool-aware admission charges live per-round working sets against
+    the actual slab, not max_len worst cases: a budget that admits ONE
+    request analytically runs TWO concurrently on the pooled engine."""
+    from repro.serving.engine import BatchedLeoAMEngine
+    cfg, params, prompts = _setup()
+    # analytic: ceil((48..64 + 4) / 16) = 4 chunks per request -> a budget
+    # of 6 admits one.  pool-aware: per-round need is charged against the
+    # pool's real slot count instead.
+    scfg = SchedulerCfg(max_active=2, chunk=16, device_chunk_budget=6)
+    eng = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=2)
+    need = eng.admission_need_chunks(64, 4)
+    assert 2 * need <= eng.pool_stats()["slots"]
+    batched = ContinuousBatcher(cfg=scfg, engine=eng)
+    for rid in range(3):
+        batched.submit(Request(rid, prompts[rid], max_new=4))
+    batched.step()
+    assert len(batched.active) == 2           # analytic budget would say 1
+    done = batched.run()
+    assert len(done) == 3
+    eng.store.close()
+
+    analytic = ContinuousBatcher(
+        cfg=dataclasses.replace(scfg, pool_aware=False),
+        engine=BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=2))
+    for rid in range(2):
+        analytic.submit(Request(rid, prompts[rid], max_new=4))
+    analytic.step()
+    assert len(analytic.active) == 1
+    analytic.run()
+    analytic.engine.store.close()
+
+
+def test_scheduler_stats_percentiles_out_of_order():
+    """stats() reports p50/p95 TTFT and per-request decode tok/s, and the
+    span guard survives requests finishing out of submit order (the first
+    submit finishes LAST here)."""
+    _, stats, _ = _drive([0, 1, 2], overlap=False, max_new=4)
+    for key in ("p50_ttft_s", "p95_ttft_s", "mean_ttft_s",
+                "p50_decode_tok_s", "p95_decode_tok_s",
+                "mean_decode_tok_s", "throughput_tok_s"):
+        assert key in stats and stats[key] > 0, key
+    assert stats["p95_ttft_s"] >= stats["p50_ttft_s"]
+    assert stats["p95_decode_tok_s"] >= stats["p50_decode_tok_s"]
+
+    # synthetic out-of-order finish: early submitter done last
+    b = ContinuousBatcher(make_engine=lambda: None)
+    t = time.perf_counter()
+    a = Request(0, np.arange(4), max_new=3)
+    a.t_submit, a.t_first, a.t_done = t, t + 2.0, t + 5.0
+    a.out = [1, 2, 3]
+    c = Request(1, np.arange(4), max_new=1)
+    c.t_submit, c.t_first, c.t_done = t + 1.0, t + 1.5, t + 1.5
+    c.out = [1]                      # 1-token request: never decoded
+    b.finished = [a, c]
+    s = b.stats()
+    assert s["requests"] == 2
+    assert s["throughput_tok_s"] > 0
+    assert s["mean_decode_tok_s"] == pytest.approx(2 / 3.0)
+
+
+def test_prefill_schedule_write_behind_hides_tier_writes():
+    """Analytic admission model: write-behind TTFT equals the compute
+    chain; serial admission pays every tier write in line."""
+    layers = [PrefillLayerCost(compute=1.0, replica_bytes=2e9)
+              for _ in range(4)]
+    bw = 4e9                          # 0.5 s of writes per layer
+    serial = prefill_schedule(layers, bw, write_behind=False)
+    wb = prefill_schedule(layers, bw, write_behind=True)
+    # serial: 4 computes + the 3 preceding writes stall the chain, and the
+    # last write lands after the final compute
+    assert serial.compute[-1][1] == pytest.approx(4 * 1.0 + 3 * 0.5)
+    assert serial.makespan == pytest.approx(4 * 1.5)
+    assert wb.compute[-1][1] == pytest.approx(4 * 1.0)   # TTFT: compute only
+    assert wb.makespan < serial.makespan
+    # the fence window: writes finish after the compute chain ends
+    assert wb.transfer[-1][1] >= wb.compute[-1][1]
