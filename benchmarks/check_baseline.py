@@ -39,6 +39,14 @@ GATED = [
     "fig15/queued/overlap/mean_ttft",
 ]
 
+# absolute count ceilings (NOT latency-scaled): the bucketed prefill path
+# must keep its compiled-program count O(log max_len) for the smoke length
+# mix — ceil(log2(512)) + 2 — instead of one XLA program per distinct
+# prompt length.  A count regression here means the bucket schedule broke.
+COUNT_LIMITS = {
+    "fig13/mixed/prefill_programs": 11.0,
+}
+
 
 def parse_csv(path: str) -> Dict[str, float]:
     out: Dict[str, float] = {}
@@ -66,13 +74,14 @@ def main() -> int:
             baseline_path = a.split("=", 1)[1]
 
     if "--update" in sys.argv:
-        missing = [n for n in GATED if n not in rows]
+        missing = [n for n in GATED + list(COUNT_LIMITS) if n not in rows]
         if missing:
             print(f"refusing to update: CSV lacks {missing}",
                   file=sys.stderr)
             return 1
         data = {"tolerance": 4.0,
-                "metrics_us": {n: round(rows[n], 1) for n in GATED}}
+                "metrics_us": {n: round(rows[n], 1) for n in GATED},
+                "counts_max": dict(COUNT_LIMITS)}
         with open(baseline_path, "w") as fh:
             json.dump(data, fh, indent=2)
             fh.write("\n")
@@ -96,13 +105,27 @@ def main() -> int:
         if got > limit:
             failures.append(f"{name}: {got:.0f}us > {limit:.0f}us "
                             f"({got / want_us:.1f}x baseline)")
+    # hard count ceilings: jit compile counts, not latencies — no
+    # tolerance multiplier (a recompile-per-length bug blows straight past)
+    for name, limit in base.get("counts_max", {}).items():
+        got = rows.get(name)
+        if got is None:
+            failures.append(f"{name}: MISSING from CSV (count gate "
+                            f"<= {limit:.0f})")
+            continue
+        verdict = "ok" if got <= limit else "REGRESSION"
+        print(f"{name}: {got:.0f} vs ceiling {limit:.0f} -> {verdict}")
+        if got > limit:
+            failures.append(f"{name}: count {got:.0f} > ceiling "
+                            f"{limit:.0f}")
     if failures:
         print("\nbench smoke regression gate FAILED:", file=sys.stderr)
         for f in failures:
             print(f"  {f}", file=sys.stderr)
         return 1
     print("bench smoke regression gate passed "
-          f"({len(base['metrics_us'])} metrics, x{tol:.1f} tolerance)")
+          f"({len(base['metrics_us']) + len(base.get('counts_max', {}))} "
+          f"metrics, x{tol:.1f} tolerance)")
     return 0
 
 

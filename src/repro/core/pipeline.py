@@ -21,6 +21,12 @@ Two parts:
   the disk link under the remaining layers' compute, so TTFT collapses to
   the compute chain plus whatever write tail outlives it — the model the
   fig13 TTFT-breakdown benchmark checks the live engine against.
+
+* :func:`chunked_admission_model` — the CHUNKED-admission trade: splitting
+  a prompt's prefill into fixed chunks advanced between decode rounds
+  bounds the running batch's max round gap at the per-round chunk budget
+  (vs the whole prefill) while TTFT stretches by the interleaved rounds —
+  the fig13 mixed-length benchmark measures the live scheduler against it.
 """
 
 from __future__ import annotations
@@ -107,6 +113,31 @@ def prefill_schedule(layers: Sequence["PrefillLayerCost"], disk_bw: float, *,
         tl.transfer.append((x0, x1))
         tl.thetas.append(0.0)
     return tl
+
+
+def chunked_admission_model(chunk_s: float, n_chunks: int, round_s: float,
+                            chunks_per_round: int) -> Dict[str, float]:
+    """Analytic model of CHUNKED admission interleaved with decode rounds.
+
+    Whole-prompt admission runs all ``n_chunks`` prefill chunks back to
+    back between two decode rounds: the running batch sees ONE decode gap
+    of ``round_s + n_chunks * chunk_s`` and TTFT is the prefill chain.
+    Chunked admission advances at most ``chunks_per_round`` chunks per
+    round, bounding the decode gap at ``round_s + chunks_per_round *
+    chunk_s`` while TTFT stretches by the decode rounds now interleaved
+    into the prefill.  The fig13 mixed-length benchmark checks the live
+    scheduler against exactly this trade: bounded stall, modest TTFT tax.
+    """
+    assert chunks_per_round >= 1
+    interleaved = max(0, -(-n_chunks // chunks_per_round) - 1)
+    return {
+        "ttft_whole_s": n_chunks * chunk_s,
+        "ttft_chunked_s": n_chunks * chunk_s + interleaved * round_s,
+        "max_round_gap_whole_s": round_s + n_chunks * chunk_s,
+        "max_round_gap_chunked_s": round_s + min(n_chunks, chunks_per_round)
+        * chunk_s,
+        "interleaved_rounds": float(interleaved),
+    }
 
 
 @dataclass

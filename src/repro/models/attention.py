@@ -164,7 +164,7 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: Optional[int] = None,
                       attn_softcap: Optional[float] = None,
                       block_q: int = 512, block_kv: int = 1024,
-                      cross: bool = False) -> jax.Array:
+                      cross: bool = False, q_offset=0) -> jax.Array:
     """Flash-style attention: full query rows × scanned KV blocks.
 
     q: (B, S, H, hd) pre-scaled; k/v: (B, Skv, Hkv, hd).  Shardability is
@@ -173,6 +173,12 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     H heads *inside* the scan (a local slice of replicated KV) — no
     collective ever lands inside the loop.  O(S·block) memory.
     ``cross=True`` disables the causal mask (encoder-decoder).
+
+    ``q_offset`` (static or traced scalar) places the query rows at global
+    positions ``q_offset + [0, S)`` against the keys' absolute positions —
+    the chunked-prefill path attends one prompt chunk against the whole
+    (zero-initialised) decode cache, and the causal mask alone keeps
+    not-yet-written / padding key rows out of every valid query row.
     """
     B, S, H, hd = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
@@ -188,7 +194,7 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     v = constrain(v, ("batch", None, None, None))
     kb = k.reshape(B, nkv, bkv, Hkv, hd)
     vb = v.reshape(B, nkv, bkv, Hkv, vd)
-    q_pos = jnp.arange(S)
+    q_pos = jnp.arange(S) + q_offset
 
     def kv_step(carry, kj_and_kv):
         num, den, m = carry
@@ -278,8 +284,18 @@ def cross_kv(p, cfg: ArchConfig, enc_out: jax.Array) -> Tuple[jax.Array, jax.Arr
 
 def gqa_prefill_cache(cfg: ArchConfig, k: jax.Array, v: jax.Array,
                       max_len: int, length) -> Dict[str, jax.Array]:
-    """Build the decode cache (padded KV + abstract pyramid) after prefill."""
+    """Build the decode cache (padded KV + abstract pyramid) after prefill.
+
+    Rows at positions >= ``length`` are zeroed before the pad: with bucketed
+    prefill the prompt rides in padded to a bucket size, and the tier store
+    ingests this cache — zeroing the bucket-padding rows keeps the stored
+    chunks (and their min/max abstracts) bit-identical to exact-length
+    prefill, whose pad rows were already zeros."""
     B, S, Hkv, hd = k.shape
+    valid = (jnp.arange(S, dtype=jnp.int32)
+             < jnp.asarray(length, jnp.int32))[None, :, None, None]
+    k = jnp.where(valid, k, 0)
+    v = jnp.where(valid, v, 0)
     pad = max_len - S
     kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -471,6 +487,11 @@ def mla_prefill_cache(p, cfg: ArchConfig, x: jax.Array, pos, max_len: int,
     kv_a = x @ p["wkv_a"]
     ckv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     krope = rotate(cfg, kv_a[..., None, m.kv_lora_rank:], pos)[:, :, 0]
+    # zero bucket-padding rows (see gqa_prefill_cache)
+    valid = (jnp.arange(S, dtype=jnp.int32)
+             < jnp.asarray(length, jnp.int32))[None, :, None]
+    ckv = jnp.where(valid, ckv, 0)
+    krope = jnp.where(valid, krope, 0)
     pad = max_len - S
     ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
     krope = jnp.pad(krope, ((0, 0), (0, pad), (0, 0)))

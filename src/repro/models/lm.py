@@ -185,6 +185,16 @@ def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
     return abstract_tree(cache_defs(cfg, batch, max_len), jnp.dtype(cfg.dtype))
 
 
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Zeroed decode cache (the chunked-prefill starting state): same pytree
+    structure ``prefill`` returns, so a sequence admitted chunk-by-chunk
+    carries a cache indistinguishable from a whole-prompt admission."""
+    def z(d: ParamDef):
+        dt = jnp.dtype(d.dtype) if d.dtype else jnp.dtype(cfg.dtype)
+        return jnp.zeros(d.shape, dt)
+    return jax.tree.map(z, cache_defs(cfg, batch, max_len), is_leaf=is_def)
+
+
 def encoder_len(cfg: ArchConfig, dec_len: int) -> int:
     """Static encoder length for enc-dec decode shapes (DESIGN.md §4)."""
     return min(4096, max(256, dec_len // 8))
@@ -392,13 +402,22 @@ def forward_train(params, cfg: ArchConfig, batch: Dict[str, jax.Array]
 def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
             max_len: int, ctx: DecodeCtx = LOCAL_CTX
             ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """Returns (last-position logits (B, V), cache)."""
+    """Returns (last-position logits (B, V), cache).
+
+    ``batch["length"]`` (optional scalar, may be traced) marks the prompt's
+    true length when the token row is right-padded to a BUCKET size: the
+    returned logits come from position ``length - 1``, K/V cache rows past
+    ``length`` are zeroed, and recurrent layer states stop absorbing tokens
+    at ``length`` — so one compiled program per bucket serves every prompt
+    length in the bucket, token-identical to exact-length prefill (padding
+    keys are causally invisible to every real query row)."""
     prologue, period, repeats = _layer_plan(cfg)
     x, B, S = _embed_in(params, cfg, batch)
     pos = batch.get("positions")
     if pos is None:
         pos = positions_for(cfg, B, S)
     length = batch.get("length", S)
+    mask_len = batch.get("length")       # None => no bucket padding
     enc_out = _encode(params, cfg, batch["embeds"]) if cfg.is_encdec else None
     cross = cfg.is_encdec and cfg.cross_attn
 
@@ -428,15 +447,17 @@ def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
                                        cross_kv=ckv)
                 cache["cross_k"], cache["cross_v"] = ckv
         elif kind == "mamba":
-            y, st = _mamba_prefill(blk["core"], cfg, h)
+            y, st = _mamba_prefill(blk["core"], cfg, h, length=mask_len)
             x, cache = x + y, st
         elif kind == "mlstm":
             y, st = _scan_prefill(xlstm_mod.mlstm_train,
-                                  xlstm_mod.mlstm_decode, blk["core"], cfg, h)
+                                  xlstm_mod.mlstm_decode, blk["core"], cfg, h,
+                                  length=mask_len)
             x, cache = x + y, st
         elif kind == "slstm":
             y, st = _scan_prefill(xlstm_mod.slstm_train,
-                                  xlstm_mod.slstm_decode, blk["core"], cfg, h)
+                                  xlstm_mod.slstm_decode, blk["core"], cfg, h,
+                                  length=mask_len)
             x, cache = x + y, st
         x, _ = _apply_mlp(blk, cfg, mlpk, x, None)
         return x, cache
@@ -459,11 +480,39 @@ def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
         x, caches = jax.lax.scan(step, x, tuple(params["body"]))
         caches_body = list(caches)
 
-    logits_last = _logits(params, cfg, x[:, -1:])[:, 0]
+    if "length" in batch:
+        # bucketed prompt: the true last row sits at length - 1, not S - 1
+        idx = jnp.clip(jnp.asarray(length, jnp.int32) - 1, 0, S - 1)
+        x_last = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+    else:
+        x_last = x[:, -1:]
+    logits_last = _logits(params, cfg, x_last)[:, 0]
     return logits_last, {"prologue": caches_pro, "body": caches_body}
 
 
-def _mamba_prefill(p, cfg, x):
+def _masked_state_scan(step_fn, cache, x, length):
+    """Scan a per-token state update over ``x`` (``step_fn(cache, xt) ->
+    cache'``); with ``length`` the state stops updating at that position
+    (bucket-padding rows are identity), so the final recurrent state matches
+    exact-length prefill."""
+    if length is None:
+        def step(c, xt):
+            return step_fn(c, xt), None
+        cache, _ = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
+        return cache
+    idxs = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def step(c, inp):
+        xt, i = inp
+        c2 = step_fn(c, xt)
+        keep = i < jnp.asarray(length, jnp.int32)
+        return jax.tree.map(lambda n, o: jnp.where(keep, n, o), c2, c), None
+
+    cache, _ = jax.lax.scan(step, cache, (jnp.moveaxis(x, 1, 0), idxs))
+    return cache
+
+
+def _mamba_prefill(p, cfg, x, length=None):
     """Run mamba over the prompt AND produce the decode state."""
     y = ssm_mod.mamba_train(p, cfg, x)
     # recompute final state by stepping the last d_conv tokens (cheap)
@@ -471,16 +520,12 @@ def _mamba_prefill(p, cfg, x):
     d_in, ds, dc, _ = ssm_mod._dims(cfg)
     cache = {"conv": jnp.zeros((B, dc - 1, d_in), x.dtype),
              "state": jnp.zeros((B, d_in, ds), jnp.float32)}
-    def step(c, xt):
-        _, c2 = ssm_mod.mamba_decode(p, cfg, xt[:, None], c)
-        return c2, None
-    cache, _ = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
-    return y, cache
+    step = lambda c, xt: ssm_mod.mamba_decode(p, cfg, xt[:, None], c)[1]
+    return y, _masked_state_scan(step, cache, x, length)
 
 
-def _scan_prefill(train_fn, decode_fn, p, cfg, x):
+def _scan_prefill(train_fn, decode_fn, p, cfg, x, length=None):
     y = train_fn(p, cfg, x)
-    names_cache = None
     B, S, d = x.shape
     if train_fn is xlstm_mod.mlstm_train:
         defs = xlstm_mod.mlstm_cache_defs(cfg, B)
@@ -488,11 +533,127 @@ def _scan_prefill(train_fn, decode_fn, p, cfg, x):
         defs = xlstm_mod.slstm_cache_defs(cfg, B)
     cache = {k: jnp.zeros(v.shape, jnp.dtype(v.dtype or cfg.dtype))
              for k, v in defs.items()}
-    def step(c, xt):
-        _, c2 = decode_fn(p, cfg, xt[:, None], c)
-        return c2, None
-    cache, _ = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
-    return y, cache
+    step = lambda c, xt: decode_fn(p, cfg, xt[:, None], c)[1]
+    return y, _masked_state_scan(step, cache, x, length)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: advance admission one fixed-size token chunk at a time
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+                  cache: Dict[str, Any], max_len: int
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One chunk of a vLLM-style chunked prefill.
+
+    batch: ``{"tokens": (B, C), "start": scalar, "length": scalar}`` — the
+    chunk occupies global positions ``[start, start + C)``; rows at
+    positions >= ``length`` are padding (last chunk only).  ``cache`` is the
+    decode cache (:func:`init_decode_cache` to start); each call writes the
+    chunk's K/V into it at ``start`` (padding rows zeroed) and attends the
+    chunk's queries over the whole cache with an offset causal mask —
+    not-yet-written rows sit at future positions, so the causal mask alone
+    excludes them and the outputs are token-identical to whole-prompt
+    prefill (masked keys contribute exact zeros to the f32 softmax
+    accumulators).  Shapes are independent of ``start``/``length``: ONE
+    compiled program serves every chunk of every prompt.
+
+    Returns (logits at position ``min(length, start + C) - 1``, cache');
+    the final chunk's logits row is the prompt's first sampled token.
+    Recurrent (mamba/xlstm) layers advance their decode state per token
+    under the same validity mask; attention supports GQA (MLA chunked
+    admission is not wired up yet — the engine asserts).
+    """
+    assert cfg.mla is None, "chunked prefill drives GQA decoder stacks"
+    assert not cfg.is_encdec, "chunked prefill drives decoder-only models"
+    prologue, period, repeats = _layer_plan(cfg)
+    tokens = batch["tokens"]
+    B, C = tokens.shape
+    start = jnp.asarray(batch["start"], jnp.int32)
+    length = jnp.asarray(batch["length"], jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = positions_for(cfg, B, C, offset=start)
+    valid = (jnp.arange(C, dtype=jnp.int32) + start) < length       # (C,)
+
+    def attn_chunk(blk, kind, mlpk, x, c):
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = attn._qkv(blk["core"], cfg, h, pos)
+        kz = jnp.where(valid[None, :, None, None], k, 0).astype(c["k"].dtype)
+        vz = jnp.where(valid[None, :, None, None], v, 0).astype(c["v"].dtype)
+        c = dict(c)
+        c["k"] = jax.lax.dynamic_update_slice_in_dim(c["k"], kz, start,
+                                                     axis=1)
+        c["v"] = jax.lax.dynamic_update_slice_in_dim(c["v"], vz, start,
+                                                     axis=1)
+        window = cfg.window if kind == "attn_local" else None
+        o = attn.blocked_attention(
+            q * (1.0 / math.sqrt(cfg.hd)), c["k"], c["v"], causal=True,
+            window=window, attn_softcap=cfg.attn_softcap,
+            block_q=cfg.runtime.attn_block_q,
+            block_kv=cfg.runtime.attn_block_kv, q_offset=start)
+        y = o.reshape(B, C, -1) @ blk["core"]["wo"]
+        x, _ = _apply_mlp(blk, cfg, mlpk, x + y, None)
+        return x, c
+
+    def other_chunk(blk, kind, mlpk, x, c):
+        dec = {"mamba": ssm_mod.mamba_decode,
+               "mlstm": xlstm_mod.mlstm_decode,
+               "slstm": xlstm_mod.slstm_decode}[kind]
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+
+        def step(st, inp):
+            ht, keep = inp
+            y, st2 = dec(blk["core"], cfg, ht[:, None], st)
+            st2 = jax.tree.map(lambda n, o: jnp.where(keep, n, o), st2, st)
+            return st2, y[:, 0]
+
+        c2, ys = jax.lax.scan(step, c, (jnp.moveaxis(h, 1, 0), valid))
+        x, _ = _apply_mlp(blk, cfg, mlpk, x + jnp.moveaxis(ys, 0, 1), None)
+        return x, c2
+
+    def block_chunk(blk, kind, mlpk, x, c):
+        if kind.startswith("attn"):
+            return attn_chunk(blk, kind, mlpk, x, c)
+        return other_chunk(blk, kind, mlpk, x, c)
+
+    new_pro = []
+    for blk, (idx, kind, mlpk), c in zip(params["prologue"], prologue,
+                                         cache["prologue"]):
+        x, c2 = block_chunk(blk, kind, mlpk, x, c or {})
+        new_pro.append(c2 if c is not None else None)
+
+    new_body = []
+    if repeats:
+        body_cache = tuple(cache["body"])
+
+        def bstep(carry, layer_params):
+            x, caches, li = carry
+            new_cs = []
+            for pi, (kind, mlpk) in enumerate(period):
+                layer_cache = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, li, 0, keepdims=False), caches[pi])
+                x, c2 = block_chunk(layer_params[pi], kind, mlpk, x,
+                                    layer_cache)
+                new_cs.append(c2)
+            caches = tuple(
+                jax.tree.map(
+                    lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                        a, u.astype(a.dtype), li, 0), caches[pi], new_cs[pi])
+                for pi in range(len(period)))
+            return (x, caches, li + 1), None
+
+        (x, new_caches, _), _ = jax.lax.scan(
+            bstep, (x, body_cache, jnp.int32(0)), tuple(params["body"]))
+        new_body = list(new_caches)
+
+    # last valid row of THIS chunk (the final chunk's row is the prompt's
+    # first-token logits; earlier chunks' logits are discarded)
+    idx = jnp.clip(jnp.minimum(length, start + C) - 1 - start, 0, C - 1)
+    logits = _logits(params, cfg,
+                     jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1))[:, 0]
+    return logits, {"prologue": new_pro, "body": new_body}
 
 
 # ---------------------------------------------------------------------------

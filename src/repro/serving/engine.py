@@ -51,9 +51,23 @@ the new sequence defers device-pool placement so the decode thread's
 attention gathers never race a pool scatter.  Both are token-identical to
 the serial path (tested): write-behind moves bytes, never values.
 
+Admission is BUCKETED and CHUNKABLE (PR 4): ``_prefill`` pads the prompt
+to a power-of-two length bucket and threads the true length through the
+jitted program (logits row, cache zeroing, recurrent-state masking), so
+O(log max_len) compiled programs serve any public-traffic length mix —
+token-identical to exact-length prefill (property-tested at bucket
+edges).  ``begin_admission`` returns a resumable :class:`ChunkedAdmission`
+that forces one fixed-size prefill chunk per ``step()`` (ONE compiled
+program for every chunk of every prompt — offset-causal attention over
+the zero-initialised decode cache) and streams each chunk into the store
+through chunk-aligned partial ingest, so the scheduler can run decode
+rounds between a long prompt's chunks instead of stalling behind its
+whole prefill.
+
 ``pooled=False, pipeline=False`` reproduces the PR-1 synchronous engine
 (full working-set re-upload per layer) for A/B tests and benchmarks;
-``overlap_ingest=False`` reproduces the PR-2 serial admission path.
+``overlap_ingest=False`` reproduces the PR-2 serial admission path;
+``bucket_prefill=False`` reproduces the PR-3 compile-per-length prefill.
 
 ``LeoAMEngine`` is the single-sequence view: a thin wrapper over a B=1
 batched engine preserving the original prefill/decode_step/generate API.
@@ -110,6 +124,24 @@ class EngineCfg:
                                      # dispatches — admission under decode
                                      # then truly overlaps, and TTFT drops
                                      # even standalone)
+    bucket_prefill: bool = True      # pad prompts to power-of-two (or
+                                     # prefill_buckets) lengths with a
+                                     # validity mask: O(log max_len)
+                                     # compiled programs serve EVERY prompt
+                                     # length, token-identical to
+                                     # exact-length prefill (tested);
+                                     # False = PR-3 one program per length
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+                                     # explicit ascending bucket schedule
+                                     # (None = powers of two from 16)
+    prefill_chunk_tokens: int = 64   # chunk size for begin_admission's
+                                     # resumable chunked prefill; must
+                                     # divide max_len and be a multiple of
+                                     # the store chunk
+    sidecar_requant: bool = True     # background sweep re-packs append-
+                                     # dirtied disk sidecars once a chunk
+                                     # goes a full round without appends
+                                     # (no-op unless disk_sidecar)
     disk_sidecar: bool = False       # packed int4/int8 disk replicas: tier
                                      # writes + disk->host promotions move
                                      # packed bytes (fp16 stays as the
@@ -278,6 +310,8 @@ class BatchedLeoAMEngine:
         self.round_profiles: List[Dict[str, float]] = []
         self.admit_profiles: List[Dict[str, float]] = []
         self._prefill_cache: Dict[int, Any] = {}
+        self._chunk_prefill_cache: Dict[int, Any] = {}
+        self._round_idx = 0
 
     @property
     def free_slots(self) -> int:
@@ -333,15 +367,9 @@ class BatchedLeoAMEngine:
         cfg, ecfg = self.cfg, self.ecfg
         S = len(tokens)
         t0 = time.perf_counter()
-        batch = {"tokens": jnp.asarray(np.asarray(tokens)[None], jnp.int32)}
-        logits, cache = self._prefill(batch, S)
+        logits, cache = self._prefill(np.asarray(tokens))
 
-        n_gpu = max(1, int(self.n_chunks * ecfg.gpu_chunk_frac))
-        n_cpu = max(1, int(self.n_chunks * ecfg.cpu_chunk_frac))
-        placement = {}
-        for c in range(self.n_chunks):
-            placement[c] = DEVICE if c < n_gpu else (
-                HOST if c < n_gpu + n_cpu else DISK)
+        placement = self._default_placement()
         prefill_s = ingest_s = 0.0
         if self._ingest_exec is None:
             # serial path (PR-2): force the whole prefill, then ingest and
@@ -380,21 +408,125 @@ class BatchedLeoAMEngine:
             "overlapped": float(self._ingest_exec is not None)})
         return sid, tok
 
-    def _prefill(self, batch: Dict[str, Any], S: int):
-        """Model prefill, jit-compiled per prompt length.  One XLA call
+    def _default_placement(self) -> Dict[int, str]:
+        """Admission tier placement by chunk index (device head, host
+        middle, disk tail)."""
+        ecfg = self.ecfg
+        n_gpu = max(1, int(self.n_chunks * ecfg.gpu_chunk_frac))
+        n_cpu = max(1, int(self.n_chunks * ecfg.cpu_chunk_frac))
+        return {c: DEVICE if c < n_gpu else
+                (HOST if c < n_gpu + n_cpu else DISK)
+                for c in range(self.n_chunks)}
+
+    def _bucket_len(self, S: int) -> int:
+        """Smallest bucket >= S: powers of two from 16, or the configured
+        ``prefill_buckets`` schedule, capped at max_len (the cache pad)."""
+        sched = self.ecfg.prefill_buckets
+        if sched:
+            for b in sorted(sched):
+                if b >= S:
+                    return min(int(b), self.ecfg.max_len)
+            return self.ecfg.max_len
+        b = 16
+        while b < S:
+            b <<= 1
+        return min(b, self.ecfg.max_len)
+
+    @property
+    def prefill_programs(self) -> int:
+        """Distinct compiled prefill programs (bucketed whole-prompt +
+        chunk-step).  With ``bucket_prefill`` this stays O(log max_len)
+        under ANY prompt-length distribution — the mixed-length bench and
+        the CI baseline gate watch this counter."""
+        return len(self._prefill_cache) + len(self._chunk_prefill_cache)
+
+    def _prefill(self, tokens: np.ndarray):
+        """Model prefill, jit-compiled per LENGTH BUCKET: the prompt is
+        right-padded to the bucket and the true length rides in as a traced
+        scalar (logits row, cache zeroing and recurrent-state masking all
+        honor it — token-identical to exact-length prefill, tested), so
+        ceil(log2(max_len))-ish programs serve any public-traffic length
+        mix instead of one compile per distinct length.  One XLA call
         replaces thousands of eager op dispatches: admission cost drops
         several-fold, and the GIL is free for the decode thread while an
-        async admission's prefill executes (the overlap that makes
-        admission-under-decode pay off on a shared host)."""
+        async admission's prefill executes."""
+        S = len(tokens)
         if not self.ecfg.jit_prefill:
+            batch = {"tokens": jnp.asarray(np.asarray(tokens)[None],
+                                           jnp.int32)}
             return lm.prefill(self.params, self.cfg, batch,
                               max_len=self.ecfg.max_len)
-        fn = self._prefill_cache.get(S)
+        cfg, max_len = self.cfg, self.ecfg.max_len
+        if self.ecfg.bucket_prefill:
+            B = self._bucket_len(S)
+            padded = np.zeros(B, np.int64)
+            padded[:S] = np.asarray(tokens)
+            batch = {"tokens": jnp.asarray(padded[None], jnp.int32),
+                     "length": jnp.int32(S)}
+            key = B
+        else:
+            batch = {"tokens": jnp.asarray(np.asarray(tokens)[None],
+                                           jnp.int32)}
+            key = S
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            fn = jax.jit(lambda p, b: lm.prefill(p, cfg, b, max_len=max_len))
+            self._prefill_cache[key] = fn
+        return fn(self.params, batch)
+
+    def _prefill_chunk(self, batch: Dict[str, Any], cache):
+        """One jitted chunked-prefill step; compiled once per chunk size
+        (the cache is donated so XLA updates it in place)."""
+        C = batch["tokens"].shape[1]
+        fn = self._chunk_prefill_cache.get(C)
         if fn is None:
             cfg, max_len = self.cfg, self.ecfg.max_len
-            fn = jax.jit(lambda p, b: lm.prefill(p, cfg, b, max_len=max_len))
-            self._prefill_cache[S] = fn
-        return fn(self.params, batch)
+            fn = jax.jit(
+                lambda p, b, c: lm.prefill_chunk(p, cfg, b, c,
+                                                 max_len=max_len),
+                donate_argnums=(2,))
+            self._chunk_prefill_cache[C] = fn
+        return fn(self.params, batch, cache)
+
+    def begin_admission(self, tokens: np.ndarray, *,
+                        chunk_tokens: Optional[int] = None,
+                        pool_place: bool = True) -> "ChunkedAdmission":
+        """Start a CHUNKED admission: reserves the slot now and returns a
+        resumable :class:`ChunkedAdmission` whose ``step()`` forces one
+        fixed-size prefill chunk through the cache and streams its K/V into
+        the tier store (write-behind cold half unchanged), yielding between
+        chunks so the caller can run decode rounds in the gaps — a very
+        long prompt no longer stalls the round loop for its whole prefill.
+        Intended to be stepped on the decode thread (the scheduler's
+        chunked-admission mode); ``pool_place=False`` defers device-pool
+        placement exactly like ``add_sequence_async``."""
+        assert self.cfg.mla is None, \
+            "chunked admission drives GQA stacks (MLA: use add_sequence)"
+        C = chunk_tokens or self.ecfg.prefill_chunk_tokens
+        assert C % self.chunk == 0, (C, self.chunk)
+        assert self.ecfg.max_len % C == 0, (self.ecfg.max_len, C)
+        assert self._free, "engine is at max_seqs capacity"
+        self._check_prompt(tokens)     # validate BEFORE taking the slot
+        sid = self._free.pop()
+        return ChunkedAdmission(self, sid, tokens, C, pool_place=pool_place)
+
+    def _layer_kv_slice(self, cache, layer: int, start: int, n: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Like :meth:`_layer_kv` but pulls only rows [start, start+n) to
+        the host — the chunked-admission stream-out."""
+        pro_n = len(cache["prologue"])
+        if layer < pro_n:
+            c = cache["prologue"][layer]
+            k, v = c["k"], c["v"]
+        else:
+            period = self.cfg.period()
+            bi = (layer - pro_n) // period
+            pi = (layer - pro_n) % period
+            c = cache["body"][pi]
+            k, v = c["k"][bi], c["v"][bi]
+        sl = lambda a: np.asarray(
+            jax.lax.dynamic_slice_in_dim(a, start, n, axis=1))[0]
+        return sl(k), sl(v)
 
     def _layer_placement(self, layer: int,
                          placement: Dict[int, str]) -> Dict[int, str]:
@@ -408,14 +540,17 @@ class BatchedLeoAMEngine:
         """Retire a sequence and recycle its store slot.
 
         Drains every in-flight future that may still reference the slot —
-        write-behind ingest writes (per-seq fence) and the DTP prefetch
-        worker's staged reads — BEFORE clearing the store, so a slow
-        replica write can never land in a recycled slot's fresh data."""
+        write-behind ingest writes (per-seq fence), the DTP prefetch
+        worker's staged reads, and queued sidecar repacks — BEFORE clearing
+        the store, so a slow replica write can never land in a recycled
+        slot's fresh data (and a queued repack completes deterministically
+        instead of being aborted by the slot's version bump)."""
         self.store.ingest_fence(sid)
         for li in list(self._pf_futs):
             fut = self._pf_futs.pop(li, None)
             if fut is not None:
                 fut.result()
+        self.store.requant_fence()
         self._abs_cache.clear()
         self.store.clear_seq(sid)
         self.seqs.pop(sid, None)
@@ -761,7 +896,121 @@ class BatchedLeoAMEngine:
             s.length += 1
             s.stats.append(round_stats[sid])
             out[sid] = int(np.argmax(logits[i]))
+        self._round_idx += 1
+        if ecfg.disk_sidecar and ecfg.sidecar_requant:
+            # background repack of append-dirtied sidecars (chunks quiet
+            # for a full round): long-running sequences regain packed
+            # disk->host promotions instead of fp16-forever
+            self.store.requant_sweep(executor=_prefetch_executor())
         return out
+
+
+class ChunkedAdmission:
+    """Resumable chunked prefill of ONE request (vLLM-style).
+
+    Produced by :meth:`BatchedLeoAMEngine.begin_admission`; each
+    :meth:`step` forces one fixed-size prefill chunk through the model
+    cache (one compiled program for every chunk of every prompt), streams
+    the chunk's K/V into the tier store — hot placement synchronous, cold
+    replica/abstract writes write-behind exactly as whole-prompt admission
+    — and returns control to the caller, so decode rounds interleave with a
+    long prompt's admission instead of stalling behind it.  After the final
+    prompt chunk the remaining cache rows (zeros) are ingested too, so tier
+    coverage, abstracts and the slot-scrub invariant match whole-prompt
+    admission chunk for chunk; the resulting sequence is token-identical to
+    an ``add_sequence`` admission (tested).  ``result`` resolves to
+    (seq id, first token) when ``done``.
+    """
+
+    def __init__(self, engine: BatchedLeoAMEngine, sid: int,
+                 tokens: np.ndarray, chunk_tokens: int, *,
+                 pool_place: bool = True):
+        self.engine = engine
+        self.sid = sid
+        self.tokens = np.asarray(tokens)
+        self.S = len(self.tokens)
+        self.C = int(chunk_tokens)
+        self.pool_place = pool_place
+        self.pos = 0
+        self.cache = lm.init_decode_cache(engine.cfg, 1, engine.ecfg.max_len)
+        self.placement = engine._default_placement()
+        self.result: Optional[Tuple[int, int]] = None
+        self.n_steps = 0
+        self._t0 = time.perf_counter()
+        self._prefill_s = 0.0
+        self._ingest_s = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def remaining(self) -> int:
+        """Prompt tokens still to prefill."""
+        return max(0, self.S - self.pos)
+
+    def _ingest_rows(self, li: int, layer: int, k: np.ndarray,
+                     v: np.ndarray, start: int) -> None:
+        eng = self.engine
+        eng.store.ingest(li, k, v,
+                         eng._layer_placement(layer, self.placement),
+                         seq=self.sid, executor=eng._ingest_exec,
+                         pool_place=self.pool_place, start=start)
+
+    def step(self) -> int:
+        """Advance one chunk; returns prompt tokens consumed (0 if done)."""
+        if self.done:
+            return 0
+        eng, C = self.engine, self.C
+        take = min(C, self.S - self.pos)
+        t0 = time.perf_counter()
+        chunk_toks = np.zeros(C, np.int64)
+        chunk_toks[:take] = self.tokens[self.pos:self.pos + take]
+        batch = {"tokens": jnp.asarray(chunk_toks[None], jnp.int32),
+                 "start": jnp.int32(self.pos),
+                 "length": jnp.int32(self.S)}
+        logits, self.cache = eng._prefill_chunk(batch, self.cache)
+        t1 = time.perf_counter()
+        self._prefill_s += t1 - t0
+        for li, layer in enumerate(eng.attn_layers):
+            k, v = eng._layer_kv_slice(self.cache, layer, self.pos, C)
+            self._ingest_rows(li, layer, k, v, self.pos)
+        self._ingest_s += time.perf_counter() - t1
+        self.pos += take
+        self.n_steps += 1
+        if self.pos >= self.S:
+            self._finish(logits)
+        return take
+
+    def _finish(self, logits) -> None:
+        eng = self.engine
+        end = -(-self.S // self.C) * self.C      # rows ingested so far
+        tail = eng.ecfg.max_len - end
+        if tail > 0:
+            # zero-fill the uncovered tail chunks: whole-prompt admission
+            # ingests the full max_len cache, and parity of tier labels /
+            # abstracts / the reused-slot scrub depends on matching it
+            t1 = time.perf_counter()
+            zk = np.zeros((tail, eng.cfg.n_kv_heads, eng.cfg.hd), np.float16)
+            for li, layer in enumerate(eng.attn_layers):
+                self._ingest_rows(li, layer, zk, zk, end)
+            self._ingest_s += time.perf_counter() - t1
+        tok = int(np.argmax(np.asarray(logits)[0]))
+        cache_np = jax.tree.map(np.asarray, self.cache)
+        eng.seqs[self.sid] = _SeqState(cache=cache_np, length=self.S,
+                                       access=AccessTable(eng.n_chunks))
+        eng.admit_profiles.append({
+            "total_s": time.perf_counter() - self._t0,
+            "prefill_s": self._prefill_s, "ingest_s": self._ingest_s,
+            "overlapped": float(eng._ingest_exec is not None),
+            "chunked": 1.0, "chunks": float(self.n_steps)})
+        self.result = (self.sid, tok)
+
+    def drain(self) -> Tuple[int, int]:
+        """Run every remaining chunk back to back (no interleaving)."""
+        while not self.done:
+            self.step()
+        return self.result
 
 
 class LeoAMEngine:

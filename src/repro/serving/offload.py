@@ -355,6 +355,17 @@ class TieredKVStore:
         # (workers need the store lock to land their writes)
         self._ingest_futs: Dict[int, List] = defaultdict(list)
         self._futs_lock = threading.Lock()
+        # sidecar requantization sweep: append-dirtied chunks keyed to the
+        # sweep round of their LAST append; a chunk quiet for a full round
+        # is re-packed in the background so long-running sequences regain
+        # packed disk->host promotions.  The per-chunk version aborts a
+        # repack that raced a newer append (or a slot reuse).
+        self._requant_pending: Dict[Tuple[int, int, int], int] = {}
+        self._chunk_version: Dict[Tuple[int, int, int], int] = \
+            defaultdict(int)
+        self._requant_futs: List = []
+        self._sweep_round = 0
+        self.sidecar_repacks = 0
 
     # ------------------------------------------------------------------
     @property
@@ -435,7 +446,8 @@ class TieredKVStore:
 
     def ingest(self, layer: int, k: np.ndarray, v: np.ndarray,
                placement: Dict[int, str], *, seq: int = 0,
-               executor=None, pool_place: bool = True) -> None:
+               executor=None, pool_place: bool = True,
+               start: int = 0) -> None:
         """Store prefill KV.  k/v: (S, Hkv, hd).  Every chunk is replicated
         to disk (with its abstract); ``placement`` assigns the hot tier.
 
@@ -447,17 +459,26 @@ class TieredKVStore:
         would-be device-pool placements to HOST — used when ingest runs
         concurrently with decode rounds, whose attention gathers read the
         pool slab outside the store lock (the first fetch promotes the
-        chunks instead; residency-only, so outputs never change)."""
+        chunks instead; residency-only, so outputs never change).
+
+        ``start`` (chunk-aligned token position) ingests a PARTIAL
+        sequence: rows land in chunks ``start // chunk`` onward — chunked
+        prefill streams each admission chunk in as it is forced, instead of
+        one whole-prompt call.  ``placement`` stays keyed by GLOBAL chunk
+        id; each call's cold writes join the same per-seq fence."""
+        assert start % self.chunk == 0, (start, self.chunk)
+        c0 = start // self.chunk
         with self._lock:
             S = k.shape[0]
             to_pool: List[Tuple[int, np.ndarray, np.ndarray]] = []
             cids: List[int] = []
             kcs: List[np.ndarray] = []
             vcs: List[np.ndarray] = []
-            for c in range(min(self.n_chunks,
+            for j in range(min(self.n_chunks - c0,
                                (S + self.chunk - 1) // self.chunk)):
-                kc = k[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
-                vc = v[c * self.chunk: (c + 1) * self.chunk].astype(self.dtype)
+                c = c0 + j
+                kc = k[j * self.chunk: (j + 1) * self.chunk].astype(self.dtype)
+                vc = v[j * self.chunk: (j + 1) * self.chunk].astype(self.dtype)
                 if kc.shape[0] < self.chunk:
                     pad = self.chunk - kc.shape[0]
                     kc = np.pad(kc, ((0, pad), (0, 0), (0, 0)))
@@ -964,8 +985,13 @@ class TieredKVStore:
             self._disk[sq, layer, cs, 1, offs] = vd
             if self.disk_sidecar:
                 # the chunk's per-channel scales no longer cover the new
-                # row — reads fall back to the lossless fp16 replica
+                # row — reads fall back to the lossless fp16 replica until
+                # the requant sweep re-packs the chunk once it goes quiet
                 self._sidecar_valid[sq, layer, cs] = False
+                for i in range(len(sq)):
+                    key = (int(sq[i]), layer, int(cs[i]))
+                    self._requant_pending[key] = self._sweep_round
+                    self._chunk_version[key] += 1
             self._abs_km[sq, layer, cs] = np.maximum(
                 self._abs_km[sq, layer, cs], k_news)
             self._abs_kn[sq, layer, cs] = np.minimum(
@@ -989,6 +1015,82 @@ class TieredKVStore:
                 self._record(seq, HOST, DISK, "kv_append", row_bytes)
 
     # ------------------------------------------------------------------
+    # Sidecar requantization sweep
+    # ------------------------------------------------------------------
+    def requant_sweep(self, executor=None) -> int:
+        """Advance the sweep clock one decode round and re-pack every
+        append-dirtied sidecar whose chunk stayed quiet for at least one
+        FULL round since its last append (the live tail chunk keeps
+        refreshing its entry every round, so it is never repacked while
+        appends still land in it).  With ``executor`` the repack runs
+        write-behind on that worker; a concurrent append (or slot reuse)
+        bumps the chunk's version and aborts that chunk's repack.  Returns
+        the number of chunks submitted for repack."""
+        if not self.disk_sidecar:
+            return 0
+        # prune landed repacks so the in-flight list stays bounded on a
+        # long-running server (one append per sweep otherwise), surfacing
+        # any worker exception instead of swallowing it
+        still = []
+        for f in self._requant_futs:
+            if f.done():
+                f.result()
+            else:
+                still.append(f)
+        self._requant_futs = still
+        with self._lock:
+            self._sweep_round += 1
+            r = self._sweep_round
+            ready = [key for key, rr in self._requant_pending.items()
+                     if rr < r - 1]
+            for key in ready:
+                self._requant_pending.pop(key)
+            vers = {key: self._chunk_version[key] for key in ready}
+        if not ready:
+            return 0
+        if executor is None:
+            self._requant_chunks(ready, vers)
+        else:
+            self._requant_futs.append(
+                executor.submit(self._requant_chunks, ready, vers))
+        return len(ready)
+
+    def _requant_chunks(self, keys: List[Tuple[int, int, int]],
+                        vers: Dict[Tuple[int, int, int], int]) -> None:
+        """Re-pack the fp16 replica of each chunk into its int sidecar.
+        Quantization runs OUTSIDE the lock on private copies; the write
+        re-validates the per-chunk version under the lock so a repack can
+        never mark a sidecar valid over rows it did not see."""
+        for seq, layer, c in keys:
+            key = (seq, layer, c)
+            with self._lock:
+                if self._chunk_version[key] != vers[key]:
+                    continue            # a newer append re-dirtied it
+                kc = np.array(self._disk[seq, layer, c, 0])
+                vc = np.array(self._disk[seq, layer, c, 1])
+            kd, ksc = compression.quantize_chunks(kc[None],
+                                                  self.transit_codec)
+            vd, vsc = compression.quantize_chunks(vc[None],
+                                                  self.transit_codec)
+            with self._lock:
+                if self._chunk_version[key] != vers[key]:
+                    continue            # raced an append mid-repack
+                self._disk_q[seq, layer, c, 0] = kd.reshape(self.chunk, -1)
+                self._disk_q[seq, layer, c, 1] = vd.reshape(self.chunk, -1)
+                self._disk_scale[seq, layer, c, 0] = ksc[0]
+                self._disk_scale[seq, layer, c, 1] = vsc[0]
+                self._sidecar_valid[seq, layer, c] = True
+                self.sidecar_repacks += 1
+                self._record(seq, HOST, DISK, "sidecar_repack",
+                             self._packed_bytes())
+
+    def requant_fence(self) -> None:
+        """Drain in-flight background repacks (shutdown / test ordering)."""
+        futs, self._requant_futs = self._requant_futs, []
+        for f in futs:
+            f.result()
+
+    # ------------------------------------------------------------------
     def clear_seq(self, seq: int) -> None:
         """Retire a sequence: free its hot-tier entries so the slot can be
         reused by the next admitted request.  The slot's traffic log moves
@@ -1009,6 +1111,12 @@ class TieredKVStore:
             self.tier[seq] = HOST
             self.access[seq] = 0.0
             self._sidecar_valid[seq] = False
+            # retire the slot's requant state: pending entries drop and the
+            # version bump aborts any in-flight repack of the old data
+            for key in [k for k in self._requant_pending if k[0] == seq]:
+                self._requant_pending.pop(key)
+            for key in [k for k in self._chunk_version if k[0] == seq]:
+                self._chunk_version[key] += 1
             if seq in self.seq_logs:
                 self.retired_logs.append(self.seq_logs.pop(seq))
 
@@ -1026,7 +1134,8 @@ class TieredKVStore:
 
     def close(self) -> None:
         self.ingest_fence_all()        # never tear the memmaps out from
-        del self._disk                 # under an in-flight cold write
+        self.requant_fence()           # under an in-flight cold write
+        del self._disk
         if self._disk_q is not None:
             del self._disk_q
             del self._disk_scale

@@ -23,6 +23,17 @@ worker while the active batch keeps decoding, and join the next round
 after their prefill future resolves — TTFT for queued requests drops by
 roughly the decode time they no longer wait out.
 
+With ``chunked_admission=True`` admission instead runs CHUNKED on the
+decode thread: the engine's resumable chunked prefill advances by at most
+``prefill_round_tokens`` prompt tokens between consecutive decode rounds,
+so the decode-latency spike a very long prompt causes while admitting is
+bounded by the budget instead of its whole prefill.  Either overlap mode
+can be paced (``pace_admission=True``): the scheduler EWMAs decode round
+time, keeps an idle baseline from rounds with no admission in flight, and
+holds admission work while the running EWMA exceeds the baseline by more
+than ``max_round_inflation`` — overlap only spends host cycles when the
+host has headroom.  The gate state is exported by :meth:`stats`.
+
 Two drive modes:
 
 * **batched** (pass ``engine=BatchedLeoAMEngine(...)``): every round is ONE
@@ -85,6 +96,24 @@ class SchedulerCfg:
     min_pool_hit_rate: float = 0.0     # hold admission while the warm pool
                                        # hit rate sits below this (0 = off)
     hit_rate_warmup: int = 64          # pool lookups before the gate arms
+    chunked_admission: bool = False    # admit via the engine's resumable
+                                       # chunked prefill: chunk steps run
+                                       # BETWEEN decode rounds under a
+                                       # per-round token budget, so a long
+                                       # prompt never stalls the round
+                                       # loop for its whole prefill
+    prefill_round_tokens: int = 64     # chunked mode: max prompt tokens
+                                       # advanced between two decode rounds
+                                       # (the decode-stall bound); lifted
+                                       # when nothing is decoding
+    pace_admission: bool = False       # contention-aware pacing: hold
+                                       # admission work (async prefills /
+                                       # chunk steps) while the decode
+                                       # round EWMA sits above the idle
+                                       # baseline by max_round_inflation
+    max_round_inflation: float = 0.5   # tolerated round-time inflation
+                                       # before the pacing gate closes
+    ewma_alpha: float = 0.25           # round-time EWMA smoothing
 
 
 class ContinuousBatcher:
@@ -106,11 +135,23 @@ class ContinuousBatcher:
         self.make_engine = make_engine
         self.engine = engine
         self.cfg = cfg or SchedulerCfg()
+        assert not (self.cfg.chunked_admission
+                    and self.cfg.overlap_admission), \
+            "chunked and overlapped admission are exclusive modes"
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, tuple] = {}
         self._pending: List[Tuple[Request, "object"]] = []
         self._ready: List[Tuple[Request, "object", int]] = []
+        # in-flight chunked admissions (own an engine slot; advanced
+        # between decode rounds under the per-round token budget)
+        self._chunked: List[Tuple[Request, "object"]] = []
         self.finished: List[Request] = []
+        # contention-aware admission pacing state (EWMA of decode round
+        # time vs the idle baseline measured with no admission in flight)
+        self._round_ewma: Optional[float] = None
+        self._idle_ewma: Optional[float] = None
+        self._gate_open = True
+        self._gated_rounds = 0
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -139,6 +180,7 @@ class ContinuousBatcher:
     def _device_chunks_used(self) -> int:
         reqs = [r for r, _, _ in self.active.values()] \
             + [r for r, _ in self._pending] \
+            + [r for r, _ in self._chunked] \
             + [r for r, _, _ in self._ready]
         return sum(self._need(r) for r in reqs)
 
@@ -146,13 +188,18 @@ class ContinuousBatcher:
         return (self.cfg.overlap_admission and self.engine is not None
                 and hasattr(self.engine, "add_sequence_async"))
 
+    def _chunked_mode(self) -> bool:
+        return (self.cfg.chunked_admission and self.engine is not None
+                and hasattr(self.engine, "begin_admission"))
+
     def _can_admit(self) -> bool:
-        # async admissions may run prefill_ahead past the decode slots:
-        # the ready queue backfills a retiring slot with zero prefill stall
-        cap = self.cfg.max_active + (self.cfg.prefill_ahead
-                                     if self._overlap() else 0)
+        # async/chunked admissions may run prefill_ahead past the decode
+        # slots: the ready queue backfills a retiring slot with zero
+        # prefill stall
+        ahead = self._overlap() or self._chunked_mode()
+        cap = self.cfg.max_active + (self.cfg.prefill_ahead if ahead else 0)
         if not self.queue or \
-                len(self.active) + len(self._pending) \
+                len(self.active) + len(self._pending) + len(self._chunked) \
                 + len(self._ready) >= cap:
             return False
         if self._pool_mode():
@@ -171,8 +218,16 @@ class ContinuousBatcher:
 
     def _admit(self) -> None:
         overlap = self._overlap()
+        chunked = self._chunked_mode()
         while self._can_admit():
+            if (self.cfg.pace_admission and not self._gate_open
+                    and self.active and (overlap or chunked)):
+                break                  # host has no headroom: hold overlap
             req = self.queue.popleft()
+            if chunked:
+                adm = self.engine.begin_admission(req.prompt)
+                self._chunked.append((req, adm))
+                continue
             if overlap:
                 fut = self.engine.add_sequence_async(req.prompt)
                 self._pending.append((req, fut))
@@ -185,6 +240,11 @@ class ContinuousBatcher:
             req.t_first = time.perf_counter()
             req.out.append(tok)
             self.active[req.rid] = (req, handle, tok)
+
+    def _activate_ready(self) -> None:
+        while self._ready and len(self.active) < self.cfg.max_active:
+            req, sid, tok = self._ready.pop(0)
+            self.active[req.rid] = (req, sid, tok)
 
     def _collect_admitted(self, block: bool = False) -> None:
         """Resolve async admissions (TTFT stops when the prefill future
@@ -201,9 +261,56 @@ class ContinuousBatcher:
             else:
                 still.append((req, fut))
         self._pending = still
-        while self._ready and len(self.active) < self.cfg.max_active:
-            req, sid, tok = self._ready.pop(0)
-            self.active[req.rid] = (req, sid, tok)
+        self._activate_ready()
+
+    def _advance_chunked(self) -> None:
+        """Advance in-flight chunked admissions under the per-round prefill
+        token budget — decode rounds run between chunk steps, so the max
+        decode stall a long prompt causes is bounded by the budget.  With
+        no active decode the budget lifts (nothing to stall) but only one
+        admission drains, so arrivals keep joining in order."""
+        if not self._chunked:
+            return
+        if self.cfg.pace_admission and not self._gate_open and self.active:
+            self._gated_rounds += 1
+            return
+        budget = self.cfg.prefill_round_tokens if self.active else None
+        while self._chunked:
+            if budget is not None and budget <= 0:
+                break
+            req, adm = self._chunked[0]
+            did = adm.step()
+            if budget is not None:
+                budget -= did
+            if adm.done:
+                self._chunked.pop(0)
+                sid, tok = adm.result
+                req.t_first = time.perf_counter()
+                req.out.append(tok)
+                self._ready.append((req, sid, tok))
+                if budget is None:
+                    break              # drained one admission; that's
+                                       # enough progress for an idle loop
+        self._activate_ready()
+
+    def _note_round(self, dt: float, admission_active: bool) -> None:
+        """Feed one decode round's wall time into the pacing EWMAs and
+        update the gate: rounds with no admission in flight refresh the
+        idle baseline; the gate closes while the running EWMA exceeds the
+        baseline by more than ``max_round_inflation``."""
+        a = self.cfg.ewma_alpha
+        self._round_ewma = dt if self._round_ewma is None else \
+            (1 - a) * self._round_ewma + a * dt
+        if not admission_active:
+            self._idle_ewma = dt if self._idle_ewma is None else \
+                (1 - a) * self._idle_ewma + a * dt
+        if self.cfg.pace_admission:
+            if self._idle_ewma is None:
+                self._gate_open = True
+            else:
+                self._gate_open = (
+                    self._round_ewma
+                    <= self._idle_ewma * (1.0 + self.cfg.max_round_inflation))
 
     def _retire(self, rids: List[int]) -> None:
         for rid in rids:
@@ -215,6 +322,14 @@ class ContinuousBatcher:
             elif hasattr(handle, "store") and handle.store is not None:
                 handle.store.close()
 
+    @property
+    def pending_work(self) -> bool:
+        """True while any request is queued, decoding, or mid-admission —
+        the loop condition :meth:`run` uses (public, so external drivers
+        don't reach into the admission queues)."""
+        return bool(self.queue or self.active or self._pending
+                    or self._ready or self._chunked)
+
     def step(self) -> int:
         """One decode round over all active requests; returns #active."""
         self._admit()
@@ -222,11 +337,14 @@ class ContinuousBatcher:
         retired = [rid for rid, (req, _, _) in self.active.items() if req.done]
         live = {rid: v for rid, v in self.active.items()
                 if rid not in retired}
+        admission_active = bool(self._pending) or bool(self._chunked)
         if self.engine is not None and live:
             # ONE batched decode round for every live sequence; async
             # admissions prefill underneath it on the admission worker
+            t0 = time.perf_counter()
             toks = self.engine.decode_round(
                 {sid: tok for (_, sid, tok) in live.values()})
+            self._note_round(time.perf_counter() - t0, admission_active)
             for rid, (req, sid, _) in live.items():
                 tok = toks[sid]
                 req.out.append(tok)
@@ -241,14 +359,16 @@ class ContinuousBatcher:
                 if req.done:
                     retired.append(rid)
         self._retire(retired)
+        # chunked admissions advance HERE, between decode rounds, under
+        # the per-round prefill token budget
+        self._advance_chunked()
         self._admit()
         self._collect_admitted(block=not self.active and bool(self._pending))
         return len(self.active)
 
     def run(self, max_rounds: int = 10_000) -> List[Request]:
         rounds = 0
-        while (self.queue or self.active or self._pending or self._ready) \
-                and rounds < max_rounds:
+        while self.pending_work and rounds < max_rounds:
             self.step()
             rounds += 1
         return self.finished
@@ -259,10 +379,16 @@ class ContinuousBatcher:
         out of submit order (continuous batching retires early finishers
         first), so the makespan is guarded to stay positive and every
         per-request rate divides by a clamped span."""
+        pacing = {"admission_gate_open": float(self._gate_open),
+                  "gated_rounds": float(self._gated_rounds)}
+        if self._round_ewma is not None:
+            pacing["round_ewma_s"] = float(self._round_ewma)
+        if self._idle_ewma is not None:
+            pacing["idle_round_ewma_s"] = float(self._idle_ewma)
         done = [r for r in self.finished
                 if r.t_first is not None and r.t_done is not None]
         if not done:
-            return {}
+            return pacing
         ttft = np.array([r.t_first - r.t_submit for r in done])
         lat = np.array([r.t_done - r.t_submit for r in done])
         # per-request decode rate: tokens after the first, over the decode
@@ -272,7 +398,8 @@ class ContinuousBatcher:
         toks = sum(len(r.out) for r in done)
         span = max(max(r.t_done for r in done)
                    - min(r.t_submit for r in done), 1e-9)
-        out = {"requests": len(done),
+        out = {**pacing,
+               "requests": len(done),
                "mean_ttft_s": float(ttft.mean()),
                "p50_ttft_s": float(np.percentile(ttft, 50)),
                "p95_ttft_s": float(np.percentile(ttft, 95)),

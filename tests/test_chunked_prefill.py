@@ -1,0 +1,386 @@
+"""Bucketed + chunked prefill (PR 4): O(log L) compiled prefill programs,
+resumable chunked admission interleaved with decode, partial-sequence
+ingest, contention-aware admission pacing, and the sidecar requantization
+sweep — token parity, program-count, billing and gate-state guarantees."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import compression
+from repro.core.pipeline import chunked_admission_model
+from repro.serving.offload import DEVICE, DISK, HOST, TieredKVStore
+from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerCfg
+
+_SETUP = {}
+
+
+def _setup():
+    """Module-lazy smoke model (the hypothesis shim can't take fixtures)."""
+    if not _SETUP:
+        from repro.configs import get_config
+        from repro.models import lm
+        cfg = get_config("longchat-7b-32k", smoke=True)
+        cfg = dataclasses.replace(
+            cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                           importance_rate=0.4,
+                                           early_rate=0.6,
+                                           min_seq_for_sparse=32))
+        _SETUP["cfg"] = cfg
+        _SETUP["params"] = lm.init(cfg, jax.random.PRNGKey(1))
+        _SETUP["rng"] = np.random.RandomState(7)
+    return _SETUP["cfg"], _SETUP["params"]
+
+
+def _ecfg(**kw):
+    from repro.serving.engine import EngineCfg
+    return EngineCfg(max_len=128, selection="tree", **kw)
+
+
+def _engine(max_seqs=1, **kw):
+    from repro.serving.engine import BatchedLeoAMEngine
+    cfg, params = _setup()
+    return BatchedLeoAMEngine(cfg, params, _ecfg(**kw), max_seqs=max_seqs)
+
+
+def _gen(eng, prompt, n_new=3):
+    sid, tok = eng.add_sequence(prompt)
+    out = [tok]
+    toks = {sid: tok}
+    for _ in range(n_new):
+        toks = eng.decode_round(toks)
+        out.append(toks[sid])
+    eng.release(sid)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Bucketed prefill
+# ---------------------------------------------------------------------------
+
+
+_ENGINES = {}
+
+
+def _bucket_pair():
+    """Persistent (exact, bucketed) engine pair — jit caches amortize
+    across the parametrized lengths."""
+    if not _ENGINES:
+        _ENGINES["exact"] = _engine(bucket_prefill=False)
+        _ENGINES["bucket"] = _engine(bucket_prefill=True)
+    return _ENGINES["exact"], _ENGINES["bucket"]
+
+
+@pytest.mark.parametrize("L", [31, 32, 33, 63, 64, 65])
+def test_bucketed_prefill_token_identical_at_bucket_edges(L):
+    """Property (bucket edges L, L±1): padding the prompt to its length
+    bucket with the validity mask threaded through prefill decodes the
+    EXACT token stream of exact-length prefill — padded keys are causally
+    invisible and bucket-padding cache rows ingest as zeros, exactly like
+    the exact path's pad rows."""
+    cfg, _ = _setup()
+    prompt = np.random.RandomState(100 + L).randint(2, cfg.vocab_size, L)
+    exact, bucket = _bucket_pair()
+    assert _gen(bucket, prompt) == _gen(exact, prompt)
+
+
+def test_mixed_lengths_compile_log_programs():
+    """Acceptance: >= 16 distinct prompt lengths compile at most
+    ceil(log2(max_len)) + 2 prefill programs (one per LENGTH today would be
+    16+), with first tokens matching the exact-length path."""
+    cfg, _ = _setup()
+    exact, bucket = _bucket_pair()
+    rng = np.random.RandomState(11)
+    lengths = list(range(17, 113, 6))          # 16 distinct lengths
+    assert len(set(lengths)) >= 16
+    for L in lengths:
+        p = rng.randint(2, cfg.vocab_size, L)
+        sid_b, tok_b = bucket.add_sequence(p)
+        bucket.release(sid_b)
+        sid_e, tok_e = exact.add_sequence(p)
+        exact.release(sid_e)
+        assert tok_b == tok_e, L
+    limit = math.ceil(math.log2(bucket.ecfg.max_len)) + 2
+    assert bucket.prefill_programs <= limit, (bucket.prefill_programs, limit)
+    # the exact engine really does compile per length (the regression the
+    # bucket schedule kills)
+    assert exact.prefill_programs >= len(lengths)
+
+
+def test_masked_state_scan_ignores_padding():
+    """The recurrent-layer prefill helper: bucket-padding rows are identity
+    for the carried state (mamba/xlstm states stop at ``length``)."""
+    from repro.models.lm import _masked_state_scan
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 8, 4))
+    step = lambda c, xt: c * 0.5 + xt
+    exact = _masked_state_scan(step, jnp.zeros((2, 4)), x[:, :5], None)
+    padded = _masked_state_scan(step, jnp.zeros((2, 4)), x, jnp.int32(5))
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(padded))
+
+
+# ---------------------------------------------------------------------------
+# Chunked admission
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_chunked_admission_interleaved_matches_serial(seed):
+    """Property: chunked admission stepped at RANDOM interleavings with a
+    running sequence's decode rounds produces token streams identical to
+    whole-prompt admission at the same round schedule — chunk boundaries
+    move residency and latency, never values."""
+    cfg, _ = _setup()
+    rng = np.random.RandomState(seed)
+    pa = rng.randint(2, cfg.vocab_size, 41)
+    pb = rng.randint(2, cfg.vocab_size, 57)
+    pre_rounds = int(rng.randint(0, 3))        # rounds of A before B starts
+    interleave = [bool(b) for b in rng.randint(2, size=8)]  # round after
+                                               # chunk i of B's admission?
+
+    def run(chunked: bool):
+        eng = _engine(max_seqs=2, prefill_chunk_tokens=32)
+        sa_, ta = eng.add_sequence(pa)
+        outs = {sa_: [ta]}
+        toks = {sa_: ta}
+        for _ in range(pre_rounds):
+            toks = eng.decode_round(toks)
+            outs[sa_].append(toks[sa_])
+        if chunked:
+            adm = eng.begin_admission(pb)
+            for do_round in interleave:
+                adm.step()                     # one chunk ...
+                if adm.done:
+                    break
+                if do_round:
+                    toks = eng.decode_round(toks)   # ... then maybe a round
+                    outs[sa_].append(toks[sa_])
+            sb, tb = adm.drain()
+        else:
+            sb, tb = eng.add_sequence(pb)
+        outs[sb] = [tb]
+        toks[sb] = tb
+        for _ in range(3):
+            toks = eng.decode_round(toks)
+            for s, t in toks.items():
+                outs[s].append(t)
+        eng.store.close()
+        # A's stream length differs by the interleaving; compare the
+        # common prefix of A and all of B
+        return outs[sa_], outs[sb]
+
+    a_chunk, b_chunk = run(True)
+    a_ser, b_ser = run(False)
+    n = min(len(a_chunk), len(a_ser))
+    assert a_chunk[:n] == a_ser[:n]
+    assert b_chunk == b_ser
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_scheduler_chunked_admission_arrival_order_parity(seed):
+    """Property: the batcher's chunked-admission mode (budgeted chunk steps
+    between rounds) matches serial admission token-for-token for every
+    arrival order and budget."""
+    cfg, params = _setup()
+    from repro.serving.engine import BatchedLeoAMEngine
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(2, cfg.vocab_size, n) for n in (48, 57, 64, 50)]
+    order = list(rng.permutation(4))
+    budget = int(rng.choice([16, 32, 64]))
+
+    def drive(chunked: bool):
+        eng = BatchedLeoAMEngine(cfg, params,
+                                 _ecfg(prefill_chunk_tokens=16),
+                                 max_seqs=3)
+        b = ContinuousBatcher(
+            cfg=SchedulerCfg(max_active=2, chunk=16,
+                             chunked_admission=chunked,
+                             prefill_round_tokens=budget),
+            engine=eng)
+        for i in order:
+            b.submit(Request(i, prompts[i], max_new=4))
+        out = {r.rid: r.out for r in b.run()}
+        eng.store.close()
+        return out
+
+    assert drive(True) == drive(False), (order, budget)
+
+
+def test_partial_ingest_matches_whole(rng):
+    """Chunk-aligned partial ingest (start=...) lands the same replicas,
+    abstracts, tiers and billed bytes as one whole-sequence ingest."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    v = rng.randn(64, 2, 8).astype(np.float16)
+    place = {0: DEVICE, 1: HOST, 2: DISK, 3: DISK}
+    whole = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec="int4")
+    whole.ingest(0, k, v, place)
+    part = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec="int4")
+    for start in (0, 32):
+        part.ingest(0, k[start:start + 32], v[start:start + 32], place,
+                    start=start)
+    np.testing.assert_array_equal(np.asarray(whole._disk),
+                                  np.asarray(part._disk))
+    np.testing.assert_array_equal(whole._abs_km, part._abs_km)
+    np.testing.assert_array_equal(whole._abs_kn, part._abs_kn)
+    assert list(whole.tier[0, 0]) == list(part.tier[0, 0])
+    assert whole.log.total() == part.log.total()
+    kw, _ = whole.fetch_chunks(0, [0, 1, 2, 3])
+    kp, _ = part.fetch_chunks(0, [0, 1, 2, 3])
+    np.testing.assert_array_equal(kw, kp)
+    whole.close()
+    part.close()
+
+
+def test_unaligned_partial_ingest_rejected(rng):
+    st_ = TieredKVStore(1, 4, 16, 2, 8, n_seqs=1, transit_codec=None)
+    k = rng.randn(16, 2, 8).astype(np.float16)
+    with pytest.raises(AssertionError):
+        st_.ingest(0, k, k, {}, start=8)
+    st_.close()
+
+
+# ---------------------------------------------------------------------------
+# Contention-aware admission pacing
+# ---------------------------------------------------------------------------
+
+
+def test_admission_pacing_gate_closes_and_reopens():
+    """The pacing gate: inflated rounds (vs the idle baseline) close it,
+    cool rounds reopen it, and a closed gate blocks chunk advancement
+    while decode is active (counted in gated_rounds / stats)."""
+    b = ContinuousBatcher(make_engine=lambda: None,
+                          cfg=SchedulerCfg(pace_admission=True,
+                                           max_round_inflation=0.3,
+                                           ewma_alpha=0.5))
+    for _ in range(4):                       # idle baseline ~0.1
+        b._note_round(0.1, admission_active=False)
+    assert b._gate_open
+    for _ in range(4):                       # admission inflates rounds 3x
+        b._note_round(0.3, admission_active=True)
+    assert not b._gate_open
+
+    class _Adm:
+        done = False
+        def step(self):
+            raise AssertionError("gated admission must not advance")
+    b._chunked = [(Request(0, np.arange(4), max_new=1), _Adm())]
+    b.active[9] = (Request(9, np.arange(4), max_new=8), 0, 1)
+    b._advance_chunked()                     # gate closed: no step()
+    assert b._gated_rounds == 1
+    stt = b.stats()
+    assert stt["admission_gate_open"] == 0.0
+    assert stt["gated_rounds"] == 1.0
+    assert stt["round_ewma_s"] > stt["idle_round_ewma_s"]
+    for _ in range(8):                       # admission paused: rounds cool
+        b._note_round(0.1, admission_active=False)
+    assert b._gate_open
+
+
+def test_pacing_gate_open_allows_chunked_progress():
+    """With ample inflation headroom the gate stays open end to end and
+    chunked admission completes normally (plumbed through run())."""
+    cfg, params = _setup()
+    from repro.serving.engine import BatchedLeoAMEngine
+    eng = BatchedLeoAMEngine(cfg, params, _ecfg(prefill_chunk_tokens=32),
+                             max_seqs=3)
+    b = ContinuousBatcher(
+        cfg=SchedulerCfg(max_active=2, chunk=16, chunked_admission=True,
+                         prefill_round_tokens=32, pace_admission=True,
+                         max_round_inflation=1e6),
+        engine=eng)
+    rng = np.random.RandomState(0)
+    for i in range(3):
+        b.submit(Request(i, rng.randint(2, cfg.vocab_size, 48), max_new=3))
+    done = b.run()
+    assert len(done) == 3
+    assert b.stats()["admission_gate_open"] == 1.0
+    eng.store.close()
+
+
+# ---------------------------------------------------------------------------
+# Sidecar requantization sweep
+# ---------------------------------------------------------------------------
+
+
+def test_requant_sweep_repacks_quiet_chunks(rng):
+    """An append-dirtied chunk is re-packed after one FULL quiet round:
+    reads bill packed bytes again, values (incl. the appended row) sit
+    within the quantization bound, and repacks are counted in the traffic
+    log.  The live tail chunk (appended every round) is never repacked."""
+    k = rng.randn(64, 2, 8).astype(np.float16)
+    st_ = TieredKVStore(1, 8, 16, 2, 8, n_seqs=1, transit_codec="int4",
+                        use_pool=True, disk_sidecar=True)
+    st_.ingest(0, k, k, {c: DISK for c in range(4)})
+    newk = rng.randn(2, 8).astype(np.float16)
+    st_.append_token(0, 63, newk, newk)          # dirties chunk 3
+    assert not st_._sidecar_valid[0, 0, 3]
+    assert st_.requant_sweep() == 0              # round r: just appended
+    assert st_.requant_sweep() == 1              # round r+1: quiet -> repack
+    assert bool(st_._sidecar_valid[0, 0, 3])
+    assert st_.sidecar_repacks == 1
+    packed = st_.chunk_bytes * compression.codec_ratio("int4", group=16)
+    assert st_.log.total(kind="sidecar_repack") == pytest.approx(packed)
+    # promotion reads packed bytes again and the appended row round-trips
+    st_.demote(0, [3], to=DISK)
+    _, _, fst = st_.fetch_chunks_pooled(0, {0: [3]})
+    assert fst.disk_bytes == pytest.approx(packed)
+    got = st_._host_k[(0, 0, 3)][15].astype(np.float32)
+    # symmetric int4 round-trip: error bounded by half the per-channel
+    # scale of the REPACKED chunk (which includes the appended row)
+    chunk3 = np.array(st_._disk[0, 0, 3, 0])
+    _, scale = compression.quantize_chunks(chunk3[None], "int4")
+    bound = scale[0].reshape(2, 8) / 2 + 2e-3
+    assert np.all(np.abs(got - newk.astype(np.float32)) <= bound)
+    # tail chunk appended every round keeps its pending entry fresh
+    for pos in (64, 65, 66):
+        st_.append_token(0, pos, newk, newk)
+        st_.requant_sweep()
+    assert not st_._sidecar_valid[0, 0, 4]
+    st_.close()
+
+
+def test_requant_sweep_engine_smoke():
+    """Live engine with disk_sidecar: decode rounds trigger background
+    repacks through the shared prefetch executor (counted), and the token
+    stream is unchanged vs sidecar_requant=False."""
+    cfg, _ = _setup()
+    prompt = np.random.RandomState(3).randint(2, cfg.vocab_size, 60)
+    streams = {}
+    repacks = {}
+    for sweep in (False, True):
+        eng = _engine(disk_sidecar=True, real_codec=True,
+                      sidecar_requant=sweep)
+        streams[sweep] = _gen(eng, prompt, n_new=6)
+        eng.store.requant_fence()
+        repacks[sweep] = eng.store.sidecar_repacks
+        eng.store.close()
+    assert streams[True] == streams[False]
+    assert repacks[False] == 0
+    assert repacks[True] > 0
+
+
+# ---------------------------------------------------------------------------
+# Analytic model
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_admission_model_bounds_round_gap():
+    m = chunked_admission_model(chunk_s=0.1, n_chunks=8, round_s=0.2,
+                                chunks_per_round=2)
+    assert m["max_round_gap_chunked_s"] == pytest.approx(0.2 + 2 * 0.1)
+    assert m["max_round_gap_whole_s"] == pytest.approx(0.2 + 8 * 0.1)
+    assert m["ttft_whole_s"] == pytest.approx(0.8)
+    # chunked TTFT pays exactly the interleaved rounds
+    assert m["ttft_chunked_s"] == pytest.approx(0.8 + 3 * 0.2)
+    # a budget >= the whole prompt degenerates to whole-prompt admission
+    m1 = chunked_admission_model(0.1, 8, 0.2, 8)
+    assert m1["ttft_chunked_s"] == pytest.approx(m1["ttft_whole_s"])
+    assert m1["max_round_gap_chunked_s"] == \
+        pytest.approx(m1["max_round_gap_whole_s"])
