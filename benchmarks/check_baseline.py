@@ -41,10 +41,13 @@ GATED = [
 
 # absolute count ceilings (NOT latency-scaled): the bucketed prefill path
 # must keep its compiled-program count O(log max_len) for the smoke length
-# mix — ceil(log2(512)) + 2 — instead of one XLA program per distinct
+# mix — ceil(log2(max_len)) + 2 — instead of one XLA program per distinct
 # prompt length.  A count regression here means the bucket schedule broke.
+# Gated for BOTH the GQA mix (max_len=512 -> 11) and the absorbed-MLA mix
+# (max_len=256 -> 10): MLA traffic rides the same bucket schedule.
 COUNT_LIMITS = {
     "fig13/mixed/prefill_programs": 11.0,
+    "fig13/mixed_mla/prefill_programs": 10.0,
 }
 
 

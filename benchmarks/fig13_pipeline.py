@@ -157,26 +157,45 @@ def run_mixed_length() -> None:
     p50/p95, and the max step stall the running batch sees while the long
     prompt admits: whole-prompt admission pays its entire prefill in one
     gap, chunked admission is bounded by the per-round token budget."""
+    _mixed_length_scenario(
+        arch="longchat-7b-32k", tag="mixed", max_len=512,
+        lengths=[64, 72, 460] + list(range(20, 98, 6)),
+        straggler_rounds=16, min_distinct=16)
+
+
+def run_mixed_length_mla() -> None:
+    """The same mixed-length scenario on a DeepSeek-class absorbed-MLA
+    model (PR 5): MLA traffic rides the bucketed + chunked admission path
+    through the latent single-plane store, so the compiled-program gate
+    and the bounded-stall comparison cover it too."""
+    _mixed_length_scenario(
+        arch="deepseek-v2-lite-16b", tag="mixed_mla", max_len=256,
+        lengths=[64, 72, 230] + list(range(20, 92, 8)),
+        straggler_rounds=12, min_distinct=12)
+
+
+def _mixed_length_scenario(arch: str, tag: str, max_len: int,
+                           lengths: list, straggler_rounds: int,
+                           min_distinct: int) -> None:
     import jax
     from repro.models import lm
     from repro.serving.engine import BatchedLeoAMEngine, EngineCfg
     from repro.serving.scheduler import (ContinuousBatcher, Request,
                                          SchedulerCfg)
 
-    cfg = get_config("longchat-7b-32k", smoke=True)
+    cfg = get_config(arch, smoke=True)
     cfg = dataclasses.replace(
         cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
                                        importance_rate=0.3, early_rate=0.5,
                                        min_seq_for_sparse=32))
     params = lm.init(cfg, jax.random.PRNGKey(1))
     rng = np.random.RandomState(5)
-    max_len = 512
-    # 16 distinct lengths; the two mediums arrive first (and decode long
-    # enough that the 460-token straggler admits UNDER their rounds)
-    lengths = [64, 72, 460] + list(range(20, 98, 6))
-    assert len(set(lengths)) >= 16
+    # the two mediums arrive first (and decode long enough that the long
+    # straggler admits UNDER their rounds)
+    assert len(set(lengths)) >= min_distinct
     prompts = [rng.randint(2, cfg.vocab_size, n) for n in lengths]
-    max_news = [16, 16, 4] + [2] * (len(lengths) - 3)
+    max_news = [straggler_rounds, straggler_rounds, 4] \
+        + [2] * (len(lengths) - 3)
 
     def drive(eng, chunked: bool, measure: bool):
         b = ContinuousBatcher(
@@ -208,20 +227,20 @@ def run_mixed_length() -> None:
         results[mode] = (stalls, stt, eng.prefill_programs)
         eng.store.close()
     for mode, (stalls, stt, programs) in results.items():
-        emit(f"fig13/mixed/{mode}/max_round_stall",
+        emit(f"fig13/{tag}/{mode}/max_round_stall",
              max(stalls) * 1e6 if stalls else 0.0,
              f"p50_ttft={stt['p50_ttft_s'] * 1e3:.0f}ms,"
              f"p95_ttft={stt['p95_ttft_s'] * 1e3:.0f}ms,"
              f"programs={programs}")
     w, c = max(results["whole"][0]), max(results["chunked"][0])
-    emit("fig13/mixed/stall_reduction", 0.0,
+    emit(f"fig13/{tag}/stall_reduction", 0.0,
          f"{w / max(c, 1e-12):.2f}x,budget=32tok")
     # the CI gate: compiled prefill programs for the whole mix must stay
-    # O(log max_len) (ceil(log2(512)) + 2 = 11), not one per length —
-    # gate on the WHOLE-prompt engine, whose 16 admissions all went
-    # through the bucket schedule (the chunked engine compiles exactly one
-    # chunk-step program regardless of length)
-    emit("fig13/mixed/prefill_programs", float(results["whole"][2]),
+    # O(log max_len) (ceil(log2(max_len)) + 2), not one per length — gate
+    # on the WHOLE-prompt engine, whose admissions all went through the
+    # bucket schedule (the chunked engine compiles exactly one chunk-step
+    # program regardless of length)
+    emit(f"fig13/{tag}/prefill_programs", float(results["whole"][2]),
          f"distinct_lengths={len(set(lengths))},"
          f"chunked_programs={results['chunked'][2]},"
          f"limit=ceil(log2({max_len}))+2")
@@ -232,3 +251,4 @@ def run() -> None:
     run_engine_overlap()
     run_admission_ttft()
     run_mixed_length()
+    run_mixed_length_mla()

@@ -1,6 +1,13 @@
 """Attention layers: GQA (with qk-norm / softcap / sliding window) and
 DeepSeek MLA — train/prefill blocked-flash paths and LeoAM sparse decode.
 
+The absorbed-MLA cache is ONE latent row per token (ckv ‖ krope); the
+serving engine tiers exactly that row through its single-plane store and
+scores chunks in latent space (see docs/ARCHITECTURE.md), so the cache
+builders here and the engine's chunked-admission path must zero/pad
+identically — that invariant is what the bucketed/chunked parity tests
+pin down.
+
 Decode-path distribution: the KV cache sequence dim is sharded over the mesh
 axes returned by ``sharding.partition.seq_shard_axes`` and attention runs
 inside ``shard_map`` — chunk selection and the gathered flash attention are
@@ -482,6 +489,16 @@ def mla_train(p, cfg: ArchConfig, kind: str, x: jax.Array, pos) -> jax.Array:
 
 def mla_prefill_cache(p, cfg: ArchConfig, x: jax.Array, pos, max_len: int,
                       length) -> Dict[str, jax.Array]:
+    """Build the absorbed-MLA decode cache (latent ckv/krope + abstract
+    pyramids) after prefill.
+
+    ``length`` (static or traced) marks the prompt's true length under
+    bucketed prefill: rows at positions >= length are zeroed BEFORE the
+    max_len pad, exactly as :func:`gqa_prefill_cache` — the serving
+    engine ingests these latents into its single-plane tier store
+    (concat(ckv, krope) per token), so bucket-padding rows must match
+    the exact-length path bit-for-bit for chunk replicas and min/max
+    abstracts to agree."""
     m = cfg.mla
     B, S, _ = x.shape
     kv_a = x @ p["wkv_a"]

@@ -28,7 +28,8 @@ from repro.models import mlp as mlp_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.attention import DecodeCtx, LOCAL_CTX
-from repro.models.common import cross_entropy, positions_for, rms_norm, softcap
+from repro.models.common import (cross_entropy, positions_for, rms_norm,
+                                 rotate, softcap)
 from repro.models.params import (ParamDef, abstract_tree, axes_tree,
                                  init_tree, is_def)
 from repro.sharding.ctx import constrain
@@ -205,12 +206,17 @@ def encoder_len(cfg: ArchConfig, dec_len: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _apply_mlp(blk, cfg: ArchConfig, mlp_kind: str, x, aux):
+def _apply_mlp(blk, cfg: ArchConfig, mlp_kind: str, x, aux, *,
+               no_drop: bool = False):
+    """``no_drop``: inference MoE dispatch — no capacity drops, so token
+    outputs are independent of the surrounding batch shape (chunked /
+    bucketed prefill stays token-identical to whole-prompt; see
+    :func:`mlp.moe_apply`)."""
     if mlp_kind == "none" or "mlp" not in blk:
         return x, aux
     h = rms_norm(x, blk["ln2"], cfg.norm_eps)
     if mlp_kind == "moe":
-        y, a = mlp_mod.moe_apply(blk["mlp"], cfg, h)
+        y, a = mlp_mod.moe_apply(blk["mlp"], cfg, h, no_drop=no_drop)
         aux = {k: aux.get(k, 0.0) + v for k, v in a.items()} if aux is not None else None
     else:
         y = mlp_mod.dense_apply(blk["mlp"], cfg, h)
@@ -273,7 +279,7 @@ def _block_decode(blk, cfg: ArchConfig, kind: str, mlp_kind: str, x, cache,
                                layer_idx=layer_idx, ctx=LOCAL_CTX,
                                cross_kv_cache=(cache["cross_k"], cache["cross_v"]))
         x = x + y
-    x, aux = _apply_mlp(blk, cfg, mlp_kind, x, aux)
+    x, aux = _apply_mlp(blk, cfg, mlp_kind, x, aux, no_drop=True)
     return x, new_cache, aux
 
 
@@ -459,7 +465,7 @@ def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
                                   xlstm_mod.slstm_decode, blk["core"], cfg, h,
                                   length=mask_len)
             x, cache = x + y, st
-        x, _ = _apply_mlp(blk, cfg, mlpk, x, None)
+        x, _ = _apply_mlp(blk, cfg, mlpk, x, None, no_drop=True)
         return x, cache
 
     caches_pro = []
@@ -562,10 +568,13 @@ def prefill_chunk(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
     Returns (logits at position ``min(length, start + C) - 1``, cache');
     the final chunk's logits row is the prompt's first sampled token.
     Recurrent (mamba/xlstm) layers advance their decode state per token
-    under the same validity mask; attention supports GQA (MLA chunked
-    admission is not wired up yet — the engine asserts).
+    under the same validity mask.  Attention supports GQA and absorbed
+    MLA: MLA chunks write the latent cache (``ckv``/``krope``) with the
+    same validity zeroing as :func:`~repro.models.attention.mla_prefill_cache`
+    and attend non-absorbed (per-head K/V re-expanded from the cached
+    latents, matching :func:`~repro.models.attention.mla_train` numerics),
+    so a chunked MLA admission is token-identical to whole-prompt prefill.
     """
-    assert cfg.mla is None, "chunked prefill drives GQA decoder stacks"
     assert not cfg.is_encdec, "chunked prefill drives decoder-only models"
     prologue, period, repeats = _layer_plan(cfg)
     tokens = batch["tokens"]
@@ -593,7 +602,48 @@ def prefill_chunk(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
             block_q=cfg.runtime.attn_block_q,
             block_kv=cfg.runtime.attn_block_kv, q_offset=start)
         y = o.reshape(B, C, -1) @ blk["core"]["wo"]
-        x, _ = _apply_mlp(blk, cfg, mlpk, x + y, None)
+        x, _ = _apply_mlp(blk, cfg, mlpk, x + y, None, no_drop=True)
+        return x, c
+
+    def mla_attn_chunk(blk, kind, mlpk, x, c):
+        """One MLA chunk: write the chunk's latent rows into the decode
+        cache, then attend the chunk's queries over the whole cache with
+        the offset-causal mask.  The attention is NON-absorbed — per-head
+        K/V are re-expanded from the cached latents via wk_b/wv_b, the
+        exact contraction order :func:`attn.mla_train` uses in whole-prompt
+        prefill — so the chunked residual stream is bitwise-compatible
+        with whole-prompt admission (unwritten cache rows are exact zeros
+        and causally invisible)."""
+        m = cfg.mla
+        p = blk["core"]
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q_nope, q_rope = attn._mla_q(p, cfg, h, pos)
+        kv_a = h @ p["wkv_a"]
+        ckv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"],
+                       cfg.norm_eps)
+        krope = rotate(cfg, kv_a[..., None, m.kv_lora_rank:], pos)[:, :, 0]
+        ckv = jnp.where(valid[None, :, None], ckv, 0)
+        krope = jnp.where(valid[None, :, None], krope, 0)
+        c = dict(c)
+        c["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+            c["ckv"], ckv.astype(c["ckv"].dtype), start, axis=1)
+        c["krope"] = jax.lax.dynamic_update_slice_in_dim(
+            c["krope"], krope.astype(c["krope"].dtype), start, axis=1)
+        S = c["ckv"].shape[1]
+        k_nope = jnp.einsum("bsr,hrd->bshd", c["ckv"], p["wk_b"])
+        val = jnp.einsum("bsr,hrd->bshd", c["ckv"], p["wv_b"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(c["krope"][:, :, None],
+                                      (B, S, cfg.n_heads,
+                                       m.qk_rope_head_dim))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        o = attn.blocked_attention(
+            q * scale, k, val, causal=True,
+            block_q=cfg.runtime.attn_block_q,
+            block_kv=cfg.runtime.attn_block_kv, q_offset=start)
+        y = o.reshape(B, C, cfg.n_heads * m.v_head_dim) @ p["wo"]
+        x, _ = _apply_mlp(blk, cfg, mlpk, x + y, None, no_drop=True)
         return x, c
 
     def other_chunk(blk, kind, mlpk, x, c):
@@ -609,11 +659,14 @@ def prefill_chunk(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
             return st2, y[:, 0]
 
         c2, ys = jax.lax.scan(step, c, (jnp.moveaxis(h, 1, 0), valid))
-        x, _ = _apply_mlp(blk, cfg, mlpk, x + jnp.moveaxis(ys, 0, 1), None)
+        x, _ = _apply_mlp(blk, cfg, mlpk, x + jnp.moveaxis(ys, 0, 1), None,
+                          no_drop=True)
         return x, c2
 
     def block_chunk(blk, kind, mlpk, x, c):
         if kind.startswith("attn"):
+            if cfg.mla is not None:
+                return mla_attn_chunk(blk, kind, mlpk, x, c)
             return attn_chunk(blk, kind, mlpk, x, c)
         return other_chunk(blk, kind, mlpk, x, c)
 

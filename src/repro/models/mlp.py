@@ -82,9 +82,20 @@ def _capacity(tokens: int, m) -> int:
     return max(4, c)
 
 
-def moe_apply(p, cfg: ArchConfig, x: jax.Array,
+def moe_apply(p, cfg: ArchConfig, x: jax.Array, *, no_drop: bool = False,
               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """x: (B, S, d) -> (B, S, d), aux metrics (load-balance/z losses).
+
+    ``no_drop=True`` is the INFERENCE dispatch: expert capacity is raised
+    to the worst case (every token to one expert) so no token is ever
+    capacity-dropped.  Training keeps the standard capacity-factor drops,
+    but drops depend on the token count T — a serving path that splits one
+    prompt across prefill chunks (or pads it to a length bucket) would
+    route identical tokens differently at different T, breaking
+    chunked-vs-whole token identity.  With no_drop each token's output
+    depends only on that token, so any chunking/padding of the same prompt
+    produces bitwise-identical rows (chunked admission also keeps the
+    (E, T, d) dispatch buffer small, since T is the chunk size).
 
     Dispatch is PER SEQUENCE (batch row): the argsort/rank/scatter all run
     along the row axis, and the batch dim is data-sharded — so token
@@ -115,7 +126,7 @@ def moe_apply(p, cfg: ArchConfig, x: jax.Array,
     top_p, top_e = jax.lax.top_k(probs, K)                    # (T, K)
     top_p = top_p / jnp.sum(top_p, -1, keepdims=True)         # renormalize
 
-    C = _capacity(T, m)
+    C = T if no_drop else _capacity(T, m)
     # ---- sort-based dispatch ----
     e_flat = top_e.reshape(-1)                                # (T*K,)
     order = jnp.argsort(e_flat, stable=True)

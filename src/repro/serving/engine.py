@@ -64,6 +64,18 @@ through chunk-aligned partial ingest, so the scheduler can run decode
 rounds between a long prompt's chunks instead of stalling behind its
 whole prefill.
 
+DeepSeek-class absorbed-MLA models ride the SAME pipeline (PR 5): the
+tier store keeps one latent plane per token (concat(c_kv, k_rope), a
+single logical kv head of width kv_lora_rank + qk_rope_head_dim) instead
+of a K/V pair, importance evaluation reuses the positive/negative-split
+bounds matmul against latent min/max boxes (q_lat·ckv + q_rope·krope is
+exactly the concatenated dot product), the pooled/legacy dispatches
+gather latent rows and apply the absorbed W_UV once after the softmax,
+and both whole-prompt AND chunked admission stream latent rows through
+``ingest`` — so ``ContinuousBatcher(chunked_admission=True)`` serves MLA
+traffic with the same O(log L) compiled-program and bounded-stall
+guarantees as GQA (property-tested token-identical).
+
 ``pooled=False, pipeline=False`` reproduces the PR-1 synchronous engine
 (full working-set re-upload per layer) for A/B tests and benchmarks;
 ``overlap_ingest=False`` reproduces the PR-2 serial admission path;
@@ -267,6 +279,64 @@ def _attend_pooled(q, pool_kv, slots, chunk_ids, lengths, k_new, v_new,
                         wo, attn_softcap)
 
 
+def _attend_core_mla(q_lat, q_rope, lat, lat_new, valid, wv_b, wo):
+    """Absorbed-MLA working-set attention shared by the pooled and legacy
+    paths.
+
+    q_lat: (B, H, r) and q_rope: (B, H, rr), both pre-scaled; lat: (B, S,
+    D) gathered latent rows (D = r + rr, store dtype); lat_new: (B, D) the
+    current token's latent row; valid: (B, 1, 1, S + 1) bool.  Scores are
+    q_lat·ckv + q_rope·krope over the latent plane, the weighted sum stays
+    in latent space, and W_UV is applied once afterwards (absorbed value
+    projection) — masked rows contribute exact zeros, so ragged selections
+    cost nothing numerically."""
+    from repro.core import sparse_attention as sa
+    B, H, r = q_lat.shape
+    lat = jnp.concatenate([lat, lat_new[:, None].astype(lat.dtype)], axis=1)
+    ckv, krope = lat[..., :r], lat[..., r:]
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                         ckv.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                           krope.astype(jnp.float32)))
+    # single logical kv head: reuse the shared masked partials with Hkv=1
+    part = sa._masked_softmax_partials(scores[:, None],
+                                       ckv[:, None], valid)
+    out_lat = sa._finish(part)                               # (B, H, r)
+    out = jnp.einsum("bhr,hrv->bhv", out_lat.astype(jnp.float32),
+                     wv_b.astype(jnp.float32))
+    return out.reshape(B, 1, -1).astype(q_lat.dtype) @ wo
+
+
+@jax.jit
+def _attend_pooled_mla(q_lat, q_rope, pool_kv, slots, chunk_ids, lengths,
+                       lat_new, wv_b, wo):
+    """Pooled MLA dispatch: gather latent chunk rows from the single-plane
+    device slab by slot index (see :func:`_attend_pooled` for the
+    masking/billing contract — identical, with D-wide latent rows in place
+    of the K/V pair)."""
+    lat = pool_kv[slots][:, :, 0]        # (B, nmax, chunk, 1, D)
+    B, nmax = slots.shape
+    chunk = pool_kv.shape[2]
+    lat = lat.reshape(B, nmax * chunk, -1)
+    pos = (chunk_ids[..., None] * chunk
+           + jnp.arange(chunk, dtype=jnp.int32)).reshape(B, nmax * chunk)
+    # strict mask, exactly as _attend_pooled: pos == length is unwritten
+    ok = (chunk_ids[..., None] >= 0).repeat(chunk, -1).reshape(B, -1) \
+        & (pos < lengths[:, None])
+    valid = jnp.concatenate(
+        [ok, jnp.ones((B, 1), bool)], axis=1)[:, None, None]
+    return _attend_core_mla(q_lat, q_rope, lat, lat_new, valid, wv_b, wo)
+
+
+@jax.jit
+def _attend_workingset_mla(q_lat, q_rope, latg, lat_new, valid, wv_b, wo):
+    """Legacy MLA dispatch: host-assembled latent working set uploaded
+    whole (the PR-1 synchronous A/B path).  latg: (B, nmax, chunk, 1, D)."""
+    B = latg.shape[0]
+    lat = latg.reshape(B, latg.shape[1] * latg.shape[2], -1)
+    return _attend_core_mla(q_lat, q_rope, lat, lat_new, valid, wv_b, wo)
+
+
 class BatchedLeoAMEngine:
     """Batched tiered-decoding engine over a decoder-only model.
 
@@ -287,15 +357,27 @@ class BatchedLeoAMEngine:
         self.max_seqs = max_seqs
         self.attn_layers = [i for i, k in enumerate(cfg.layer_kinds())
                             if k.startswith("attn")]
+        # absorbed-MLA stacks tier ONE latent row per token — concat(ckv,
+        # krope), a single logical kv head of width kv_lora_rank +
+        # qk_rope_head_dim — through the same store/selection machinery:
+        # the LKA box over the concatenated latent IS the MLA bound
+        # (q_lat·ckv + q_rope·krope == q_cat·latent), so chunk importance
+        # reuses chunk_bounds_gqa_matmul with Hkv=1 unchanged.
+        self.mla = cfg.mla is not None
+        if self.mla:
+            self.lat_dim = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            kv_heads, kv_dim = 1, self.lat_dim
+        else:
+            kv_heads, kv_dim = cfg.n_kv_heads, cfg.hd
         budget = (device_chunk_budget * len(self.attn_layers)
                   if device_chunk_budget is not None else None)
         self.store = TieredKVStore(
             len(self.attn_layers), self.n_chunks, self.chunk,
-            cfg.n_kv_heads, cfg.hd, n_seqs=max_seqs,
+            kv_heads, kv_dim, n_seqs=max_seqs,
             transit_codec=ecfg.transit_codec, device_budget=budget,
             use_pool=ecfg.pooled, pool_slots=device_chunk_budget,
             real_codec=ecfg.real_codec, disk_sidecar=ecfg.disk_sidecar,
-            sidecar_lossless=ecfg.sidecar_lossless)
+            sidecar_lossless=ecfg.sidecar_lossless, latent=self.mla)
         self.seqs: Dict[int, _SeqState] = {}
         self._free: List[int] = list(range(max_seqs - 1, -1, -1))
         # DTP state: prefetch executor, per-(seq, layer) previous-round
@@ -333,7 +415,7 @@ class BatchedLeoAMEngine:
         ``release`` fence them before any read.  Returns (seq id, first
         token).
         """
-        assert self._free, "engine is at max_seqs capacity"
+        self._check_capacity()
         self._check_prompt(tokens)     # validate BEFORE taking the slot
         sid = self._free.pop()
         return self._admit(sid, tokens, pool_place=True)
@@ -348,19 +430,32 @@ class BatchedLeoAMEngine:
         its chunks instead — residency-only, token streams are unchanged).
         Returns a Future resolving to (seq id, first token); the sequence
         may join a decode round only after it resolves."""
-        assert self._free, "engine is at max_seqs capacity"
+        self._check_capacity()
         self._check_prompt(tokens)     # validate BEFORE taking the slot
         sid = self._free.pop()
         return _admit_executor().submit(self._admit, sid, tokens,
                                         pool_place=False)
 
+    def _check_capacity(self) -> None:
+        """Admission-path guard (raises, never asserts: admission requests
+        are external input, and ``python -O`` must not admit past
+        capacity).  The scheduler checks ``free_slots`` first; a direct
+        caller gets an actionable error instead of a slot-leak."""
+        if not self._free:
+            raise ValueError(
+                f"engine is at max_seqs={self.max_seqs} capacity — release "
+                f"a sequence first, or rebuild the engine with a larger "
+                f"max_seqs (the scheduler gates on engine.free_slots)")
+
     def _check_prompt(self, tokens: np.ndarray) -> None:
-        """Reject oversized prompts before a slot is reserved — an assert
+        """Reject oversized prompts before a slot is reserved — raising
         after the ``_free.pop()`` would leak the slot."""
         S = len(tokens)
-        assert S < self.ecfg.max_len, (
-            f"prompt length {S} needs < max_len={self.ecfg.max_len} "
-            f"(decode appends past the prompt)")
+        if S >= self.ecfg.max_len:
+            raise ValueError(
+                f"prompt length {S} needs < max_len={self.ecfg.max_len} "
+                f"(decode appends past the prompt); raise EngineCfg.max_len "
+                f"or truncate the prompt")
 
     def _admit(self, sid: int, tokens: np.ndarray, *,
                pool_place: bool) -> Tuple[int, int]:
@@ -499,34 +594,50 @@ class BatchedLeoAMEngine:
         long prompt no longer stalls the round loop for its whole prefill.
         Intended to be stepped on the decode thread (the scheduler's
         chunked-admission mode); ``pool_place=False`` defers device-pool
-        placement exactly like ``add_sequence_async``."""
-        assert self.cfg.mla is None, \
-            "chunked admission drives GQA stacks (MLA: use add_sequence)"
+        placement exactly like ``add_sequence_async``.  Drives GQA and
+        absorbed-MLA stacks alike (MLA chunks stream latent rows through
+        the store's single-plane layout)."""
         C = chunk_tokens or self.ecfg.prefill_chunk_tokens
-        assert C % self.chunk == 0, (C, self.chunk)
-        assert self.ecfg.max_len % C == 0, (self.ecfg.max_len, C)
-        assert self._free, "engine is at max_seqs capacity"
+        if C % self.chunk or self.ecfg.max_len % C:
+            raise ValueError(
+                f"prefill chunk_tokens={C} must be a multiple of the store "
+                f"chunk ({self.chunk}) and divide max_len "
+                f"({self.ecfg.max_len}) so partial ingests stay "
+                f"chunk-aligned")
+        self._check_capacity()
         self._check_prompt(tokens)     # validate BEFORE taking the slot
         sid = self._free.pop()
         return ChunkedAdmission(self, sid, tokens, C, pool_place=pool_place)
 
+    _KV_LEAVES = ("k", "v", "ckv", "krope")
+
+    def _layer_cache(self, cache, layer: int) -> Dict[str, Any]:
+        """The KV/latent leaves of one layer's attention cache (body
+        layers sliced out of their stacked repeat axis; pyramid leaves are
+        engine-unused, so they are not materialized)."""
+        pro_n = len(cache["prologue"])
+        if layer < pro_n:
+            return cache["prologue"][layer]
+        period = self.cfg.period()
+        bi = (layer - pro_n) // period
+        pi = (layer - pro_n) % period
+        return {k: v[bi] for k, v in cache["body"][pi].items()
+                if k in self._KV_LEAVES}
+
     def _layer_kv_slice(self, cache, layer: int, start: int, n: int
                         ) -> Tuple[np.ndarray, np.ndarray]:
         """Like :meth:`_layer_kv` but pulls only rows [start, start+n) to
-        the host — the chunked-admission stream-out."""
-        pro_n = len(cache["prologue"])
-        if layer < pro_n:
-            c = cache["prologue"][layer]
-            k, v = c["k"], c["v"]
-        else:
-            period = self.cfg.period()
-            bi = (layer - pro_n) // period
-            pi = (layer - pro_n) % period
-            c = cache["body"][pi]
-            k, v = c["k"][bi], c["v"][bi]
+        the host — the chunked-admission stream-out.  MLA layers return
+        the latent rows (concat(ckv, krope), a single kv head) in both
+        positions."""
+        c = self._layer_cache(cache, layer)
         sl = lambda a: np.asarray(
             jax.lax.dynamic_slice_in_dim(a, start, n, axis=1))[0]
-        return sl(k), sl(v)
+        if self.mla:
+            lat = np.concatenate([sl(c["ckv"]), sl(c["krope"])],
+                                 axis=-1)[:, None, :]
+            return lat, lat
+        return sl(c["k"]), sl(c["v"])
 
     def _layer_placement(self, layer: int,
                          placement: Dict[int, str]) -> Dict[int, str]:
@@ -576,16 +687,16 @@ class BatchedLeoAMEngine:
         return min(nv, sel + forced)
 
     def _layer_kv(self, cache, layer: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Pull (k, v) (B, S, Hkv, hd) for a layer out of a model cache."""
-        pro_n = len(cache["prologue"])
-        if layer < pro_n:
-            c = cache["prologue"][layer]
-            return np.asarray(c["k"]), np.asarray(c["v"])
-        period = self.cfg.period()
-        bi = (layer - pro_n) // period
-        pi = (layer - pro_n) % period
-        c = cache["body"][pi]
-        return np.asarray(c["k"][bi]), np.asarray(c["v"][bi])
+        """Pull (k, v) (B, S, Hkv, hd) for a layer out of a model cache.
+        MLA layers yield the latent rows (B, S, 1, r + rr) in both
+        positions (the store keeps a single latent plane)."""
+        c = self._layer_cache(cache, layer)
+        if self.mla:
+            lat = np.concatenate([np.asarray(c["ckv"]),
+                                  np.asarray(c["krope"])],
+                                 axis=-1)[:, :, None, :]
+            return lat, lat
+        return np.asarray(c["k"]), np.asarray(c["v"])
 
     # ------------------------------------------------------------------
     # DTP: measured-cost θ balance + speculative prefetch
@@ -666,7 +777,10 @@ class BatchedLeoAMEngine:
         """One bounds matmul over the stacked batch, then per-sequence
         chunk-level adaptive selection (tree/IAKM or flat) on the host.
 
-        q: (B, H, hd) un-scaled queries, rows matching ``order``.
+        q: (B, H, d) PRE-SCALED queries, rows matching ``order`` — GQA
+        passes q/sqrt(hd) against the per-head key boxes; MLA passes
+        concat(q_lat, q_rope)·scale against the latent boxes (Hkv=1), for
+        which the same positive/negative-split matmul bound is exact.
         """
         cfg = self.cfg
         chunk = self.chunk
@@ -686,7 +800,7 @@ class BatchedLeoAMEngine:
             km, kn, abs_billed = self.store.read_abstracts_batch(
                 li, chunks_by_seq)
 
-        qj = jnp.asarray(q / math.sqrt(cfg.hd))              # (B, H, hd)
+        qj = jnp.asarray(q)                                  # (B, H, d)
         ub, _ = chunk_bounds_gqa_matmul(qj, jnp.asarray(km), jnp.asarray(kn))
         ub = np.asarray(ub)                                  # (B, Hkv, ncmax)
 
@@ -758,8 +872,29 @@ class BatchedLeoAMEngine:
             nonlocal li
             hln = attn_mod.rms_norm(h, blk["ln1"], cfg.norm_eps)
             pos = jnp.asarray(lengths[:, None], jnp.int32)   # (B, 1)
-            q, k_new, v_new = attn_mod._qkv(blk["core"], cfg, hln, pos)
-            qn = np.asarray(q[:, 0])                         # (B, H, hd)
+            if self.mla:
+                # absorbed MLA: the query lives in latent space (q_lat =
+                # q_nope @ W_UK ‖ q_rope) and the new token's cache row is
+                # ONE latent vector; both selection and attention run over
+                # the store's single latent plane
+                m = cfg.mla
+                p = blk["core"]
+                q_nope, q_rope = attn_mod._mla_q(p, cfg, hln, pos)
+                scale = 1.0 / math.sqrt(m.qk_nope_head_dim
+                                        + m.qk_rope_head_dim)
+                q_lat = jnp.einsum("bhd,hrd->bhr", q_nope[:, 0],
+                                   p["wk_b"]) * scale
+                q_rope = q_rope[:, 0] * scale
+                kv_a = (hln @ p["wkv_a"])[:, 0]
+                ckv_new = attn_mod.rms_norm(kv_a[:, : m.kv_lora_rank],
+                                            p["kv_norm"], cfg.norm_eps)
+                krope_new = attn_mod.rotate(
+                    cfg, kv_a[:, None, None, m.kv_lora_rank:], pos)[:, 0, 0]
+                lat_new = jnp.concatenate([ckv_new, krope_new], axis=-1)
+                qn = np.asarray(jnp.concatenate([q_lat, q_rope], axis=-1))
+            else:
+                q, k_new, v_new = attn_mod._qkv(blk["core"], cfg, hln, pos)
+                qn = np.asarray(q[:, 0]) / math.sqrt(cfg.hd)  # (B, H, hd)
             t0 = time.perf_counter()
             sels, sel_stats = self._select_chunks_batched(
                 li, layer_idx, qn, order, lengths)
@@ -793,11 +928,18 @@ class BatchedLeoAMEngine:
                     chunk_ids[i, :len(sels[sid])] = sels[sid]
                 pool = self.store.pools[li]
                 t1 = time.perf_counter()
-                y = _attend_pooled(q, pool.kv, jnp.asarray(slots),
-                                   jnp.asarray(chunk_ids),
-                                   jnp.asarray(lengths.astype(np.int32)),
-                                   k_new, v_new, blk["core"]["wo"],
-                                   attn_softcap=cfg.attn_softcap)
+                if self.mla:
+                    y = _attend_pooled_mla(
+                        q_lat, q_rope, pool.kv, jnp.asarray(slots),
+                        jnp.asarray(chunk_ids),
+                        jnp.asarray(lengths.astype(np.int32)),
+                        lat_new, blk["core"]["wv_b"], blk["core"]["wo"])
+                else:
+                    y = _attend_pooled(q, pool.kv, jnp.asarray(slots),
+                                       jnp.asarray(chunk_ids),
+                                       jnp.asarray(lengths.astype(np.int32)),
+                                       k_new, v_new, blk["core"]["wo"],
+                                       attn_softcap=cfg.attn_softcap)
                 if ecfg.profile:
                     jax.block_until_ready(y)
                     prof["attend_s"] += time.perf_counter() - t1
@@ -821,22 +963,33 @@ class BatchedLeoAMEngine:
                                                           pad_to=nmax)
                 prof["gather_s"] += time.perf_counter() - t1
                 t1 = time.perf_counter()
-                kgj, vgj = jnp.asarray(kg), jnp.asarray(vg)
+                kgj = jnp.asarray(kg)
+                vgj = kgj if self.mla else jnp.asarray(vg)
                 prof["upload_s"] += time.perf_counter() - t1
                 t1 = time.perf_counter()
-                y = _attend_workingset(q, kgj, vgj, k_new, v_new, valid,
-                                       blk["core"]["wo"],
-                                       attn_softcap=cfg.attn_softcap)
+                if self.mla:
+                    y = _attend_workingset_mla(q_lat, q_rope, kgj, lat_new,
+                                               valid, blk["core"]["wv_b"],
+                                               blk["core"]["wo"])
+                else:
+                    y = _attend_workingset(q, kgj, vgj, k_new, v_new, valid,
+                                           blk["core"]["wo"],
+                                           attn_softcap=cfg.attn_softcap)
                 if ecfg.profile:
                     jax.block_until_ready(y)
                     prof["attend_s"] += time.perf_counter() - t1
-            kn_np = np.asarray(k_new[:, 0])
-            vn_np = np.asarray(v_new[:, 0])
-            self.store.append_tokens_batch(li, lengths, kn_np, vn_np,
-                                           seqs=order)
+            if self.mla:
+                lat_np = np.asarray(lat_new)[:, None, :]     # (B, 1, D)
+                self.store.append_tokens_batch(li, lengths, lat_np, None,
+                                               seqs=order)
+            else:
+                kn_np = np.asarray(k_new[:, 0])
+                vn_np = np.asarray(v_new[:, 0])
+                self.store.append_tokens_batch(li, lengths, kn_np, vn_np,
+                                               seqs=order)
             li += 1
             h = h + y
-            h, _ = lm._apply_mlp(blk, cfg, mlpk, h, None)
+            h, _ = lm._apply_mlp(blk, cfg, mlpk, h, None, no_drop=True)
             return h
 
         def run_other(blk, kind, mlpk, h, layer_idx, cache_slices):
@@ -991,7 +1144,8 @@ class ChunkedAdmission:
             # ingests the full max_len cache, and parity of tier labels /
             # abstracts / the reused-slot scrub depends on matching it
             t1 = time.perf_counter()
-            zk = np.zeros((tail, eng.cfg.n_kv_heads, eng.cfg.hd), np.float16)
+            zk = np.zeros((tail, eng.store.kv_heads, eng.store.head_dim),
+                          eng.store.dtype)
             for li, layer in enumerate(eng.attn_layers):
                 self._ingest_rows(li, layer, zk, zk, end)
             self._ingest_s += time.perf_counter() - t1

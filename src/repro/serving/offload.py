@@ -52,7 +52,16 @@ Batched round support:
 * per-sequence ``TrafficLog`` mirrors: every byte recorded in the shared
   ``log`` is also attributed to its sequence (retired sequences' logs move
   to ``retired_logs`` so reused slots audit fresh), and benchmarks assert
-  shared == Σ seq_logs + Σ retired_logs exactly.
+  shared == Σ seq_logs + Σ retired_logs exactly;
+* **latent (absorbed-MLA) layout** (``latent=True``): DeepSeek-class MLA
+  models cache ONE latent row per token — concat(c_kv, k_rope), no
+  separate V plane — so the store drops to a single storage plane: the
+  disk replica, sidecar, device-pool slab and every byte figure
+  (``chunk_bytes``, ``row_bytes``, packed sidecar bytes) cover exactly the
+  latent payload instead of double-counting a phantom V.  The (k, v)
+  entry points stay: callers pass the latent rows as ``k`` and ``v`` is
+  ignored; reads return the latent rows in both positions so engine
+  plumbing stays uniform.
 
 All traffic is tallied per (src, dst, kind) so benchmarks and the simulator
 can audit exactly what LeoAM saves.
@@ -134,9 +143,10 @@ class FetchStats:
 class DeviceChunkPool:
     """Fixed-capacity per-layer device slab of KV chunk slots.
 
-    ``kv`` is ONE (n_slots + 1, 2, chunk, Hkv, hd) jax array living on
+    ``kv`` is ONE (n_slots + 1, planes, chunk, Hkv, hd) jax array living on
     device for the engine's lifetime (K and V share the slab so every
-    upload / append is a single scatter dispatch); slot ``n_slots`` is a
+    upload / append is a single scatter dispatch; the latent/MLA layout
+    uses a single plane); slot ``n_slots`` is a
     write-only scratch row used to pad delta uploads to a bucketed size, so
     the scatter's compiled shape is stable across rounds instead of
     recompiling for every distinct delta.  ``slot_of`` maps
@@ -148,9 +158,10 @@ class DeviceChunkPool:
     """
 
     def __init__(self, n_slots: int, chunk: int, kv_heads: int,
-                 head_dim: int, dtype):
+                 head_dim: int, dtype, planes: int = 2):
         self.n_slots = n_slots
-        self.kv = jnp.zeros((n_slots + 1, 2, chunk, kv_heads, head_dim),
+        self.planes = planes
+        self.kv = jnp.zeros((n_slots + 1, planes, chunk, kv_heads, head_dim),
                             dtype)
         self.slot_of: "OrderedDict[Tuple[int, int], int]" = OrderedDict()
         self.free: List[int] = list(range(n_slots - 1, -1, -1))
@@ -212,8 +223,8 @@ class DeviceChunkPool:
     def scatter(self, slots: Sequence[int], kv_new, *,
                 pad_to: Optional[int] = None,
                 row_pad: int = 8) -> List[Tuple[int, int]]:
-        """One slab update per (layer, round): scatter the (m, 2, chunk,
-        Hkv, hd) delta upload into ``slots`` AND flush the queued decode
+        """One slab update per (layer, round): scatter the (m, planes,
+        chunk, Hkv, hd) delta upload into ``slots`` AND flush the queued decode
         append rows.  Index rows past the real payload (bucket padding)
         land in the write-only scratch slot, so repeated rounds reuse the
         compiled scatter instead of recompiling per delta size.  ``kv_new``
@@ -241,7 +252,7 @@ class DeviceChunkPool:
         if n:
             si = np.full(width, self.n_slots, np.int32)
             oi = np.zeros(width, np.int32)
-            kv_rows = np.zeros((width, 2, self.kv.shape[3],
+            kv_rows = np.zeros((width, self.planes, self.kv.shape[3],
                                 self.kv.shape[4]), self.kv.dtype)
             for i, (_key, slot, off, row) in enumerate(rows):
                 si[i], oi[i] = slot, off
@@ -291,10 +302,16 @@ class TieredKVStore:
                  device_budget: Optional[int] = None,
                  use_pool: bool = False, pool_slots: Optional[int] = None,
                  real_codec: bool = False, disk_sidecar: bool = False,
-                 sidecar_lossless: bool = False):
+                 sidecar_lossless: bool = False, latent: bool = False):
         self.n_seqs = n_seqs
         self.n_layers, self.n_chunks, self.chunk = n_layers, n_chunks, chunk
         self.kv_heads, self.head_dim = kv_heads, head_dim
+        # latent (absorbed-MLA) layout: one storage plane of concat(ckv,
+        # krope) rows instead of the (K, V) pair — byte accounting, the
+        # disk replica, the sidecar and the pool slab all cover exactly
+        # the latent payload
+        self.latent = latent
+        self.planes = 1 if latent else 2
         self.dtype = np.dtype(dtype)
         self.transit_codec = transit_codec
         self.real_codec = real_codec and transit_codec is not None
@@ -329,9 +346,10 @@ class TieredKVStore:
             slots = pool_slots if pool_slots is not None \
                 else n_seqs * n_chunks
             self.pools = [DeviceChunkPool(slots, chunk, kv_heads, head_dim,
-                                          self.dtype)
+                                          self.dtype, planes=self.planes)
                           for _ in range(n_layers)]
-        shape = (n_seqs, n_layers, n_chunks, 2, chunk, kv_heads, head_dim)
+        shape = (n_seqs, n_layers, n_chunks, self.planes, chunk, kv_heads,
+                 head_dim)
         self._root = root or tempfile.mkdtemp(prefix="leoam_kv_")
         self._disk = np.memmap(os.path.join(self._root, "kv.bin"),
                                dtype=self.dtype, mode="w+", shape=shape)
@@ -346,10 +364,11 @@ class TieredKVStore:
             dq = compression.packed_dim(transit_codec, d)
             self._disk_q = np.memmap(
                 os.path.join(self._root, "kv_q.bin"), dtype=np.int8,
-                mode="w+", shape=(n_seqs, n_layers, n_chunks, 2, chunk, dq))
+                mode="w+", shape=(n_seqs, n_layers, n_chunks, self.planes,
+                                  chunk, dq))
             self._disk_scale = np.memmap(
                 os.path.join(self._root, "kv_scale.bin"), dtype=np.float32,
-                mode="w+", shape=(n_seqs, n_layers, n_chunks, 2, d))
+                mode="w+", shape=(n_seqs, n_layers, n_chunks, self.planes, d))
         # write-behind ingest: per-seq in-flight cold-write futures; the
         # fence pops under _futs_lock and waits OUTSIDE the store lock
         # (workers need the store lock to land their writes)
@@ -370,16 +389,22 @@ class TieredKVStore:
     # ------------------------------------------------------------------
     @property
     def chunk_bytes(self) -> int:
-        return 2 * self.chunk * self.kv_heads * self.head_dim * self.dtype.itemsize
+        """One chunk's stored payload: K+V planes, or the single latent
+        plane under the absorbed-MLA layout."""
+        return (self.planes * self.chunk * self.kv_heads * self.head_dim
+                * self.dtype.itemsize)
 
     @property
     def abstract_bytes(self) -> int:
+        """One chunk's LKA abstract: the (min, max) box pair over the key
+        plane (latent plane for MLA) — the 2 here is min+max, not planes."""
         return 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
 
     @property
     def row_bytes(self) -> int:
-        """One appended token's K+V bytes."""
-        return 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
+        """One appended token's stored bytes (K+V, or one latent row)."""
+        return (self.planes * self.kv_heads * self.head_dim
+                * self.dtype.itemsize)
 
     def _bill_flushed_rows(self, applied: List[Tuple[int, int]]) -> None:
         """Bill the HOST→DEVICE append rows a slab flush actually carried
@@ -422,6 +447,11 @@ class TieredKVStore:
                                            or self.disk_sidecar) \
             else self._transit_bytes()
 
+    def _plane_stack(self, kc: np.ndarray, vc: np.ndarray) -> np.ndarray:
+        """Stack one chunk's storage planes: (planes, chunk, Hkv, hd) —
+        the K/V pair, or just the latent plane under the MLA layout."""
+        return kc[None] if self.planes == 1 else np.stack((kc, vc))
+
     def _sidecar_ok(self, seq: int, layer: int, c: int) -> bool:
         """True when the packed sidecar serves this chunk's disk reads."""
         return (self.disk_sidecar and not self.sidecar_lossless
@@ -429,27 +459,30 @@ class TieredKVStore:
 
     def _read_sidecar(self, layer: int, keys: Sequence[Tuple[int, int]]
                       ) -> np.ndarray:
-        """Coalesced packed-sidecar read: dequantize K and V planes for
-        every (seq, chunk) key.  Returns (n, 2, chunk, Hkv, hd) in store
-        dtype."""
+        """Coalesced packed-sidecar read: dequantize every storage plane
+        for every (seq, chunk) key.  Returns (n, planes, chunk, Hkv, hd)
+        in store dtype."""
         sq = np.array([s for s, _ in keys])
         cq = np.array([c for _, c in keys])
-        data = np.asarray(self._disk_q[sq, layer, cq])      # (n, 2, c, dq)
-        scale = np.asarray(self._disk_scale[sq, layer, cq])  # (n, 2, d)
-        out = np.empty((len(keys), 2, self.chunk, self.kv_heads,
+        data = np.asarray(self._disk_q[sq, layer, cq])    # (n, planes, c, dq)
+        scale = np.asarray(self._disk_scale[sq, layer, cq])  # (n, planes, d)
+        out = np.empty((len(keys), self.planes, self.chunk, self.kv_heads,
                         self.head_dim), self.dtype)
-        for plane in (0, 1):
+        for plane in range(self.planes):
             out[:, plane] = compression.dequantize_chunks(
                 data[:, plane], scale[:, plane], self.transit_codec,
                 self.kv_heads, self.head_dim, dtype=self.dtype)
         return out
 
-    def ingest(self, layer: int, k: np.ndarray, v: np.ndarray,
-               placement: Dict[int, str], *, seq: int = 0,
+    def ingest(self, layer: int, k: np.ndarray,
+               v: Optional[np.ndarray] = None,
+               placement: Optional[Dict[int, str]] = None, *, seq: int = 0,
                executor=None, pool_place: bool = True,
                start: int = 0) -> None:
         """Store prefill KV.  k/v: (S, Hkv, hd).  Every chunk is replicated
         to disk (with its abstract); ``placement`` assigns the hot tier.
+        Under the latent (MLA) layout ``k`` carries the latent rows and
+        ``v`` is ignored (may be None).
 
         With ``executor`` the cold half (disk replica + sidecar + abstract
         writes and their billing) runs write-behind on that executor; the
@@ -467,6 +500,7 @@ class TieredKVStore:
         one whole-prompt call.  ``placement`` stays keyed by GLOBAL chunk
         id; each call's cold writes join the same per-seq fence."""
         assert start % self.chunk == 0, (start, self.chunk)
+        placement = placement or {}
         c0 = start // self.chunk
         with self._lock:
             S = k.shape[0]
@@ -478,11 +512,13 @@ class TieredKVStore:
                                (S + self.chunk - 1) // self.chunk)):
                 c = c0 + j
                 kc = k[j * self.chunk: (j + 1) * self.chunk].astype(self.dtype)
-                vc = v[j * self.chunk: (j + 1) * self.chunk].astype(self.dtype)
+                vc = kc if self.planes == 1 else \
+                    v[j * self.chunk: (j + 1) * self.chunk].astype(self.dtype)
                 if kc.shape[0] < self.chunk:
                     pad = self.chunk - kc.shape[0]
                     kc = np.pad(kc, ((0, pad), (0, 0), (0, 0)))
-                    vc = np.pad(vc, ((0, pad), (0, 0), (0, 0)))
+                    vc = kc if self.planes == 1 else \
+                        np.pad(vc, ((0, pad), (0, 0), (0, 0)))
                 cids.append(c)
                 kcs.append(kc)
                 vcs.append(vc)
@@ -493,7 +529,7 @@ class TieredKVStore:
                     # the placement; the next pooled fetch folds it in
                     # unbilled (device-produced KV, same as _pool_place)
                     self.pools[layer].pending_place[(seq, c)] = \
-                        np.stack((kc, vc))
+                        self._plane_stack(kc, vc)
                     where = HOST
                 self.tier[seq, layer, c] = where
                 key = (seq, layer, c)
@@ -509,7 +545,7 @@ class TieredKVStore:
         if not cids:
             return
         ks = np.stack(kcs)
-        vs = np.stack(vcs)
+        vs = ks if self.planes == 1 else np.stack(vcs)
         if executor is None:
             self._ingest_cold(layer, seq, cids, ks, vs)
         else:
@@ -526,24 +562,23 @@ class TieredKVStore:
         if self.disk_sidecar:
             # quantize OUTSIDE the lock (pure compute on private arrays) —
             # holding it here would stall decode fetches for the duration
-            packed = (compression.quantize_chunks(kcs, self.transit_codec),
-                      compression.quantize_chunks(vcs, self.transit_codec))
+            planes = (kcs,) if self.planes == 1 else (kcs, vcs)
+            packed = tuple(compression.quantize_chunks(p, self.transit_codec)
+                           for p in planes)
         with self._lock:
             idx = np.asarray(cids, np.int64)
             self._disk[seq, layer, idx, 0] = kcs
-            self._disk[seq, layer, idx, 1] = vcs
+            if self.planes == 2:
+                self._disk[seq, layer, idx, 1] = vcs
             self._abs_km[seq, layer, idx] = kcs.max(1)
             self._abs_kn[seq, layer, idx] = kcs.min(1)
             rep_bytes = float(self.chunk_bytes)
             if packed is not None:
-                (kd, ksc), (vd, vsc) = packed
                 n = len(cids)
-                self._disk_q[seq, layer, idx, 0] = kd.reshape(
-                    n, self.chunk, -1)
-                self._disk_q[seq, layer, idx, 1] = vd.reshape(
-                    n, self.chunk, -1)
-                self._disk_scale[seq, layer, idx, 0] = ksc
-                self._disk_scale[seq, layer, idx, 1] = vsc
+                for pl, (pd, psc) in enumerate(packed):
+                    self._disk_q[seq, layer, idx, pl] = pd.reshape(
+                        n, self.chunk, -1)
+                    self._disk_scale[seq, layer, idx, pl] = psc
                 self._sidecar_valid[seq, layer, idx] = True
                 rep_bytes = self._packed_bytes()
             for _c in cids:
@@ -580,7 +615,7 @@ class TieredKVStore:
                 self.tier[evicted[0], layer, evicted[1]] = HOST
             slots.append(slot)
         self._bill_flushed_rows(
-            pool.scatter(slots, np.stack([np.stack((kc, vc))
+            pool.scatter(slots, np.stack([self._plane_stack(kc, vc)
                                           for _, kc, vc in items])))
 
     # ------------------------------------------------------------------
@@ -661,11 +696,12 @@ class TieredKVStore:
                 if self.tier[seq, layer, c] == DISK or key not in self._host_k:
                     if self._sidecar_ok(seq, layer, c):
                         kv = self._read_sidecar(layer, [(seq, c)])[0]
-                        kc, vc = kv[0], kv[1]
+                        kc, vc = kv[0], kv[-1]
                         nb = self._packed_bytes()
                     else:
                         kc = np.asarray(self._disk[seq, layer, c, 0])
-                        vc = np.asarray(self._disk[seq, layer, c, 1])
+                        vc = kc if self.planes == 1 else \
+                            np.asarray(self._disk[seq, layer, c, 1])
                         nb = (self._disk_read_bytes() if self.disk_sidecar
                               else self._transit_bytes())
                     self._record(seq, DISK, HOST, "kv", nb)
@@ -710,21 +746,27 @@ class TieredKVStore:
 
             kg = np.zeros((B, nmax, self.chunk, self.kv_heads, self.head_dim),
                           self.dtype)
-            vg = np.zeros_like(kg)
+            # latent layout: there is no V plane — return the latent stack
+            # in both positions instead of assembling a duplicate copy
+            vg = kg if self.planes == 1 else np.zeros_like(kg)
             for i, (seq, chunks) in enumerate(items):
                 for j, c in enumerate(chunks):
                     key = (seq, layer, c)
                     self.access[seq, layer, c] += 1
                     if key in self._dev_k:
                         self._touch(key)
-                        kg[i, j], vg[i, j] = self._dev_k[key], self._dev_v[key]
+                        kg[i, j] = self._dev_k[key]
+                        if self.planes == 2:
+                            vg[i, j] = self._dev_v[key]
                         continue
                     self._record(seq, HOST, DEVICE, "kv",
                                  self._transit_bytes())
                     if to_device:
                         self._promote_device(key, self._host_k[key],
                                              self._host_v[key])
-                    kg[i, j], vg[i, j] = self._host_k[key], self._host_v[key]
+                    kg[i, j] = self._host_k[key]
+                    if self.planes == 2:
+                        vg[i, j] = self._host_v[key]
             return kg, vg, nsel
 
     # ------------------------------------------------------------------
@@ -773,7 +815,7 @@ class TieredKVStore:
                 key = (seq, layer, c)
                 self._record(seq, DISK, HOST, "kv", per_chunk)
                 billed += per_chunk
-                self._host_k[key], self._host_v[key] = kv[0], kv[1]
+                self._host_k[key], self._host_v[key] = kv[0], kv[-1]
                 if retier:
                     self.tier[seq, layer, c] = HOST
         return len(need), billed
@@ -868,25 +910,24 @@ class TieredKVStore:
                     self.tier[seq, layer, c] = DEVICE
                     up_slots.append(slot)
                 kv_stack = np.stack(
-                    [np.stack((self._host_k[(s, layer, c)],
-                               self._host_v[(s, layer, c)]))
-                     for _, _, s, c in missing])      # (m, 2, c, Hkv, hd)
+                    [self._plane_stack(self._host_k[(s, layer, c)],
+                                       self._host_v[(s, layer, c)])
+                     for _, _, s, c in missing])   # (m, planes, c, Hkv, hd)
                 m = len(missing)
                 n_comp = 0
                 if self.real_codec:
                     n_comp = int(round(min(1.0, max(0.0, theta)) * m))
                 if n_comp:
-                    kd, ks = compression.quantize_chunks(
-                        kv_stack[:n_comp, 0], self.transit_codec)
-                    vd, vsc = compression.quantize_chunks(
-                        kv_stack[:n_comp, 1], self.transit_codec)
                     from repro.kernels.kv_quant.ops import kv_dequant
                     dq = lambda d, s: kv_dequant(
                         jnp.asarray(d), jnp.asarray(s),
                         codec=self.transit_codec,
                         out_dtype=self.dtype).reshape(
                             n_comp, self.chunk, self.kv_heads, self.head_dim)
-                    kv_dev = jnp.stack([dq(kd, ks), dq(vd, vsc)], axis=1)
+                    kv_dev = jnp.stack(
+                        [dq(*compression.quantize_chunks(
+                            kv_stack[:n_comp, pl], self.transit_codec))
+                         for pl in range(self.planes)], axis=1)
                     if n_comp < m:
                         kv_dev = jnp.concatenate(
                             [kv_dev, jnp.asarray(kv_stack[n_comp:])])
@@ -973,16 +1014,18 @@ class TieredKVStore:
         abstract updates, per-seq host/device mirror updates, and ONE pool
         row-scatter for resident tail chunks.
 
-        positions: (B,), k_news/v_news: (B, Hkv, hd), seqs: (B,).
+        positions: (B,), k_news/v_news: (B, Hkv, hd), seqs: (B,).  Latent
+        layout: ``k_news`` carries the latent rows, ``v_news`` is ignored.
         """
         with self._lock:
             sq = np.asarray(list(seqs), np.int64)
             pos = np.asarray(positions, np.int64)
             cs, offs = pos // self.chunk, pos % self.chunk
             kd = k_news.astype(self.dtype)
-            vd = v_news.astype(self.dtype)
+            vd = kd if self.planes == 1 else v_news.astype(self.dtype)
             self._disk[sq, layer, cs, 0, offs] = kd
-            self._disk[sq, layer, cs, 1, offs] = vd
+            if self.planes == 2:
+                self._disk[sq, layer, cs, 1, offs] = vd
             if self.disk_sidecar:
                 # the chunk's per-channel scales no longer cover the new
                 # row — reads fall back to the lossless fp16 replica until
@@ -996,7 +1039,7 @@ class TieredKVStore:
                 self._abs_km[sq, layer, cs], k_news)
             self._abs_kn[sq, layer, cs] = np.minimum(
                 self._abs_kn[sq, layer, cs], k_news)
-            row_bytes = 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
+            row_bytes = self.row_bytes
             pool = self.pools[layer]
             p_slots, p_offs, p_rows = [], [], []
             for i in range(len(sq)):
@@ -1004,14 +1047,17 @@ class TieredKVStore:
                 key = (seq, layer, c)
                 if key in self._host_k:
                     self._host_k[key][off] = kd[i]
-                    self._host_v[key][off] = vd[i]
+                    if self.planes == 2:
+                        self._host_v[key][off] = vd[i]
                 if key in self._dev_k:
                     self._dev_k[key][off] = kd[i]
-                    self._dev_v[key][off] = vd[i]
+                    if self.planes == 2:
+                        self._dev_v[key][off] = vd[i]
                 if pool is not None and (seq, c) in pool.slot_of:
                     # H2D billing happens when the flush actually carries
                     # the row (see _bill_flushed_rows), not at queue time
-                    pool.queue_row((seq, c), off, np.stack((kd[i], vd[i])))
+                    pool.queue_row((seq, c), off,
+                                   self._plane_stack(kd[i], vd[i]))
                 self._record(seq, HOST, DISK, "kv_append", row_bytes)
 
     # ------------------------------------------------------------------
@@ -1066,19 +1112,17 @@ class TieredKVStore:
             with self._lock:
                 if self._chunk_version[key] != vers[key]:
                     continue            # a newer append re-dirtied it
-                kc = np.array(self._disk[seq, layer, c, 0])
-                vc = np.array(self._disk[seq, layer, c, 1])
-            kd, ksc = compression.quantize_chunks(kc[None],
-                                                  self.transit_codec)
-            vd, vsc = compression.quantize_chunks(vc[None],
-                                                  self.transit_codec)
+                planes = [np.array(self._disk[seq, layer, c, pl])
+                          for pl in range(self.planes)]
+            packed = [compression.quantize_chunks(p[None], self.transit_codec)
+                      for p in planes]
             with self._lock:
                 if self._chunk_version[key] != vers[key]:
                     continue            # raced an append mid-repack
-                self._disk_q[seq, layer, c, 0] = kd.reshape(self.chunk, -1)
-                self._disk_q[seq, layer, c, 1] = vd.reshape(self.chunk, -1)
-                self._disk_scale[seq, layer, c, 0] = ksc[0]
-                self._disk_scale[seq, layer, c, 1] = vsc[0]
+                for pl, (pd, psc) in enumerate(packed):
+                    self._disk_q[seq, layer, c, pl] = pd.reshape(self.chunk,
+                                                                 -1)
+                    self._disk_scale[seq, layer, c, pl] = psc[0]
                 self._sidecar_valid[seq, layer, c] = True
                 self.sidecar_repacks += 1
                 self._record(seq, HOST, DISK, "sidecar_repack",

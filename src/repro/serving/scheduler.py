@@ -27,7 +27,13 @@ With ``chunked_admission=True`` admission instead runs CHUNKED on the
 decode thread: the engine's resumable chunked prefill advances by at most
 ``prefill_round_tokens`` prompt tokens between consecutive decode rounds,
 so the decode-latency spike a very long prompt causes while admitting is
-bounded by the budget instead of its whole prefill.  Either overlap mode
+bounded by the budget instead of its whole prefill.  With
+``adaptive_prefill_budget=True`` that budget is re-derived every round
+from the measured decode-round and chunk-step EWMAs through
+``pipeline.chunked_admission_model`` — the largest budget whose predicted
+round gap stays within ``target_stall_frac`` of an idle round — so the
+stall bound tracks batch composition; the derived figure is exported by
+:meth:`ContinuousBatcher.stats` as ``prefill_round_tokens``.  Either overlap mode
 can be paced (``pace_admission=True``): the scheduler EWMAs decode round
 time, keeps an idle baseline from rounds with no admission in flight, and
 holds admission work while the running EWMA exceeds the baseline by more
@@ -54,6 +60,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.core.pipeline import chunked_admission_model
 
 
 @dataclass
@@ -106,6 +114,22 @@ class SchedulerCfg:
                                        # advanced between two decode rounds
                                        # (the decode-stall bound); lifted
                                        # when nothing is decoding
+    adaptive_prefill_budget: bool = False
+                                       # derive the per-round prefill token
+                                       # budget each round from the
+                                       # measured decode-round EWMA and the
+                                       # measured chunk-step time, via
+                                       # pipeline.chunked_admission_model:
+                                       # the largest budget whose predicted
+                                       # max round gap stays within
+                                       # target_stall_frac of an idle
+                                       # round — so the stall bound holds
+                                       # as batch composition changes
+                                       # instead of being a static guess
+    target_stall_frac: float = 0.5     # adaptive mode: tolerated round-gap
+                                       # inflation (gap <= idle_round *
+                                       # (1 + frac)) the derived budget
+                                       # must respect
     pace_admission: bool = False       # contention-aware pacing: hold
                                        # admission work (async prefills /
                                        # chunk steps) while the decode
@@ -152,6 +176,15 @@ class ContinuousBatcher:
         self._idle_ewma: Optional[float] = None
         self._gate_open = True
         self._gated_rounds = 0
+        # adaptive prefill budget state: EWMA of one chunk step's wall
+        # time + the tokens it advanced, and the budget derived last round.
+        # The very first chunk step is discarded (jit-compile time, seconds
+        # vs ~ms steady-state — seeding the EWMA with it would pin the
+        # derived budget at one chunk for tens of rounds after a cold start)
+        self._chunk_ewma: Optional[float] = None
+        self._chunk_steps = 0
+        self._chunk_tokens: Optional[int] = None
+        self._derived_budget: Optional[int] = None
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -263,6 +296,35 @@ class ContinuousBatcher:
         self._pending = still
         self._activate_ready()
 
+    def _prefill_budget(self) -> int:
+        """Per-round prefill token budget.  Static by default; with
+        ``adaptive_prefill_budget`` it is re-derived EVERY round from the
+        measured chunk-step and idle-round EWMAs through
+        :func:`pipeline.chunked_admission_model`: the largest
+        chunks-per-round whose predicted max round gap (idle round + k
+        chunk steps) stays within ``target_stall_frac`` of an idle round —
+        the stall bound then holds as batch composition (and therefore
+        round time) changes, instead of trusting a static token guess."""
+        cfg = self.cfg
+        if not cfg.adaptive_prefill_budget:
+            self._derived_budget = cfg.prefill_round_tokens
+            return cfg.prefill_round_tokens
+        base = self._idle_ewma if self._idle_ewma is not None \
+            else self._round_ewma
+        if base is None or self._chunk_ewma is None or not self._chunk_tokens:
+            # no measurements yet (first admission / first rounds): fall
+            # back to the configured static budget until EWMAs exist
+            self._derived_budget = cfg.prefill_round_tokens
+            return cfg.prefill_round_tokens
+        chunk_s = max(self._chunk_ewma, 1e-9)
+        k = max(1, int(cfg.target_stall_frac * base / chunk_s))
+        while k > 1 and chunked_admission_model(
+                chunk_s, k, base, k)["max_round_gap_chunked_s"] \
+                > base * (1.0 + cfg.target_stall_frac):
+            k -= 1
+        self._derived_budget = k * self._chunk_tokens
+        return self._derived_budget
+
     def _advance_chunked(self) -> None:
         """Advance in-flight chunked admissions under the per-round prefill
         token budget — decode rounds run between chunk steps, so the max
@@ -274,12 +336,22 @@ class ContinuousBatcher:
         if self.cfg.pace_admission and not self._gate_open and self.active:
             self._gated_rounds += 1
             return
-        budget = self.cfg.prefill_round_tokens if self.active else None
+        budget = self._prefill_budget() if self.active else None
         while self._chunked:
             if budget is not None and budget <= 0:
                 break
             req, adm = self._chunked[0]
+            t0 = time.perf_counter()
             did = adm.step()
+            if did:
+                dt = time.perf_counter() - t0
+                self._chunk_steps += 1
+                if self._chunk_steps > 1:      # step 1 is the jit compile
+                    a = self.cfg.ewma_alpha
+                    self._chunk_ewma = dt if self._chunk_ewma is None else \
+                        (1 - a) * self._chunk_ewma + a * dt
+                # full chunk size (the final chunk of a prompt is shorter)
+                self._chunk_tokens = max(self._chunk_tokens or 0, did)
             if budget is not None:
                 budget -= did
             if adm.done:
@@ -385,6 +457,12 @@ class ContinuousBatcher:
             pacing["round_ewma_s"] = float(self._round_ewma)
         if self._idle_ewma is not None:
             pacing["idle_round_ewma_s"] = float(self._idle_ewma)
+        # the per-round prefill budget actually in force (static, or the
+        # last adaptively derived figure) + the chunk-step EWMA behind it
+        if self._derived_budget is not None:
+            pacing["prefill_round_tokens"] = float(self._derived_budget)
+        if self._chunk_ewma is not None:
+            pacing["chunk_step_ewma_s"] = float(self._chunk_ewma)
         done = [r for r in self.finished
                 if r.t_first is not None and r.t_done is not None]
         if not done:

@@ -143,13 +143,15 @@ def test_release_drains_inflight_writes_before_slot_reuse():
 
 def test_oversized_prompt_rejected_without_slot_leak():
     """Prompt-length validation runs BEFORE the slot pop: a rejected
-    oversized request must not eat a sequence slot (sync or async)."""
+    oversized request must not eat a sequence slot (sync or async).
+    The guard raises ValueError (admission input validation survives
+    ``python -O``, unlike the old assert)."""
     from repro.serving.engine import BatchedLeoAMEngine
     cfg, params, _prompts_unused = _setup()
     eng = BatchedLeoAMEngine(cfg, params, _ecfg(), max_seqs=1)
     too_long = np.arange(2, 200, dtype=np.int64) % cfg.vocab_size
     for add in (eng.add_sequence, eng.add_sequence_async):
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="max_len"):
             add(too_long)
         assert eng.free_slots == 1
     eng.store.close()
