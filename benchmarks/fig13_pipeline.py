@@ -89,6 +89,51 @@ def run_engine_overlap() -> None:
          f"overlap_gain={total_sync / max(total_pipe, 1e-12):.2f}x")
 
 
+def run_debug_sync_overhead() -> None:
+    """Cost of the runtime sync-sanitizer (EngineCfg(debug_sync=True)):
+    per-round decode wall-clock with the owning-thread / epoch / lock-order
+    checks live vs off, same smoke engine.  Measured here — and ONLY here —
+    because benchmarks/run.py refuses to emit any other measured row while
+    the sanitizer is active (docs/INVARIANTS.md, measurement hygiene)."""
+    import jax
+    from repro.models import lm
+    from repro.serving.engine import BatchedLeoAMEngine, EngineCfg
+
+    cfg = get_config("longchat-7b-32k", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                       importance_rate=0.3, early_rate=0.5,
+                                       min_seq_for_sparse=32))
+    params = lm.init(cfg, jax.random.PRNGKey(1))
+    rng = np.random.RandomState(0)
+    batch, n_new = (2, 4) if common.SMOKE else (2, 8)
+    prompts = [rng.randint(2, cfg.vocab_size, 96) for _ in range(batch)]
+
+    def round_time(debug_sync: bool) -> float:
+        eng = BatchedLeoAMEngine(
+            cfg, params,
+            EngineCfg(max_len=160, pooled=True, pipeline=True,
+                      debug_sync=debug_sync),
+            max_seqs=batch)
+        toks = {}
+        for p in prompts:
+            sid, tok = eng.add_sequence(p)
+            toks[sid] = tok
+        toks = eng.decode_round(toks)           # jit warmup round
+        t0 = time.perf_counter()
+        for _ in range(n_new):
+            toks = eng.decode_round(toks)
+        dt = (time.perf_counter() - t0) / n_new
+        eng.store.close()
+        return dt
+
+    t_off = round_time(False)
+    t_on = round_time(True)
+    emit("fig13/debug_sync/off", t_off * 1e6, f"b{batch}")
+    emit("fig13/debug_sync/on", t_on * 1e6,
+         f"overhead={t_on / max(t_off, 1e-12):.2f}x")
+
+
 def run_admission_ttft() -> None:
     """TTFT breakdown: prefill compute vs tier-write stall, serial vs
     write-behind overlapped ingest — the analytic ``prefill_schedule``
@@ -249,6 +294,7 @@ def _mixed_length_scenario(arch: str, tag: str, max_len: int,
 def run() -> None:
     run_simulated()
     run_engine_overlap()
+    run_debug_sync_overhead()
     run_admission_ttft()
     run_mixed_length()
     run_mixed_length_mla()

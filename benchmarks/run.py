@@ -20,6 +20,16 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
 
 
 def main() -> None:
+    # measurement hygiene: never produce measured rows with the sync-
+    # sanitizer live — its owning-thread/epoch/lock-order checks would be
+    # folded into every checked-in baseline number.  The sanitizer's own
+    # overhead is measured explicitly by fig13/debug_sync/{on,off}.
+    from repro.serving import sanitizer
+    if sanitizer.active():
+        raise SystemExit(
+            "benchmarks/run.py: the sync-sanitizer is active (debug_sync "
+            "engine live or REPRO_DEBUG_SYNC=1) — refusing to emit measured "
+            "numbers; unset REPRO_DEBUG_SYNC / close debug engines first")
     from benchmarks import (common, engine_audit, fig4_5_overheads,
                             fig7_8_desert, fig10_11_evals, fig13_pipeline,
                             fig14_quality, fig15_latency, fig16_17_breakdown,

@@ -1,0 +1,23 @@
+"""leolint — repo-specific static checker for the tiered serving engine.
+
+Four passes over the AST + call graph (stdlib ``ast`` only):
+
+========== ==============================================================
+locklint   no JAX dispatch / device sync / memmap flush / fence / future
+           wait while the store lock may be held; lock acquisition order
+           acyclic
+threadlint executor-submitted work never reaches ``@decode_thread_only``
+           code
+billlint   replica/sidecar writes and disk→host promotions pair with a
+           billing call from the transfer↔bill table, in-function
+jitlint    no clocks, Python RNG, locks, or Python-state mutation inside
+           (or reachable from) ``jax.jit``-traced functions
+========== ==============================================================
+
+Run as ``python -m repro.analysis [--strict] [paths...]``; findings are
+suppressible only via ``# leolint: waive[pass] reason=...`` pragmas (see
+``docs/INVARIANTS.md``).
+"""
+
+from repro.analysis.core import (Finding, Index, PASS_IDS,  # noqa: F401
+                                 run_passes)

@@ -107,6 +107,7 @@ from repro.core.tiers import AccessTable
 from repro.models import lm
 from repro.models import attention as attn_mod
 from repro.serving.offload import DEVICE, DISK, HOST, TieredKVStore
+from repro.serving.sanitizer import decode_thread_only, worker_thread
 
 
 @dataclass
@@ -162,6 +163,15 @@ class EngineCfg:
                                      # read the fp16 replica (full bytes)
                                      # even when the sidecar is valid
     profile: bool = False            # block per stage, fill round_profiles
+    debug_sync: bool = False         # runtime sync-sanitizer: ownership
+                                     # decorators assert the owning
+                                     # thread, store/pool mutators get a
+                                     # concurrent-entry epoch guard, and
+                                     # the store locks feed a lock-order
+                                     # tracker that fails on cycles.  For
+                                     # debugging/stress only — never for
+                                     # measured runs (benchmarks/run.py
+                                     # refuses)
     # measured-cost θ balance (paper §4.4); defaults mirror TierBW
     pcie_bw: float = 16e9
     disk_bw: float = 3.5e9
@@ -348,7 +358,11 @@ class BatchedLeoAMEngine:
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineCfg, *,
                  max_seqs: int = 1,
                  device_chunk_budget: Optional[int] = None):
-        assert not cfg.is_encdec, "engine drives decoder-only models"
+        if cfg.is_encdec:
+            raise ValueError(
+                f"LeoAMEngine drives decoder-only models; '{cfg.name}' is "
+                f"an encoder-decoder architecture — serve it with the "
+                f"per-request runtime paths instead")
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -377,7 +391,8 @@ class BatchedLeoAMEngine:
             transit_codec=ecfg.transit_codec, device_budget=budget,
             use_pool=ecfg.pooled, pool_slots=device_chunk_budget,
             real_codec=ecfg.real_codec, disk_sidecar=ecfg.disk_sidecar,
-            sidecar_lossless=ecfg.sidecar_lossless, latent=self.mla)
+            sidecar_lossless=ecfg.sidecar_lossless, latent=self.mla,
+            debug_sync=ecfg.debug_sync)
         self.seqs: Dict[int, _SeqState] = {}
         self._free: List[int] = list(range(max_seqs - 1, -1, -1))
         # DTP state: prefetch executor, per-(seq, layer) previous-round
@@ -403,6 +418,7 @@ class BatchedLeoAMEngine:
     # ------------------------------------------------------------------
     # Sequence lifecycle
     # ------------------------------------------------------------------
+    @decode_thread_only
     def add_sequence(self, tokens: np.ndarray) -> Tuple[int, int]:
         """Prefill one request into a free store slot.
 
@@ -420,6 +436,7 @@ class BatchedLeoAMEngine:
         sid = self._free.pop()
         return self._admit(sid, tokens, pool_place=True)
 
+    @decode_thread_only
     def add_sequence_async(self, tokens: np.ndarray) -> Future:
         """Admission under decode: reserve a slot NOW, run the prefill +
         ingest on the process-wide admission worker, overlapped with the
@@ -457,6 +474,7 @@ class BatchedLeoAMEngine:
                 f"(decode appends past the prompt); raise EngineCfg.max_len "
                 f"or truncate the prompt")
 
+    @worker_thread
     def _admit(self, sid: int, tokens: np.ndarray, *,
                pool_place: bool) -> Tuple[int, int]:
         cfg, ecfg = self.cfg, self.ecfg
@@ -583,6 +601,7 @@ class BatchedLeoAMEngine:
             self._chunk_prefill_cache[C] = fn
         return fn(self.params, batch, cache)
 
+    @decode_thread_only
     def begin_admission(self, tokens: np.ndarray, *,
                         chunk_tokens: Optional[int] = None,
                         pool_place: bool = True) -> "ChunkedAdmission":
@@ -647,6 +666,7 @@ class BatchedLeoAMEngine:
                     for c in placement}
         return dict(placement)
 
+    @decode_thread_only
     def release(self, sid: int) -> None:
         """Retire a sequence and recycle its store slot.
 
@@ -760,6 +780,7 @@ class BatchedLeoAMEngine:
             return
         key = tuple((sid, len(chunks_by_seq[sid])) for sid in order)
 
+        @worker_thread
         def work():
             res = self.store.read_abstracts_batch(li, chunks_by_seq)
             self._abs_cache[li] = (key, res)
@@ -836,6 +857,7 @@ class BatchedLeoAMEngine:
     # ------------------------------------------------------------------
     # Decode round
     # ------------------------------------------------------------------
+    @decode_thread_only
     def decode_round(self, tokens: Dict[int, int]) -> Dict[int, int]:
         """One token for every sequence in ``tokens`` ({seq id: last token}).
 
@@ -849,7 +871,11 @@ class BatchedLeoAMEngine:
         cfg, ecfg = self.cfg, self.ecfg
         order = sorted(tokens)
         B = len(order)
-        assert B > 0, "decode_round needs at least one sequence"
+        if B == 0:
+            raise ValueError(
+                "decode_round needs at least one sequence: pass "
+                "{seq id: last token} for every live sequence (admit one "
+                "via add_sequence / add_sequence_async first)")
         for sid in order:               # write-behind completion fence: no
             self.store.ingest_fence(sid)  # read sees a half-written replica
         states = [self.seqs[sid] for sid in order]
@@ -1110,6 +1136,7 @@ class ChunkedAdmission:
                          seq=self.sid, executor=eng._ingest_exec,
                          pool_place=self.pool_place, start=start)
 
+    @decode_thread_only
     def step(self) -> int:
         """Advance one chunk; returns prompt tokens consumed (0 if done)."""
         if self.done:
@@ -1231,7 +1258,10 @@ class LeoAMEngine:
         return tok
 
     def decode_step(self, token: int) -> int:
-        assert self._sid is not None, "prefill first"
+        if self._sid is None:
+            raise ValueError(
+                "decode_step before prefill: call prefill(prompt) (or "
+                "generate) to admit the sequence before decoding")
         return self._engine.decode_round({self._sid: token})[self._sid]
 
     def generate(self, prompt: np.ndarray, n_tokens: int) -> List[int]:

@@ -83,6 +83,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression
+from repro.serving import sanitizer as _san
+from repro.serving.sanitizer import (any_thread, decode_thread_only,
+                                     worker_thread)
 
 DEVICE, HOST, DISK = "device", "host", "disk"
 
@@ -220,6 +223,7 @@ class DeviceChunkPool:
         for key in [k for k in self.pending_place if k[0] == seq]:
             self.pending_place.pop(key, None)
 
+    @decode_thread_only
     def scatter(self, slots: Sequence[int], kv_new, *,
                 pad_to: Optional[int] = None,
                 row_pad: int = 8) -> List[Tuple[int, int]]:
@@ -302,7 +306,13 @@ class TieredKVStore:
                  device_budget: Optional[int] = None,
                  use_pool: bool = False, pool_slots: Optional[int] = None,
                  real_codec: bool = False, disk_sidecar: bool = False,
-                 sidecar_lossless: bool = False, latent: bool = False):
+                 sidecar_lossless: bool = False, latent: bool = False,
+                 debug_sync: bool = False):
+        # sync-sanitizer: refcounted enable so overlapping debug stores
+        # compose; locks get wrapped in TrackedLock further down
+        self.debug_sync = bool(debug_sync)
+        if self.debug_sync:
+            _san.enable()
         self.n_seqs = n_seqs
         self.n_layers, self.n_chunks, self.chunk = n_layers, n_chunks, chunk
         self.kv_heads, self.head_dim = kv_heads, head_dim
@@ -338,6 +348,8 @@ class TieredKVStore:
                                 head_dim), -np.inf, np.float32)
         self._abs_kn = np.full_like(self._abs_km, np.inf)
         self._lock = threading.RLock()
+        if self.debug_sync:
+            self._lock = _san.TrackedLock(self._lock, "TieredKVStore._lock")
         self.upload_pad = 8            # delta-upload bucket (shape reuse)
         self.codec_uploads = 0         # pooled H2D chunks sent packed
         self.plain_uploads = 0         # pooled H2D chunks sent fp16
@@ -374,6 +386,9 @@ class TieredKVStore:
         # (workers need the store lock to land their writes)
         self._ingest_futs: Dict[int, List] = defaultdict(list)
         self._futs_lock = threading.Lock()
+        if self.debug_sync:
+            self._futs_lock = _san.TrackedLock(self._futs_lock,
+                                               "TieredKVStore._futs_lock")
         # sidecar requantization sweep: append-dirtied chunks keyed to the
         # sweep round of their LAST append; a chunk quiet for a full round
         # is re-packed in the background so long-running sequences regain
@@ -457,8 +472,8 @@ class TieredKVStore:
         return (self.disk_sidecar and not self.sidecar_lossless
                 and bool(self._sidecar_valid[seq, layer, c]))
 
-    def _read_sidecar(self, layer: int, keys: Sequence[Tuple[int, int]]
-                      ) -> np.ndarray:
+    def _read_sidecar(self, layer: int,  # leolint: waive[billlint] reason=coalesced read helper: every caller (_stage_disk, fetch_chunks) bills _packed_bytes() per key at its own promotion site, where per-seq attribution is known
+                      keys: Sequence[Tuple[int, int]]) -> np.ndarray:
         """Coalesced packed-sidecar read: dequantize every storage plane
         for every (seq, chunk) key.  Returns (n, planes, chunk, Hkv, hd)
         in store dtype."""
@@ -474,6 +489,7 @@ class TieredKVStore:
                 self.kv_heads, self.head_dim, dtype=self.dtype)
         return out
 
+    @worker_thread
     def ingest(self, layer: int, k: np.ndarray,
                v: Optional[np.ndarray] = None,
                placement: Optional[Dict[int, str]] = None, *, seq: int = 0,
@@ -541,6 +557,7 @@ class TieredKVStore:
                     else:
                         self._promote_device(key, kc, vc)
             if to_pool:
+                # leolint: waive[locklint,threadlint] reason=serial-path only: to_pool fills only when pool_place=True, which async admission never passes (workers defer via pending_place); here the decode thread is the caller
                 self._pool_place(layer, seq, to_pool)
         if not cids:
             return
@@ -553,6 +570,7 @@ class TieredKVStore:
             with self._futs_lock:
                 self._ingest_futs[seq].append(fut)
 
+    @worker_thread
     def _ingest_cold(self, layer: int, seq: int, cids: List[int],
                      kcs: np.ndarray, vcs: np.ndarray) -> None:
         """The write-behind half of :meth:`ingest`: fp16 replica + packed
@@ -585,6 +603,7 @@ class TieredKVStore:
                 self._record(seq, HOST, DISK, "kv_replica", rep_bytes)
                 self._record(seq, HOST, DISK, "abstract", self.abstract_bytes)
 
+    @any_thread
     def ingest_fence(self, seq: int) -> None:
         """Block until every in-flight write-behind ingest of ``seq`` has
         landed (replicas, sidecars, abstracts, billing).  Reads of the
@@ -596,6 +615,7 @@ class TieredKVStore:
         for fut in futs:
             fut.result()
 
+    @any_thread
     def ingest_fence_all(self) -> None:
         """Fence every sequence (shutdown path)."""
         with self._futs_lock:
@@ -603,6 +623,7 @@ class TieredKVStore:
         for s in seqs:
             self.ingest_fence(s)
 
+    @decode_thread_only
     def _pool_place(self, layer: int, seq: int,
                     items: List[Tuple[int, np.ndarray, np.ndarray]]) -> None:
         """Initial (prefill) pool placement: one scatter, no transit billing
@@ -631,6 +652,7 @@ class TieredKVStore:
             return (self._abs_km[seq, layer, idx].copy(),
                     self._abs_kn[seq, layer, idx].copy())
 
+    @any_thread
     def read_abstracts_batch(self, layer: int,
                              chunks_by_seq: Dict[int, Sequence[int]]
                              ) -> Tuple[np.ndarray, np.ndarray, Dict[int, float]]:
@@ -678,6 +700,7 @@ class TieredKVStore:
     def _touch(self, key: Tuple[int, int, int]) -> None:
         self._lru.move_to_end(key)
 
+    @decode_thread_only
     def fetch_chunks(self, layer: int, chunks: Sequence[int], *,
                      seq: int = 0, to_device: bool = True
                      ) -> Tuple[np.ndarray, np.ndarray]:
@@ -695,6 +718,7 @@ class TieredKVStore:
                     continue
                 if self.tier[seq, layer, c] == DISK or key not in self._host_k:
                     if self._sidecar_ok(seq, layer, c):
+                        # leolint: waive[locklint] reason=decode-thread fetch path: sidecar dequant under the short fetch critical section is the accepted PR-2 design (tier tables must not move mid-fetch)
                         kv = self._read_sidecar(layer, [(seq, c)])[0]
                         kc, vc = kv[0], kv[-1]
                         nb = self._packed_bytes()
@@ -714,6 +738,7 @@ class TieredKVStore:
                 vs.append(vc)
             return np.stack(ks), np.stack(vs)
 
+    @decode_thread_only
     def fetch_chunks_batch(self, layer: int,
                            chunks_by_seq: Dict[int, Sequence[int]], *,
                            pad_to: Optional[int] = None, to_device: bool = True
@@ -737,6 +762,7 @@ class TieredKVStore:
             nmax = int(pad_to if pad_to is not None
                        else (nsel.max() if B else 0))
 
+            # leolint: waive[locklint] reason=decode-thread batch fetch: disk staging (and its sidecar dequant) stays under _lock so the gathered tier view is atomic; accepted PR-2 design
             self._stage_disk(layer, [(seq, c) for seq, chunks in items
                                      for c in chunks],
                              nbytes=(self._disk_read_bytes()
@@ -820,6 +846,7 @@ class TieredKVStore:
                     self.tier[seq, layer, c] = HOST
         return len(need), billed
 
+    @worker_thread
     def stage_host(self, layer: int,
                    chunks_by_seq: Dict[int, Sequence[int]]) -> int:
         """Speculative disk→host staging (DTP prefetch).  Pulls predicted
@@ -830,12 +857,14 @@ class TieredKVStore:
         with self._lock:
             keys = [(seq, c) for seq, chunks in chunks_by_seq.items()
                     for c in chunks]
+            # leolint: waive[locklint] reason=prefetch staging holds _lock so the re-tier to HOST is atomic with the read; the decode thread stalls at most one speculative batch (measured in fig13 prefetch bench)
             n, _ = self._stage_disk(layer, keys,
                                     nbytes=self._disk_read_bytes(),
                                     skip_pool=True, retier=True)
             return n
 
-    def fetch_chunks_pooled(self, layer: int,
+    @decode_thread_only
+    def fetch_chunks_pooled(self, layer: int,  # leolint: waive[locklint] reason=decode-thread pooled fetch: dequant+scatter run under _lock by design so tier tables stay consistent across the gather; workers stall for the short critical section (PR-2/PR-3 accepted cost)
                             chunks_by_seq: Dict[int, Sequence[int]], *,
                             pad_to: Optional[int] = None,
                             theta: float = 1.0
@@ -854,7 +883,11 @@ class TieredKVStore:
         ``pools[layer]`` (padding rows point at slot 0 — the engine masks
         them), nsel (B,) valid counts.  Rows follow dict order.
         """
-        assert self.use_pool, "store built without use_pool=True"
+        if not self.use_pool:
+            raise ValueError(
+                "fetch_chunks_pooled requires a pooled store — construct "
+                "TieredKVStore(use_pool=True, ...) or use fetch_chunks / "
+                "fetch_chunks_batch on the legacy host-assembled path")
         with self._lock:
             st = FetchStats()
             pool = self.pools[layer]
@@ -985,6 +1018,7 @@ class TieredKVStore:
                              if pools else 0)}
 
     # ------------------------------------------------------------------
+    @decode_thread_only
     def demote(self, layer: int, chunks: Sequence[int], to: str = HOST, *,
                seq: int = 0) -> None:
         """Eviction is free toward disk (replicas, §4.3)."""
@@ -1007,6 +1041,7 @@ class TieredKVStore:
         self.append_tokens_batch(layer, np.asarray([pos]), k_new[None],
                                  v_new[None], seqs=[seq])
 
+    @decode_thread_only
     def append_tokens_batch(self, layer: int, positions: np.ndarray,
                             k_news: np.ndarray, v_news: np.ndarray, *,
                             seqs: Sequence[int]) -> None:
@@ -1063,6 +1098,7 @@ class TieredKVStore:
     # ------------------------------------------------------------------
     # Sidecar requantization sweep
     # ------------------------------------------------------------------
+    @decode_thread_only
     def requant_sweep(self, executor=None) -> int:
         """Advance the sweep clock one decode round and re-pack every
         append-dirtied sidecar whose chunk stayed quiet for at least one
@@ -1101,6 +1137,7 @@ class TieredKVStore:
                 executor.submit(self._requant_chunks, ready, vers))
         return len(ready)
 
+    @worker_thread
     def _requant_chunks(self, keys: List[Tuple[int, int, int]],
                         vers: Dict[Tuple[int, int, int], int]) -> None:
         """Re-pack the fp16 replica of each chunk into its int sidecar.
@@ -1114,6 +1151,10 @@ class TieredKVStore:
                     continue            # a newer append re-dirtied it
                 planes = [np.array(self._disk[seq, layer, c, pl])
                           for pl in range(self.planes)]
+                # the repack READS the fp16 replica off disk before it
+                # writes the packed sidecar back — both directions bill
+                self._record(seq, DISK, HOST, "sidecar_repack_read",
+                             float(self.chunk_bytes))
             packed = [compression.quantize_chunks(p[None], self.transit_codec)
                       for p in planes]
             with self._lock:
@@ -1128,6 +1169,7 @@ class TieredKVStore:
                 self._record(seq, HOST, DISK, "sidecar_repack",
                              self._packed_bytes())
 
+    @any_thread
     def requant_fence(self) -> None:
         """Drain in-flight background repacks (shutdown / test ordering)."""
         futs, self._requant_futs = self._requant_futs, []
@@ -1135,6 +1177,7 @@ class TieredKVStore:
             f.result()
 
     # ------------------------------------------------------------------
+    @decode_thread_only
     def clear_seq(self, seq: int) -> None:
         """Retire a sequence: free its hot-tier entries so the slot can be
         reused by the next admitted request.  The slot's traffic log moves
@@ -1179,6 +1222,9 @@ class TieredKVStore:
     def close(self) -> None:
         self.ingest_fence_all()        # never tear the memmaps out from
         self.requant_fence()           # under an in-flight cold write
+        if self.debug_sync:
+            _san.disable()
+            self.debug_sync = False    # idempotent on double-close
         del self._disk
         if self._disk_q is not None:
             del self._disk_q

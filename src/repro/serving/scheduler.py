@@ -62,6 +62,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.pipeline import chunked_admission_model
+from repro.serving.sanitizer import any_thread, decode_thread_only
 
 
 @dataclass
@@ -154,14 +155,21 @@ class ContinuousBatcher:
 
     def __init__(self, make_engine: Optional[Callable[[], "object"]] = None,
                  cfg: Optional[SchedulerCfg] = None, *, engine=None):
-        assert (make_engine is None) != (engine is None), \
-            "pass exactly one of make_engine (legacy) or engine (batched)"
+        if (make_engine is None) == (engine is None):
+            raise ValueError(
+                "pass exactly one of make_engine= (legacy per-request "
+                "engines) or engine= (shared batched engine) — got "
+                f"make_engine={make_engine!r}, engine={engine!r}")
         self.make_engine = make_engine
         self.engine = engine
         self.cfg = cfg or SchedulerCfg()
-        assert not (self.cfg.chunked_admission
-                    and self.cfg.overlap_admission), \
-            "chunked and overlapped admission are exclusive modes"
+        if self.cfg.chunked_admission and self.cfg.overlap_admission:
+            raise ValueError(
+                "SchedulerCfg(chunked_admission=True, "
+                "overlap_admission=True): chunked and overlapped "
+                "admission are exclusive modes — chunked admission "
+                "already interleaves prefill chunks with decode rounds "
+                "on the decode thread; pick one")
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, tuple] = {}
         self._pending: List[Tuple[Request, "object"]] = []
@@ -186,7 +194,9 @@ class ContinuousBatcher:
         self._chunk_tokens: Optional[int] = None
         self._derived_budget: Optional[int] = None
 
+    @any_thread
     def submit(self, req: Request) -> None:
+        # deque.append is atomic; any producer thread may enqueue
         self.queue.append(req)
 
     # ------------------------------------------------------------------
@@ -402,6 +412,7 @@ class ContinuousBatcher:
         return bool(self.queue or self.active or self._pending
                     or self._ready or self._chunked)
 
+    @decode_thread_only
     def step(self) -> int:
         """One decode round over all active requests; returns #active."""
         self._admit()

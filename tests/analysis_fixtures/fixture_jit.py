@@ -1,0 +1,57 @@
+"""Seeded jitlint violations (impure traced functions)."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_lock = threading.Lock()
+
+
+@jax.jit
+def clock_in_jit(x):
+    t = time.perf_counter()                   # SEED: clock in traced fn
+    return x * t
+
+
+@jax.jit
+def rng_in_jit(x):
+    noise = np.random.randn(*x.shape)         # SEED: python RNG in traced fn
+    return x + noise
+
+
+@jax.jit
+def lock_in_jit(x):
+    with _lock:                               # SEED: lock inside traced fn
+        return x * 2
+
+
+class Stateful:
+    def __init__(self):
+        self.calls = 0
+
+    def bump(self, x):
+        self.calls += 1                       # SEED: attr mutation, reached
+        return x + 1                          # from a jitted caller
+
+
+_state = Stateful()
+
+
+@jax.jit
+def mutation_via_callee(x):
+    return _state.bump(x)
+
+
+def make_step(scale):
+    def step(x):
+        step.count = 1                        # SEED: factory-pattern root
+        return x * scale
+    return step
+
+
+step_fn = jax.jit(make_step(2.0))
+
+pure_fn = jax.jit(lambda x: jnp.tanh(x))      # fine: pure lambda root

@@ -1,0 +1,65 @@
+"""Seeded locklint violations.  NOT collected by pytest (no test_ prefix);
+test_leolint.py feeds this file to the analyzer by path and asserts each
+seeded violation fires."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def _jitted_helper(x):
+    return x * 2
+
+
+class BadStore:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._futs_lock = threading.Lock()
+        self._futs = []
+
+    def jit_under_lock(self, x):
+        with self._lock:
+            return jnp.stack([x, x])          # SEED: jax dispatch under lock
+
+    def jitted_call_under_lock(self, x):
+        with self._lock:
+            return _jitted_helper(x)          # SEED: jitted callee under lock
+
+    def sync_under_lock(self, x):
+        with self._lock:
+            x.block_until_ready()             # SEED: device sync under lock
+
+    def ingest_fence(self, seq):
+        for f in list(self._futs):
+            f.result()
+
+    def fence_under_lock(self):
+        with self._lock:
+            self.ingest_fence(0)              # SEED: fence under store lock
+
+    def wait_under_lock(self, fut):
+        with self._lock:
+            return fut.result()               # SEED: future wait under lock
+
+    def indirect_dispatch(self):
+        with self._lock:
+            self._helper()                    # SEED: callee dispatches JAX
+
+    def _helper(self):
+        return jnp.zeros((2,))
+
+    def bad_order_a(self):
+        with self._lock:
+            with self._futs_lock:             # edge _lock -> _futs_lock
+                pass
+
+    def bad_order_b(self):
+        with self._futs_lock:
+            with self._lock:                  # SEED: reverse order (cycle)
+                pass
+
+    def clean_metadata_update(self, key, val):
+        with self._lock:                      # fine: cheap host work only
+            self._futs.append((key, val))

@@ -1,0 +1,21 @@
+"""Waiver-pragma behavior: a reasoned waiver suppresses; a reason-less
+waiver is itself reported."""
+
+import threading
+
+import jax.numpy as jnp
+
+
+class WaivedStore:
+    def __init__(self):
+        self._lock = threading.RLock()
+
+    def waived_dispatch(self, x):
+        with self._lock:
+            # leolint: waive[locklint] reason=decode thread only touches this path; workers never contend for this fixture lock
+            return jnp.stack([x, x])
+
+    def badly_waived_dispatch(self, x):
+        with self._lock:
+            # leolint: waive[locklint]
+            return jnp.stack([x, x, x])       # SEED: waive without reason=
