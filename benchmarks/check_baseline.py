@@ -37,6 +37,7 @@ GATED = [
     "fig13/admit/engine/overlapped",
     "fig15/queued/serial/mean_ttft",
     "fig15/queued/overlap/mean_ttft",
+    "fig15/prefix/ttft_warm",
 ]
 
 # absolute count ceilings (NOT latency-scaled): the bucketed prefill path
@@ -48,6 +49,15 @@ GATED = [
 COUNT_LIMITS = {
     "fig13/mixed/prefill_programs": 11.0,
     "fig13/mixed_mla/prefill_programs": 10.0,
+}
+
+# raw-value bounds (NOT latencies, no tolerance multiplier): rows whose
+# us column carries the quantity itself.  The shared-prefix cache must
+# keep a majority chunk hit rate on the zipfian mix AND deliver warm
+# TTFT at most half of cold — the ISSUE-7 acceptance bar.
+BOUNDS = {
+    "fig15/prefix/hit_rate": (">=", 0.5),
+    "fig15/prefix/warm_over_cold": ("<=", 0.5),
 }
 
 
@@ -77,14 +87,16 @@ def main() -> int:
             baseline_path = a.split("=", 1)[1]
 
     if "--update" in sys.argv:
-        missing = [n for n in GATED + list(COUNT_LIMITS) if n not in rows]
+        missing = [n for n in GATED + list(COUNT_LIMITS) + list(BOUNDS)
+                   if n not in rows]
         if missing:
             print(f"refusing to update: CSV lacks {missing}",
                   file=sys.stderr)
             return 1
         data = {"tolerance": 4.0,
                 "metrics_us": {n: round(rows[n], 1) for n in GATED},
-                "counts_max": dict(COUNT_LIMITS)}
+                "counts_max": dict(COUNT_LIMITS),
+                "bounds": {n: list(v) for n, v in BOUNDS.items()}}
         with open(baseline_path, "w") as fh:
             json.dump(data, fh, indent=2)
             fh.write("\n")
@@ -121,14 +133,28 @@ def main() -> int:
         if got > limit:
             failures.append(f"{name}: count {got:.0f} > ceiling "
                             f"{limit:.0f}")
+    # raw-value bounds: the row's us column IS the quantity (a rate or a
+    # ratio), compared directly against the checked-in bound
+    for name, (op, bound) in base.get("bounds", {}).items():
+        got = rows.get(name)
+        if got is None:
+            failures.append(f"{name}: MISSING from CSV (bound "
+                            f"{op} {bound})")
+            continue
+        ok = got >= bound if op == ">=" else got <= bound
+        verdict = "ok" if ok else "REGRESSION"
+        print(f"{name}: {got:.3f} vs bound {op} {bound} -> {verdict}")
+        if not ok:
+            failures.append(f"{name}: {got:.3f} violates {op} {bound}")
     if failures:
         print("\nbench smoke regression gate FAILED:", file=sys.stderr)
         for f in failures:
             print(f"  {f}", file=sys.stderr)
         return 1
+    n_gates = (len(base["metrics_us"]) + len(base.get("counts_max", {}))
+               + len(base.get("bounds", {})))
     print("bench smoke regression gate passed "
-          f"({len(base['metrics_us']) + len(base.get('counts_max', {}))} "
-          f"metrics, x{tol:.1f} tolerance)")
+          f"({n_gates} metrics, x{tol:.1f} tolerance)")
     return 0
 
 

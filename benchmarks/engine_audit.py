@@ -12,7 +12,7 @@ from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core.tiers import lka_transfer_ratio
 from repro.models import lm
-from repro.serving.engine import EngineCfg, LeoAMEngine
+from repro.serving.engine import BatchedLeoAMEngine, EngineCfg, LeoAMEngine
 from repro.serving.offload import DISK
 
 
@@ -52,3 +52,32 @@ def run() -> None:
          f"delta={h2d:.0f}B full_would_be={full:.0f}B "
          f"saved={100 * (1 - h2d / max(full, 1)):.1f}%")
     eng.store.close()
+
+    # shared-prefix audit: the same prompt admitted twice through the
+    # content-addressable store — the second admission adopts the
+    # resident chunks by reference and skips their prefill + tier bytes
+    peng = BatchedLeoAMEngine(
+        cfg, params, EngineCfg(max_len=256, gpu_chunk_frac=0.1,
+                               cpu_chunk_frac=0.3, selection="tree",
+                               prefix_cache=True,
+                               prefill_chunk_tokens=64), max_seqs=2)
+    prompt = rng.randint(2, cfg.vocab_size, 200)
+    for _ in range(2):
+        sid, tok = peng.add_sequence(prompt)
+        cur = {sid: tok}
+        for _ in range(4):
+            cur = peng.decode_round(cur)
+        peng.release(sid)
+    ps = peng.store.prefix_stats()
+    emit("engine/prefix/hit_rate", 0.0,
+         f"hit_rate={ps['prefix_hit_rate']:.3f} "
+         f"hits={ps['prefix_hit_chunks']:.0f} "
+         f"misses={ps['prefix_miss_chunks']:.0f}")
+    emit("engine/prefix/shared_chunks", 0.0,
+         f"shared={ps['shared_chunks']:.0f} refs={ps['shared_refs']:.0f} "
+         f"warm_admissions={ps['warm_admissions']:.0f}")
+    emit("engine/prefix/bytes_deduped", 0.0,
+         f"deduped={ps['bytes_deduped']:.0f}B "
+         f"cow_copies={ps['cow_copies']:.0f} "
+         f"prefix_ref_ops={peng.store.log.ops.get(('host', 'disk', 'prefix_ref'), 0):.0f}")
+    peng.store.close()

@@ -40,10 +40,17 @@ _TIERS = {"DEVICE", "HOST", "DISK"}
 #: schema means extending this table (and docs/INVARIANTS.md) in the same
 #: change — that is the point.
 ALLOWED_KINDS = {
+    # prefix_ref: by-reference warm-prefix adoption — bills ZERO bytes
+    # (one op per adopted chunk, for audit); cow_copy/cow_read: the two
+    # halves of a copy-on-write privatization (read the shared replica,
+    # write the private one — exactly one chunk each way per layer);
+    # kv_shared: a refcounted promotion of a shared chunk (same bytes as
+    # "kv", attributed to the reading sequence, phys row ≠ seq row).
     ("HOST", "DISK"): {"kv_replica", "kv_append", "sidecar_repack",
-                       "abstract"},
-    ("DISK", "HOST"): {"kv", "abstract", "sidecar_repack_read"},
-    ("HOST", "DEVICE"): {"kv", "kv_append", "abstract"},
+                       "abstract", "prefix_ref", "cow_copy"},
+    ("DISK", "HOST"): {"kv", "abstract", "sidecar_repack_read",
+                       "kv_shared", "cow_read"},
+    ("HOST", "DEVICE"): {"kv", "kv_append", "abstract", "kv_shared"},
     ("DEVICE", "HOST"): {"kv", "kv_append"},
 }
 

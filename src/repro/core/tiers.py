@@ -117,3 +117,12 @@ def abstract_overhead(chunk: int) -> float:
     """Extra storage fraction from abstracts: 2 key vectors per chunk on K+V
     (paper §6.5: <1.6% at chunk=64 — 2/(2·64) = 1.56%)."""
     return 2.0 / (2.0 * chunk)
+
+
+def shared_prefix_savings(hit_chunks: int, n_layers: int, chunk_bytes: float,
+                          abstract_bytes: float) -> float:
+    """Tier bytes a warm-prefix admission does NOT write or duplicate:
+    per adopted chunk, every layer skips its disk replica AND its LKA
+    abstract (both computed once by the registrant and shared by
+    reference).  The store accumulates this into ``bytes_deduped``."""
+    return float(hit_chunks) * n_layers * (chunk_bytes + abstract_bytes)

@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn
@@ -194,6 +195,54 @@ def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int):
         dt = jnp.dtype(d.dtype) if d.dtype else jnp.dtype(cfg.dtype)
         return jnp.zeros(d.shape, dt)
     return jax.tree.map(z, cache_defs(cfg, batch, max_len), is_leaf=is_def)
+
+
+def load_prefix_rows(cfg: ArchConfig, cache, kv_rows, n_tokens: int):
+    """Seed a chunked-prefill cache with shared-prefix KV rows.
+
+    ``kv_rows`` holds one ``(k_rows, v_rows)`` pair per *attention* layer
+    (store layer order), each of shape ``(n_tokens, Hkv, hd)`` — for MLA
+    a single latent plane ``(n_tokens, 1, kv_lora_rank + rope_dim)``.
+    The rows are written into positions ``[0, n_tokens)`` of the batch-1
+    admission cache, so chunked prefill can resume at ``q_offset ==
+    n_tokens`` and attend over the warm span without recomputing it.
+    """
+    prologue, period_plan, _ = _layer_plan(cfg)
+    pro_n = len(prologue)
+    period = cfg.period()
+    kinds = cfg.layer_kinds()
+    ai = 0
+    for layer, kind in enumerate(kinds):
+        if not kind.startswith("attn"):
+            continue
+        k_rows, v_rows = kv_rows[ai]
+        ai += 1
+        if layer < pro_n:
+            leafset = cache["prologue"][layer]
+
+            def put(name, rows, ls=leafset):
+                leaf = ls[name]
+                ls[name] = leaf.at[0, :n_tokens].set(
+                    jnp.asarray(rows, leaf.dtype))
+        else:
+            pi = (layer - pro_n) % period
+            bi = (layer - pro_n) // period
+            leafset = cache["body"][pi]
+
+            def put(name, rows, ls=leafset, b=bi):
+                leaf = ls[name]
+                ls[name] = leaf.at[b, 0, :n_tokens].set(
+                    jnp.asarray(rows, leaf.dtype))
+        if cfg.mla is not None:
+            lat = np.asarray(k_rows)[:, 0, :]
+            r = cfg.mla.kv_lora_rank
+            put("ckv", lat[:, :r])
+            put("krope", lat[:, r:])
+        else:
+            put("k", np.asarray(k_rows))
+            put("v", np.asarray(v_rows))
+    assert ai == len(kv_rows), (ai, len(kv_rows))
+    return cache
 
 
 def encoder_len(cfg: ArchConfig, dec_len: int) -> int:

@@ -162,6 +162,18 @@ class EngineCfg:
     sidecar_lossless: bool = False   # flag the fallback on: promotions
                                      # read the fp16 replica (full bytes)
                                      # even when the sidecar is valid
+    prefix_cache: bool = False       # content-addressable cross-request
+                                     # shared-prefix reuse: warm prompts
+                                     # adopt matching chunk-aligned spans
+                                     # by reference (zero prefill FLOPs,
+                                     # zero duplicate tier bytes) and
+                                     # resume chunked prefill at the cold
+                                     # suffix; opt-in — admission routes
+                                     # through the chunked-prefill path
+    prefix_arena_rows: int = 8       # shared-chunk arena rows appended to
+                                     # the store's per-seq arrays; bounds
+                                     # how many distinct prefix sets stay
+                                     # resident (LRU beyond that)
     profile: bool = False            # block per stage, fill round_profiles
     debug_sync: bool = False         # runtime sync-sanitizer: ownership
                                      # decorators assert the owning
@@ -378,6 +390,24 @@ class BatchedLeoAMEngine:
         # (q_lat·ckv + q_rope·krope == q_cat·latent), so chunk importance
         # reuses chunk_bounds_gqa_matmul with Hkv=1 unchanged.
         self.mla = cfg.mla is not None
+        if ecfg.prefix_cache:
+            bad = [k for k in cfg.layer_kinds() if not k.startswith("attn")]
+            if bad:
+                # recurrent blocks carry decode state OUTSIDE the KV store
+                # (mamba/xlstm hidden state), which a by-reference prefix
+                # adoption cannot reconstruct — warm resume would be wrong
+                raise ValueError(
+                    f"prefix_cache requires an attention-only stack; "
+                    f"'{cfg.name}' has non-attention layers {sorted(set(bad))} "
+                    f"whose recurrent decode state the shared-prefix cache "
+                    f"cannot adopt by reference")
+            C = ecfg.prefill_chunk_tokens
+            if C % self.chunk or ecfg.max_len % C:
+                raise ValueError(
+                    f"prefix_cache admissions run chunked prefill: "
+                    f"prefill_chunk_tokens={C} must be a multiple of the "
+                    f"store chunk ({self.chunk}) and divide max_len "
+                    f"({ecfg.max_len})")
         if self.mla:
             self.lat_dim = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
             kv_heads, kv_dim = 1, self.lat_dim
@@ -392,6 +422,8 @@ class BatchedLeoAMEngine:
             use_pool=ecfg.pooled, pool_slots=device_chunk_budget,
             real_codec=ecfg.real_codec, disk_sidecar=ecfg.disk_sidecar,
             sidecar_lossless=ecfg.sidecar_lossless, latent=self.mla,
+            prefix_rows=(max(1, ecfg.prefix_arena_rows)
+                         if ecfg.prefix_cache else 0),
             debug_sync=ecfg.debug_sync)
         self.seqs: Dict[int, _SeqState] = {}
         self._free: List[int] = list(range(max_seqs - 1, -1, -1))
@@ -477,6 +509,17 @@ class BatchedLeoAMEngine:
     @worker_thread
     def _admit(self, sid: int, tokens: np.ndarray, *,
                pool_place: bool) -> Tuple[int, int]:
+        if self.ecfg.prefix_cache:
+            # content-addressable admission always runs the chunked-prefill
+            # path: a warm prefix loads the shared span's KV straight into
+            # the cache and prefill resumes at the cold suffix — whole-
+            # prompt prefill has no way to skip the matched span
+            adm = ChunkedAdmission(self, sid, np.asarray(tokens),
+                                   self.ecfg.prefill_chunk_tokens,
+                                   pool_place=pool_place)
+            while not adm.done:
+                adm._step_impl()
+            return adm.result
         cfg, ecfg = self.cfg, self.ecfg
         S = len(tokens)
         t0 = time.perf_counter()
@@ -773,7 +816,8 @@ class BatchedLeoAMEngine:
                 prev = [int(c) for c in
                         self.seqs[sid].access.hot_tokens(self.ecfg.hot_frac)]
             pred[sid] = [c for c in prev if c < nv]
-            tiers = self.store.tier[sid, li]
+            tiers = self.store.tier_view(sid, li) \
+                if self.ecfg.prefix_cache else self.store.tier[sid, li]
             if not any_disk and any(tiers[c] == DISK for c in pred[sid]):
                 any_disk = True
         if not any_disk:
@@ -1118,6 +1162,23 @@ class ChunkedAdmission:
         self._t0 = time.perf_counter()
         self._prefill_s = 0.0
         self._ingest_s = 0.0
+        self._hit_tokens = 0
+        if engine.ecfg.prefix_cache:
+            # content-addressable fast path: adopt the matched chunk span
+            # by reference, replay its fidelity rows into the cache, and
+            # resume prefill at the cold suffix.  The last prompt chunk is
+            # ALWAYS recomputed — the first token's logits need a forward
+            # pass — and its recomputed KV is dropped by ingest for
+            # adopted chunks, never shadowing the shared bytes.
+            hit = engine.store.prefix_admit(sid, self.tokens)
+            self._hit_tokens = int(hit)
+            resume = min((hit // self.C) * self.C,
+                         ((self.S - 1) // self.C) * self.C)
+            if resume > 0:
+                rows = engine.store.prefix_fill_rows(sid, resume)
+                self.cache = lm.load_prefix_rows(engine.cfg, self.cache,
+                                                 rows, resume)
+                self.pos = resume
 
     @property
     def done(self) -> bool:
@@ -1138,7 +1199,14 @@ class ChunkedAdmission:
 
     @decode_thread_only
     def step(self) -> int:
-        """Advance one chunk; returns prompt tokens consumed (0 if done)."""
+        """Advance one chunk; returns prompt tokens consumed (0 if done).
+        Thin decode-thread wrapper over :meth:`_step_impl` — the prefix-
+        cache admission worker drives ``_step_impl`` directly (the store
+        calls it makes are all lock-protected ``@any_thread``/worker
+        paths, and ``pool_place=False`` defers pool mutation)."""
+        return self._step_impl()
+
+    def _step_impl(self) -> int:
         if self.done:
             return 0
         eng, C = self.engine, self.C
@@ -1180,11 +1248,19 @@ class ChunkedAdmission:
         cache_np = jax.tree.map(np.asarray, self.cache)
         eng.seqs[self.sid] = _SeqState(cache=cache_np, length=self.S,
                                        access=AccessTable(eng.n_chunks))
+        if eng.ecfg.prefix_cache:
+            # publish the chunks this admission registered ONLY after the
+            # write-behind cold writes land: adopters read the arena row's
+            # disk replica, so publish-before-fence would expose
+            # half-written bytes
+            eng.store.ingest_fence(self.sid)
+            eng.store.finish_admission(self.sid)
         eng.admit_profiles.append({
             "total_s": time.perf_counter() - self._t0,
             "prefill_s": self._prefill_s, "ingest_s": self._ingest_s,
             "overlapped": float(eng._ingest_exec is not None),
-            "chunked": 1.0, "chunks": float(self.n_steps)})
+            "chunked": 1.0, "chunks": float(self.n_steps),
+            "prefix_hit_tokens": float(self._hit_tokens)})
         self.result = (self.sid, tok)
 
     def drain(self) -> Tuple[int, int]:

@@ -49,6 +49,24 @@ Batched round support:
   figure); decode appends invalidate the touched chunk's sidecar (its
   per-chunk scales would be stale), falling back to the lossless fp16
   replica, which also serves all reads when ``sidecar_lossless=True``;
+* **content-addressable shared-prefix cache** (``prefix_rows > 0``):
+  chunk-aligned token prefixes are chain-hashed at admission
+  (``prefix_admit``) and matched against a refcounted index of published
+  chunks living in ARENA ROWS — extra pseudo-sequence rows appended to
+  every per-sequence array (disk replica + sidecar, host copies, device
+  pool slots, abstracts).  A hit is adopted BY REFERENCE: zero bytes move
+  (billed as zero-byte ``prefix_ref`` ops), every read path resolves
+  (seq, chunk) → arena row via ``_phys``, promotions of a shared chunk
+  are deduplicated per arena key and billed once (``kv_shared``) to the
+  triggering sequence, and the first decode append into a shared chunk
+  privatizes it copy-on-write (one ``cow_read`` + ``cow_copy`` chunk copy
+  per layer) so still-shared readers keep their bytes bit-for-bit.
+  Missed chunks register by REDIRECT: ingest writes them straight into a
+  planned arena row (no second copy), captures pre-quantization fidelity
+  rows for bitwise warm resume, and ``finish_admission`` publishes the
+  index entries only after the ingest fence so adopters can never read a
+  half-written replica.  Refcounts gate arena eviction: a zero-ref row is
+  warm cache, reclaimed LRU only when a new registration needs a row;
 * per-sequence ``TrafficLog`` mirrors: every byte recorded in the shared
   ``log`` is also attributed to its sequence (retired sequences' logs move
   to ``retired_logs`` so reused slots audit fresh), and benchmarks assert
@@ -83,7 +101,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression
+from repro.core.tiers import shared_prefix_savings
 from repro.serving import sanitizer as _san
+from repro.serving.prefix import PrefixIndex, chunk_hashes
 from repro.serving.sanitizer import (any_thread, decode_thread_only,
                                      worker_thread)
 
@@ -307,13 +327,18 @@ class TieredKVStore:
                  use_pool: bool = False, pool_slots: Optional[int] = None,
                  real_codec: bool = False, disk_sidecar: bool = False,
                  sidecar_lossless: bool = False, latent: bool = False,
-                 debug_sync: bool = False):
+                 prefix_rows: int = 0, debug_sync: bool = False):
         # sync-sanitizer: refcounted enable so overlapping debug stores
         # compose; locks get wrapped in TrackedLock further down
         self.debug_sync = bool(debug_sync)
         if self.debug_sync:
             _san.enable()
         self.n_seqs = n_seqs
+        # arena rows for the content-addressable shared-prefix cache sit
+        # AFTER the real sequence rows in every per-seq array; ``rows`` is
+        # the physical row count everywhere below
+        self.prefix_rows = prefix_rows
+        rows = n_seqs + prefix_rows
         self.n_layers, self.n_chunks, self.chunk = n_layers, n_chunks, chunk
         self.kv_heads, self.head_dim = kv_heads, head_dim
         # latent (absorbed-MLA) layout: one storage plane of concat(ckv,
@@ -328,9 +353,9 @@ class TieredKVStore:
         self.disk_sidecar = disk_sidecar and transit_codec is not None
         self.sidecar_lossless = sidecar_lossless
         self.device_budget = device_budget
-        self.tier: np.ndarray = np.full((n_seqs, n_layers, n_chunks), HOST,
+        self.tier: np.ndarray = np.full((rows, n_layers, n_chunks), HOST,
                                         object)
-        self.access: np.ndarray = np.zeros((n_seqs, n_layers, n_chunks))
+        self.access: np.ndarray = np.zeros((rows, n_layers, n_chunks))
         self.log = TrafficLog()
         self.seq_logs: Dict[int, TrafficLog] = defaultdict(TrafficLog)
         self.retired_logs: List[TrafficLog] = []
@@ -344,7 +369,7 @@ class TieredKVStore:
         self._lru: "OrderedDict[Key, None]" = OrderedDict()
         # persistent stacked abstracts: one (n_seqs, n_chunks, Hkv, hd)
         # fancy-index per (layer, round) instead of a per-seq Python loop
-        self._abs_km = np.full((n_seqs, n_layers, n_chunks, kv_heads,
+        self._abs_km = np.full((rows, n_layers, n_chunks, kv_heads,
                                 head_dim), -np.inf, np.float32)
         self._abs_kn = np.full_like(self._abs_km, np.inf)
         self._lock = threading.RLock()
@@ -360,7 +385,7 @@ class TieredKVStore:
             self.pools = [DeviceChunkPool(slots, chunk, kv_heads, head_dim,
                                           self.dtype, planes=self.planes)
                           for _ in range(n_layers)]
-        shape = (n_seqs, n_layers, n_chunks, self.planes, chunk, kv_heads,
+        shape = (rows, n_layers, n_chunks, self.planes, chunk, kv_heads,
                  head_dim)
         self._root = root or tempfile.mkdtemp(prefix="leoam_kv_")
         self._disk = np.memmap(os.path.join(self._root, "kv.bin"),
@@ -370,17 +395,17 @@ class TieredKVStore:
         # _sidecar_valid gates reads: decode appends invalidate the chunk
         # (its scales go stale) and the fp16 replica serves as fallback.
         self._disk_q = self._disk_scale = None
-        self._sidecar_valid = np.zeros((n_seqs, n_layers, n_chunks), bool)
+        self._sidecar_valid = np.zeros((rows, n_layers, n_chunks), bool)
         if self.disk_sidecar:
             d = kv_heads * head_dim
             dq = compression.packed_dim(transit_codec, d)
             self._disk_q = np.memmap(
                 os.path.join(self._root, "kv_q.bin"), dtype=np.int8,
-                mode="w+", shape=(n_seqs, n_layers, n_chunks, self.planes,
+                mode="w+", shape=(rows, n_layers, n_chunks, self.planes,
                                   chunk, dq))
             self._disk_scale = np.memmap(
                 os.path.join(self._root, "kv_scale.bin"), dtype=np.float32,
-                mode="w+", shape=(n_seqs, n_layers, n_chunks, self.planes, d))
+                mode="w+", shape=(rows, n_layers, n_chunks, self.planes, d))
         # write-behind ingest: per-seq in-flight cold-write futures; the
         # fence pops under _futs_lock and waits OUTSIDE the store lock
         # (workers need the store lock to land their writes)
@@ -400,6 +425,23 @@ class TieredKVStore:
         self._requant_futs: List = []
         self._sweep_round = 0
         self.sidecar_repacks = 0
+        # content-addressable shared-prefix cache: index + refcounts over
+        # arena rows n_seqs..rows-1 (PrefixIndex is pure bookkeeping; all
+        # calls are serialized under _lock).  _shared_map resolves
+        # (seq, chunk) → arena row; _reg_plan tracks in-flight
+        # registrations (chunk → hash) pending publish; _fidelity keeps
+        # the registrant's pre-quantization cache rows per (arena row,
+        # layer, chunk) so warm resumes are bitwise-identical to cold.
+        self._prefix = PrefixIndex(range(n_seqs, rows)) if prefix_rows \
+            else None
+        self._shared_map: Dict[int, Dict[int, int]] = {}
+        self._reg_plan: Dict[int, Dict[int, bytes]] = {}
+        self._fidelity: Dict[Tuple[int, int, int],
+                             Tuple[np.ndarray, np.ndarray]] = {}
+        self.bytes_deduped = 0.0
+        self.cow_copies = 0
+        self.warm_admissions = 0
+        self.prefix_admissions = 0
 
     # ------------------------------------------------------------------
     @property
@@ -520,21 +562,41 @@ class TieredKVStore:
         c0 = start // self.chunk
         with self._lock:
             S = k.shape[0]
-            to_pool: List[Tuple[int, np.ndarray, np.ndarray]] = []
-            cids: List[int] = []
-            kcs: List[np.ndarray] = []
-            vcs: List[np.ndarray] = []
+            shared = self._shared_map.get(seq) or {}
+            plan = self._reg_plan.get(seq) or {}
+            to_pool: Dict[int, List[Tuple[int, np.ndarray, np.ndarray]]] = {}
+            # chunks group by their storage row: ``seq`` itself for private
+            # chunks, the planned arena row for registering chunks — the
+            # registration writes land directly in the arena (no second
+            # copy, ever); chunks adopted by reference are SKIPPED (every
+            # tier already holds them under their arena row, and the
+            # recomputed-suffix KV must never shadow the shared bytes)
+            groups: Dict[int, Tuple[List[int], List[np.ndarray],
+                                    List[np.ndarray]]] = {}
             for j in range(min(self.n_chunks - c0,
                                (S + self.chunk - 1) // self.chunk)):
                 c = c0 + j
-                kc = k[j * self.chunk: (j + 1) * self.chunk].astype(self.dtype)
-                vc = kc if self.planes == 1 else \
-                    v[j * self.chunk: (j + 1) * self.chunk].astype(self.dtype)
-                if kc.shape[0] < self.chunk:
-                    pad = self.chunk - kc.shape[0]
-                    kc = np.pad(kc, ((0, pad), (0, 0), (0, 0)))
-                    vc = kc if self.planes == 1 else \
-                        np.pad(vc, ((0, pad), (0, 0), (0, 0)))
+                if c in shared and c not in plan:
+                    continue
+                row = shared.get(c, seq)
+                kr = k[j * self.chunk: (j + 1) * self.chunk]
+                vr = kr if self.planes == 1 else \
+                    v[j * self.chunk: (j + 1) * self.chunk]
+                if kr.shape[0] < self.chunk:
+                    pad = self.chunk - kr.shape[0]
+                    kr = np.pad(kr, ((0, pad), (0, 0), (0, 0)))
+                    vr = kr if self.planes == 1 else \
+                        np.pad(vr, ((0, pad), (0, 0), (0, 0)))
+                kc = kr.astype(self.dtype)
+                vc = kc if self.planes == 1 else vr.astype(self.dtype)
+                if c in plan:
+                    # capture the pre-quantization rows: a warm adopter
+                    # replays them into its cache, bitwise equal to the
+                    # cold prefill it skips
+                    fk = np.array(kr)
+                    self._fidelity[(row, layer, c)] = \
+                        (fk, fk if self.planes == 1 else np.array(vr))
+                cids, kcs, vcs = groups.setdefault(row, ([], [], []))
                 cids.append(c)
                 kcs.append(kc)
                 vcs.append(vc)
@@ -544,38 +606,44 @@ class TieredKVStore:
                     # decode thread reads the slab outside the lock: queue
                     # the placement; the next pooled fetch folds it in
                     # unbilled (device-produced KV, same as _pool_place)
-                    self.pools[layer].pending_place[(seq, c)] = \
+                    self.pools[layer].pending_place[(row, c)] = \
                         self._plane_stack(kc, vc)
                     where = HOST
-                self.tier[seq, layer, c] = where
-                key = (seq, layer, c)
+                self.tier[row, layer, c] = where
+                key = (row, layer, c)
                 if where in (HOST, DEVICE):
                     self._host_k[key], self._host_v[key] = kc, vc
                 if where == DEVICE:
                     if self.use_pool:
-                        to_pool.append((c, kc, vc))
+                        to_pool.setdefault(row, []).append((c, kc, vc))
                     else:
                         self._promote_device(key, kc, vc)
-            if to_pool:
+            for row, items in to_pool.items():
                 # leolint: waive[locklint,threadlint] reason=serial-path only: to_pool fills only when pool_place=True, which async admission never passes (workers defer via pending_place); here the decode thread is the caller
-                self._pool_place(layer, seq, to_pool)
-        if not cids:
+                self._pool_place(layer, row, items)
+        if not groups:
             return
-        ks = np.stack(kcs)
-        vs = ks if self.planes == 1 else np.stack(vcs)
-        if executor is None:
-            self._ingest_cold(layer, seq, cids, ks, vs)
-        else:
-            fut = executor.submit(self._ingest_cold, layer, seq, cids, ks, vs)
-            with self._futs_lock:
-                self._ingest_futs[seq].append(fut)
+        for row, (cids, kcs, vcs) in groups.items():
+            ks = np.stack(kcs)
+            vs = ks if self.planes == 1 else np.stack(vcs)
+            if executor is None:
+                self._ingest_cold(layer, row, cids, ks, vs, bill_seq=seq)
+            else:
+                fut = executor.submit(self._ingest_cold, layer, row, cids,
+                                      ks, vs, seq)
+                with self._futs_lock:
+                    self._ingest_futs[seq].append(fut)
 
     @worker_thread
     def _ingest_cold(self, layer: int, seq: int, cids: List[int],
-                     kcs: np.ndarray, vcs: np.ndarray) -> None:
+                     kcs: np.ndarray, vcs: np.ndarray,
+                     bill_seq: Optional[int] = None) -> None:
         """The write-behind half of :meth:`ingest`: fp16 replica + packed
         sidecar + abstract writes, with their billing.  kcs/vcs: (n, chunk,
-        Hkv, hd) in store dtype, rows matching ``cids``."""
+        Hkv, hd) in store dtype, rows matching ``cids``.  ``seq`` is the
+        STORAGE row (an arena row when a registration redirects);
+        ``bill_seq`` attributes the traffic to the logical sequence."""
+        bill = seq if bill_seq is None else bill_seq
         packed = None
         if self.disk_sidecar:
             # quantize OUTSIDE the lock (pure compute on private arrays) —
@@ -600,8 +668,9 @@ class TieredKVStore:
                 self._sidecar_valid[seq, layer, idx] = True
                 rep_bytes = self._packed_bytes()
             for _c in cids:
-                self._record(seq, HOST, DISK, "kv_replica", rep_bytes)
-                self._record(seq, HOST, DISK, "abstract", self.abstract_bytes)
+                self._record(bill, HOST, DISK, "kv_replica", rep_bytes)
+                self._record(bill, HOST, DISK, "abstract",
+                             self.abstract_bytes)
 
     @any_thread
     def ingest_fence(self, seq: int) -> None:
@@ -640,17 +709,236 @@ class TieredKVStore:
                                           for _, kc, vc in items])))
 
     # ------------------------------------------------------------------
+    # Content-addressable shared-prefix cache (cross-request KV reuse)
+    # ------------------------------------------------------------------
+    def _phys(self, seq: int, c: int) -> int:
+        """Resolve the storage row of (seq, chunk): chunks adopted by
+        reference live in a shared arena row; everything else in place."""
+        m = self._shared_map.get(seq)
+        if m is None:
+            return seq
+        return m.get(c, seq)
+
+    @any_thread
+    def tier_view(self, seq: int, layer: int) -> np.ndarray:
+        """Sequence-logical tier row with shared chunks resolved to their
+        arena row's tier (the engine's prefetch planner reads this)."""
+        with self._lock:
+            t = np.array(self.tier[seq, layer], copy=True)
+            m = self._shared_map.get(seq)
+            if m:
+                for c, row in m.items():
+                    t[c] = self.tier[row, layer, c]
+            return t
+
+    @any_thread
+    def prefix_probe(self, tokens) -> Dict[str, int]:
+        """Read-only warm-span prediction (scheduler admission credit):
+        how many chunks of ``tokens`` are adoptable right now, and how
+        many of those already sit in the device pool.  Does not touch
+        refcounts or skew the hit-rate counters."""
+        if self._prefix is None:
+            return {"hit_chunks": 0, "hit_tokens": 0, "device_hits": 0}
+        hashes = chunk_hashes(np.asarray(tokens), self.chunk)
+        with self._lock:
+            matched = self._prefix.match(hashes, record=False)
+            pool = self.pools[0]
+            dev = sum(1 for row, c in matched
+                      if pool is not None and (row, c) in pool.slot_of)
+            ht = len(tokens) if len(matched) == len(hashes) \
+                else len(matched) * self.chunk
+            return {"hit_chunks": len(matched), "hit_tokens": int(ht),
+                    "device_hits": int(dev)}
+
+    @any_thread
+    def prefix_admit(self, seq: int, tokens) -> int:
+        """Content-addressable admission for ``seq``'s prompt.
+
+        Matches the chunk-aligned (chain-hashed) prefix against the
+        shared index and adopts every hit BY REFERENCE: a refcount per
+        (arena row, chunk), zero bytes moved — billed as zero-byte
+        ``prefix_ref`` ops so the ledger shows the op without inventing
+        traffic.  Missed chunks are planned for registration into an
+        arena row: ingest redirects their writes straight into that row
+        (no second copy) and :meth:`finish_admission` publishes them.
+        Returns the number of prompt tokens covered by adopted chunks
+        (the engine resumes chunked prefill at the cold suffix)."""
+        if self._prefix is None:
+            return 0
+        toks = np.asarray(tokens)
+        hashes = chunk_hashes(toks, self.chunk)
+        with self._lock:
+            matched = self._prefix.match(hashes)
+            mapping = {c: row for c, (row, _rc) in enumerate(matched)}
+            self._prefix.acquire(matched)
+            for _ in mapping:
+                self._record(seq, HOST, DISK, "prefix_ref", 0.0)
+            self.bytes_deduped += shared_prefix_savings(
+                len(mapping), self.n_layers, self.chunk_bytes,
+                self.abstract_bytes)
+            miss = list(range(len(matched), len(hashes)))
+            if miss:
+                got = self._prefix.alloc_row()
+                if got is not None:       # None: every arena row is pinned
+                    row, scrub = got
+                    if scrub:
+                        self._scrub_row(row, scrub)
+                    self._prefix.plan(row, miss)
+                    self._prefix.acquire([(row, c) for c in miss])
+                    for c in miss:
+                        mapping[c] = row
+                    self._reg_plan[seq] = {c: hashes[c] for c in miss}
+            if mapping:
+                self._shared_map[seq] = mapping
+            self.prefix_admissions += 1
+            if matched:
+                self.warm_admissions += 1
+            return len(toks) if len(matched) == len(hashes) \
+                else len(matched) * self.chunk
+
+    @any_thread
+    def finish_admission(self, seq: int) -> None:
+        """Publish the chunks ``seq`` registered, making them adoptable.
+
+        MUST be ordered after :meth:`ingest_fence` — adopters read the
+        arena row's disk replica, which is only guaranteed written once
+        the write-behind ingest has landed.  Losing a publish race (a
+        concurrent registration of identical content landed first) is
+        benign: the row stays private to this sequence and is reclaimed
+        once released."""
+        with self._lock:
+            plan = self._reg_plan.pop(seq, None)
+            if not plan or self._prefix is None:
+                return
+            mapping = self._shared_map.get(seq, {})
+            for c, h in plan.items():
+                row = mapping.get(c)
+                if row is not None and row >= self.n_seqs:
+                    self._prefix.publish(row, c, h)
+
+    @any_thread
+    def prefix_fill_rows(self, seq: int, n_tokens: int
+                         ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Assemble the adopted span's KV rows for the warm cache fill.
+
+        One (k_rows, v_rows) pair per layer, each (n_tokens, Hkv, hd) in
+        the ORIGINAL cache dtype: registration captured the registrant's
+        pre-quantization rows precisely so a warm resume is bitwise
+        identical to the cold chunked prefill it skips.  ``n_tokens``
+        must be chunk-aligned and inside the adopted span."""
+        assert n_tokens % self.chunk == 0, (n_tokens, self.chunk)
+        nc = n_tokens // self.chunk
+        with self._lock:
+            mapping = self._shared_map.get(seq, {})
+            out: List[Tuple[np.ndarray, np.ndarray]] = []
+            for layer in range(self.n_layers):
+                ks, vs = [], []
+                for c in range(nc):
+                    fk, fv = self._fidelity[(mapping[c], layer, c)]
+                    ks.append(fk)
+                    vs.append(fv)
+                out.append((np.concatenate(ks), np.concatenate(vs)))
+            return out
+
+    def _scrub_row(self, row: int, cs: Sequence[int]) -> None:
+        """Reclaim an evicted arena row's residue across every tier view
+        (host copies, legacy device dicts, pool slots, fidelity rows,
+        abstracts, sidecar validity) before a new registration reuses it.
+        Caller holds ``_lock``.  Disk bytes need no scrub: the new
+        registration overwrites every chunk it publishes."""
+        for layer in range(self.n_layers):
+            pool = self.pools[layer]
+            for c in cs:
+                key = (row, layer, c)
+                self._host_k.pop(key, None)
+                self._host_v.pop(key, None)
+                self._dev_k.pop(key, None)
+                self._dev_v.pop(key, None)
+                self._lru.pop(key, None)
+                self._fidelity.pop(key, None)
+                if pool is not None:
+                    pool.evict((row, c))
+                self.tier[row, layer, c] = HOST
+                self._sidecar_valid[row, layer, c] = False
+                self._abs_km[row, layer, c] = -np.inf
+                self._abs_kn[row, layer, c] = np.inf
+                self._requant_pending.pop(key, None)
+                if key in self._chunk_version:
+                    self._chunk_version[key] += 1
+
+    def _cow(self, seq: int, c: int) -> None:
+        """Copy-on-write: privatize a shared chunk ``seq`` is about to
+        append into.  Copies the arena row's payload (disk replica,
+        sidecar, abstracts, host copy) into the sequence's own row and
+        drops the reference — exactly one chunk copy per layer, billed
+        as ``cow_read`` (disk→host) + ``cow_copy`` (host→disk).  The
+        arena chunk itself is untouched: still-shared readers keep their
+        bytes bit-for-bit.  Caller holds ``_lock``."""
+        mapping = self._shared_map.get(seq)
+        if not mapping or c not in mapping:
+            return
+        row = mapping.pop(c)
+        if not mapping:
+            self._shared_map.pop(seq, None)
+        cb = float(self.chunk_bytes)
+        for layer in range(self.n_layers):
+            self._record(seq, DISK, HOST, "cow_read", cb)
+            self._disk[seq, layer, c] = self._disk[row, layer, c]
+            self._abs_km[seq, layer, c] = self._abs_km[row, layer, c]
+            self._abs_kn[seq, layer, c] = self._abs_kn[row, layer, c]
+            if self.disk_sidecar:
+                self._disk_q[seq, layer, c] = self._disk_q[row, layer, c]
+                self._disk_scale[seq, layer, c] = \
+                    self._disk_scale[row, layer, c]
+                self._sidecar_valid[seq, layer, c] = \
+                    self._sidecar_valid[row, layer, c]
+            src = (row, layer, c)
+            dst = (seq, layer, c)
+            if src in self._host_k:
+                self._host_k[dst] = np.array(self._host_k[src])
+                self._host_v[dst] = self._host_k[dst] if self.planes == 1 \
+                    else np.array(self._host_v[src])
+                self.tier[seq, layer, c] = HOST
+            else:
+                self.tier[seq, layer, c] = DISK
+            self._record(seq, HOST, DISK, "cow_copy", cb)
+        if self._prefix is not None:
+            self._prefix.decref([(row, c)])
+        self.cow_copies += 1
+
+    def prefix_stats(self) -> Dict[str, float]:
+        """Cross-request reuse counters (merged into scheduler stats)."""
+        if self._prefix is None:
+            return {}
+        with self._lock:
+            px = self._prefix
+            total = px.hit_chunks + px.miss_chunks
+            return {"prefix_hit_rate": px.hit_chunks / max(1, total),
+                    "prefix_hit_chunks": float(px.hit_chunks),
+                    "prefix_miss_chunks": float(px.miss_chunks),
+                    "prefix_lookups": float(px.lookups),
+                    "shared_chunks": float(px.shared_chunks()),
+                    "shared_refs": float(px.live_refs()),
+                    "bytes_deduped": float(self.bytes_deduped),
+                    "cow_copies": float(self.cow_copies),
+                    "warm_admissions": float(self.warm_admissions),
+                    "prefix_admissions": float(self.prefix_admissions),
+                    "arena_evictions": float(px.evicted_rows)}
+
+    # ------------------------------------------------------------------
     def read_abstracts(self, layer: int, chunks: Sequence[int], *,
                        seq: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         """LKA: fetch (kmax, kmin) for chunks; disk chunks cost abstract I/O."""
         with self._lock:
             idx = np.asarray(list(chunks), np.int64)
-            for c in idx:
-                if self.tier[seq, layer, c] == DISK:
+            rows = np.asarray([self._phys(seq, int(c)) for c in idx],
+                              np.int64)
+            for r, c in zip(rows, idx):
+                if self.tier[r, layer, c] == DISK:
                     self._record(seq, DISK, HOST, "abstract",
                                  self.abstract_bytes)
-            return (self._abs_km[seq, layer, idx].copy(),
-                    self._abs_kn[seq, layer, idx].copy())
+            return (self._abs_km[rows, layer, idx].copy(),
+                    self._abs_kn[rows, layer, idx].copy())
 
     @any_thread
     def read_abstracts_batch(self, layer: int,
@@ -670,10 +958,16 @@ class TieredKVStore:
             billed: Dict[int, float] = {}
             for i, (seq, chunks) in enumerate(chunks_by_seq.items()):
                 idx = np.asarray(list(chunks), np.int64)
-                km[i, :len(idx)] = self._abs_km[seq, layer, idx]
-                kn[i, :len(idx)] = self._abs_kn[seq, layer, idx]
+                # shared chunks read the arena row's abstract (computed
+                # once by the registrant); private sequences keep the
+                # scalar-row fancy-index fast path
+                m = self._shared_map.get(seq)
+                rows = seq if m is None else np.asarray(
+                    [m.get(int(c), seq) for c in idx], np.int64)
+                km[i, :len(idx)] = self._abs_km[rows, layer, idx]
+                kn[i, :len(idx)] = self._abs_kn[rows, layer, idx]
                 n_disk = int(np.count_nonzero(
-                    self.tier[seq, layer, idx] == DISK))
+                    self.tier[rows, layer, idx] == DISK))
                 for _ in range(n_disk):
                     self._record(seq, DISK, HOST, "abstract",
                                  self.abstract_bytes)
@@ -709,29 +1003,38 @@ class TieredKVStore:
         with self._lock:
             ks, vs = [], []
             for c in chunks:
-                key = (seq, layer, c)
+                p = self._phys(seq, c)
+                key = (p, layer, c)
                 self.access[seq, layer, c] += 1
                 if key in self._dev_k:
                     self._touch(key)
                     ks.append(self._dev_k[key])
                     vs.append(self._dev_v[key])
                     continue
-                if self.tier[seq, layer, c] == DISK or key not in self._host_k:
-                    if self._sidecar_ok(seq, layer, c):
+                if self.tier[p, layer, c] == DISK or key not in self._host_k:
+                    if self._sidecar_ok(p, layer, c):
                         # leolint: waive[locklint] reason=decode-thread fetch path: sidecar dequant under the short fetch critical section is the accepted PR-2 design (tier tables must not move mid-fetch)
-                        kv = self._read_sidecar(layer, [(seq, c)])[0]
+                        kv = self._read_sidecar(layer, [(p, c)])[0]
                         kc, vc = kv[0], kv[-1]
                         nb = self._packed_bytes()
                     else:
-                        kc = np.asarray(self._disk[seq, layer, c, 0])
+                        kc = np.asarray(self._disk[p, layer, c, 0])
                         vc = kc if self.planes == 1 else \
-                            np.asarray(self._disk[seq, layer, c, 1])
+                            np.asarray(self._disk[p, layer, c, 1])
                         nb = (self._disk_read_bytes() if self.disk_sidecar
                               else self._transit_bytes())
-                    self._record(seq, DISK, HOST, "kv", nb)
+                    if p != seq:
+                        self._record(seq, DISK, HOST, "kv_shared", nb)
+                    else:
+                        self._record(seq, DISK, HOST, "kv", nb)
                     self._host_k[key], self._host_v[key] = kc, vc
                 kc, vc = self._host_k[key], self._host_v[key]
-                self._record(seq, HOST, DEVICE, "kv", self._transit_bytes())
+                if p != seq:
+                    self._record(seq, HOST, DEVICE, "kv_shared",
+                                 self._transit_bytes())
+                else:
+                    self._record(seq, HOST, DEVICE, "kv",
+                                 self._transit_bytes())
                 if to_device:
                     self._promote_device(key, kc, vc)
                 ks.append(kc)
@@ -777,7 +1080,8 @@ class TieredKVStore:
             vg = kg if self.planes == 1 else np.zeros_like(kg)
             for i, (seq, chunks) in enumerate(items):
                 for j, c in enumerate(chunks):
-                    key = (seq, layer, c)
+                    p = self._phys(seq, c)
+                    key = (p, layer, c)
                     self.access[seq, layer, c] += 1
                     if key in self._dev_k:
                         self._touch(key)
@@ -785,8 +1089,16 @@ class TieredKVStore:
                         if self.planes == 2:
                             vg[i, j] = self._dev_v[key]
                         continue
-                    self._record(seq, HOST, DEVICE, "kv",
-                                 self._transit_bytes())
+                    # the legacy path assembles a host-side stack per
+                    # sequence, so a shared chunk genuinely crosses the
+                    # link per reader — billed honestly, attributed as
+                    # kv_shared (the pooled path dedupes instead)
+                    if p != seq:
+                        self._record(seq, HOST, DEVICE, "kv_shared",
+                                     self._transit_bytes())
+                    else:
+                        self._record(seq, HOST, DEVICE, "kv",
+                                     self._transit_bytes())
                     if to_device:
                         self._promote_device(key, self._host_k[key],
                                              self._host_v[key])
@@ -808,42 +1120,49 @@ class TieredKVStore:
         chunks need no host copy.  ``retier`` marks staged chunks HOST so a
         later fetch sees the copy instead of re-reading (and re-billing)
         the disk.  Returns (chunks read, bytes billed)."""
-        need = []
+        need: List[Tuple[int, int, int]] = []   # (billed seq, phys row, c)
         seen = set()
         for seq, c in keys:
-            key = (seq, layer, c)
+            p = self._phys(seq, c)
+            key = (p, layer, c)
             if key in seen:
-                continue
+                continue            # shared chunks dedupe on the arena key
             seen.add(key)
             if skip_pool and self.pools[layer] is not None \
-                    and (seq, c) in self.pools[layer].slot_of:
+                    and (p, c) in self.pools[layer].slot_of:
                 continue
             if not skip_pool and key in self._dev_k:
                 continue
-            if key in self._host_k and self.tier[seq, layer, c] != DISK:
+            if key in self._host_k and self.tier[p, layer, c] != DISK:
                 continue
-            need.append((seq, c))
+            need.append((seq, p, c))
         billed = 0.0
-        need_q = [kc for kc in need if self._sidecar_ok(kc[0], layer, kc[1])]
-        need_fp = [kc for kc in need if not self._sidecar_ok(kc[0], layer,
-                                                             kc[1])]
+        need_q = [e for e in need if self._sidecar_ok(e[1], layer, e[2])]
+        need_fp = [e for e in need if not self._sidecar_ok(e[1], layer,
+                                                           e[2])]
         for group in (need_fp, need_q):
             if not group:
                 continue
             per_chunk = self._packed_bytes() if group is need_q else nbytes
             if group is need_q:
-                blk = self._read_sidecar(layer, group)
+                blk = self._read_sidecar(layer,
+                                         [(p, c) for _, p, c in group])
             else:
-                sq = np.array([s for s, _ in group])
-                cq = np.array([c for _, c in group])
+                sq = np.array([p for _, p, _ in group])
+                cq = np.array([c for _, _, c in group])
                 blk = np.asarray(self._disk[sq, layer, cq])  # (n, 2, c, ...)
-            for (seq, c), kv in zip(group, blk):
-                key = (seq, layer, c)
-                self._record(seq, DISK, HOST, "kv", per_chunk)
+            for (seq, p, c), kv in zip(group, blk):
+                key = (p, layer, c)
+                if p != seq:
+                    # refcounted promotion of a shared chunk: read once
+                    # per arena key, billed to the triggering sequence
+                    self._record(seq, DISK, HOST, "kv_shared", per_chunk)
+                else:
+                    self._record(seq, DISK, HOST, "kv", per_chunk)
                 billed += per_chunk
                 self._host_k[key], self._host_v[key] = kv[0], kv[-1]
                 if retier:
-                    self.tier[seq, layer, c] = HOST
+                    self.tier[p, layer, c] = HOST
         return len(need), billed
 
     @worker_thread
@@ -904,7 +1223,8 @@ class TieredKVStore:
             st.gather_s = time.perf_counter() - t0
 
             slots = np.zeros((B, nmax), np.int32)
-            pinned = {(seq, c) for seq, chunks in items for c in chunks}
+            pinned = {(self._phys(seq, c), c)
+                      for seq, chunks in items for c in chunks}
             # fold deferred prefill placements (admission under decode)
             # into this round's slab update — unbilled, the decode thread
             # is the only pool mutator so the attend gather never races
@@ -922,31 +1242,43 @@ class TieredKVStore:
                     self.tier[key[0], layer, key[1]] = DEVICE
                     place_slots.append(slot)
                     place_kv.append(kv)
-            missing: List[Tuple[int, int, int, int]] = []   # (i, j, seq, c)
+            missing: List[Tuple[int, int, int, int, int]] = []
             for i, (seq, chunks) in enumerate(items):
                 for j, c in enumerate(chunks):
                     self.access[seq, layer, c] += 1
-                    slot = pool.lookup((seq, c))
+                    p = self._phys(seq, c)
+                    slot = pool.lookup((p, c))
                     if slot is None:
-                        missing.append((i, j, seq, c))
+                        missing.append((i, j, seq, p, c))
                     else:
                         slots[i, j] = slot
                         st.hits += 1
             t1 = time.perf_counter()
             if missing:
-                up_slots = []
-                for i, j, seq, c in missing:
-                    slot, evicted = pool.alloc((seq, c), pinned)
-                    if evicted is not None:
-                        self.tier[evicted[0], layer, evicted[1]] = HOST
+                # shared chunks dedupe here too: two sequences missing the
+                # same arena chunk allocate ONE slot and bill ONE upload
+                # (attributed to the first waiter); allocating the key
+                # twice would orphan the first slot
+                up_slots: List[int] = []
+                up_keys: List[Tuple[int, int, int]] = []  # (seq, phys, c)
+                fresh: Dict[Tuple[int, int], int] = {}
+                for i, j, seq, p, c in missing:
+                    pk = (p, c)
+                    slot = fresh.get(pk)
+                    if slot is None:
+                        slot, evicted = pool.alloc(pk, pinned)
+                        if evicted is not None:
+                            self.tier[evicted[0], layer, evicted[1]] = HOST
+                        self.tier[p, layer, c] = DEVICE
+                        fresh[pk] = slot
+                        up_slots.append(slot)
+                        up_keys.append((seq, p, c))
                     slots[i, j] = slot
-                    self.tier[seq, layer, c] = DEVICE
-                    up_slots.append(slot)
                 kv_stack = np.stack(
-                    [self._plane_stack(self._host_k[(s, layer, c)],
-                                       self._host_v[(s, layer, c)])
-                     for _, _, s, c in missing])   # (m, planes, c, Hkv, hd)
-                m = len(missing)
+                    [self._plane_stack(self._host_k[(p, layer, c)],
+                                       self._host_v[(p, layer, c)])
+                     for _, p, c in up_keys])      # (m, planes, c, Hkv, hd)
+                m = len(up_keys)
                 n_comp = 0
                 if self.real_codec:
                     n_comp = int(round(min(1.0, max(0.0, theta)) * m))
@@ -982,9 +1314,12 @@ class TieredKVStore:
                     else self._transit_bytes()
                 per_plain = float(self.chunk_bytes) if self.real_codec \
                     else self._transit_bytes()
-                for idx, (_, _, seq, _) in enumerate(missing):
+                for idx, (seq, p, _c) in enumerate(up_keys):
                     nb = per_comp if idx < n_comp else per_plain
-                    self._record(seq, HOST, DEVICE, "kv", nb)
+                    if p != seq:
+                        self._record(seq, HOST, DEVICE, "kv_shared", nb)
+                    else:
+                        self._record(seq, HOST, DEVICE, "kv", nb)
                     st.upload_bytes += nb
                 st.uploads = m
                 st.compressed = n_comp
@@ -1024,16 +1359,17 @@ class TieredKVStore:
         """Eviction is free toward disk (replicas, §4.3)."""
         with self._lock:
             for c in chunks:
-                key = (seq, layer, c)
+                p = self._phys(seq, c)
+                key = (p, layer, c)
                 self._dev_k.pop(key, None)
                 self._dev_v.pop(key, None)
                 self._lru.pop(key, None)
                 if self.pools[layer] is not None:
-                    self.pools[layer].evict((seq, c))
+                    self.pools[layer].evict((p, c))
                 if to == DISK:
                     self._host_k.pop(key, None)
                     self._host_v.pop(key, None)
-                self.tier[seq, layer, c] = to
+                self.tier[p, layer, c] = to
 
     def append_token(self, layer: int, pos: int, k_new: np.ndarray,
                      v_new: np.ndarray, *, seq: int = 0) -> None:
@@ -1056,6 +1392,12 @@ class TieredKVStore:
             sq = np.asarray(list(seqs), np.int64)
             pos = np.asarray(positions, np.int64)
             cs, offs = pos // self.chunk, pos % self.chunk
+            if self._prefix is not None:
+                # copy-on-write: the first append into a chunk held by
+                # reference privatizes it (all layers at once) before the
+                # row lands — later layers' appends find it private
+                for i in range(len(sq)):
+                    self._cow(int(sq[i]), int(cs[i]))
             kd = k_news.astype(self.dtype)
             vd = kd if self.planes == 1 else v_news.astype(self.dtype)
             self._disk[sq, layer, cs, 0, offs] = kd
@@ -1186,6 +1528,16 @@ class TieredKVStore:
         disk data needs no scrub: the next ingest overwrites every chunk it
         will read, and appended chunks are masked by pos <= length."""
         with self._lock:
+            if self._prefix is not None:
+                # drop the sequence's shared-chunk references FIRST: a
+                # zero-ref arena chunk stays warm-cached (evicted only
+                # under registration pressure), so releasing N sharers
+                # leaves the arena bytes exactly as a single owner would
+                mapping = self._shared_map.pop(seq, None)
+                if mapping:
+                    self._prefix.decref([(row, c)
+                                          for c, row in mapping.items()])
+                self._reg_plan.pop(seq, None)
             for d in (self._host_k, self._host_v, self._dev_k, self._dev_v,
                       self._lru):
                 for key in [k for k in d if k[0] == seq]:

@@ -139,6 +139,13 @@ class SchedulerCfg:
     max_round_inflation: float = 0.5   # tolerated round-time inflation
                                        # before the pacing gate closes
     ewma_alpha: float = 0.25           # round-time EWMA smoothing
+    credit_prefix: bool = True         # when the engine runs the shared-
+                                       # prefix cache, credit a request's
+                                       # predicted warm span (chunks whose
+                                       # device-pool slot already exists)
+                                       # against its device-chunk charge —
+                                       # warm requests don't re-buy slots
+                                       # their prefix already owns
 
 
 class ContinuousBatcher:
@@ -193,6 +200,10 @@ class ContinuousBatcher:
         self._chunk_steps = 0
         self._chunk_tokens: Optional[int] = None
         self._derived_budget: Optional[int] = None
+        # per-rid predicted warm-prefix device-chunk credit, frozen at
+        # first sight so a request's charge stays stable across rounds
+        # even as the shared-prefix index churns underneath it
+        self._prefix_credit: Dict[int, int] = {}
 
     @any_thread
     def submit(self, req: Request) -> None:
@@ -214,11 +225,27 @@ class ContinuousBatcher:
 
     def _need(self, req: Request) -> int:
         """Device chunks a request is charged at admission: its per-round
-        working set in pool mode, its analytic max_len worst case else."""
+        working set in pool mode, its analytic max_len worst case else.
+        With the shared-prefix cache on, chunks whose device slot the
+        warm prefix already holds are credited back (floor of 1 chunk —
+        even a full hit recomputes its last prompt chunk)."""
         if self._pool_mode():
-            return self.engine.admission_need_chunks(len(req.prompt),
+            need = self.engine.admission_need_chunks(len(req.prompt),
                                                      req.max_new)
+            need -= self._device_prefix_credit(req, need)
+            return need
         return self._chunks_needed(req)
+
+    def _device_prefix_credit(self, req: Request, need: int) -> int:
+        """Predicted warm-span device chunks, memoized per rid."""
+        store = getattr(self.engine, "store", None)
+        if (not self.cfg.credit_prefix or store is None
+                or getattr(store, "_prefix", None) is None):
+            return 0
+        if req.rid not in self._prefix_credit:
+            probe = store.prefix_probe(req.prompt)
+            self._prefix_credit[req.rid] = int(probe["device_hits"])
+        return min(self._prefix_credit[req.rid], max(need - 1, 0))
 
     def _device_chunks_used(self) -> int:
         reqs = [r for r, _, _ in self.active.values()] \
@@ -398,6 +425,7 @@ class ContinuousBatcher:
         for rid in rids:
             req, handle, _ = self.active.pop(rid)
             req.t_done = time.perf_counter()
+            self._prefix_credit.pop(rid, None)
             self.finished.append(req)
             if self.engine is not None:
                 self.engine.release(handle)
@@ -474,6 +502,9 @@ class ContinuousBatcher:
             pacing["prefill_round_tokens"] = float(self._derived_budget)
         if self._chunk_ewma is not None:
             pacing["chunk_step_ewma_s"] = float(self._chunk_ewma)
+        store = getattr(self.engine, "store", None)
+        if store is not None and hasattr(store, "prefix_stats"):
+            pacing.update(store.prefix_stats())
         done = [r for r in self.finished
                 if r.t_first is not None and r.t_done is not None]
         if not done:

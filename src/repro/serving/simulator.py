@@ -187,6 +187,28 @@ def prefill_time(cfg: ArchConfig, scfg: ServeCfg, hw: HWCfg) -> float:
     return flops / hw.gpu_flops + t_write
 
 
+def prefill_time_prefix(cfg: ArchConfig, scfg: ServeCfg, hw: HWCfg,
+                        hit_frac: float) -> float:
+    """Prefill time with a warm shared prefix covering ``hit_frac`` of the
+    prompt (the live engine's content-addressable admission path).
+
+    The warm span pays no prefill FLOPs and writes no tier bytes — its KV
+    is adopted by reference — but the GPU-resident share of the adopted
+    span must still be promoted over PCIe into the device pool.  At
+    ``hit_frac == 0`` this is exactly :func:`prefill_time`.
+    """
+    assert 0.0 <= hit_frac <= 1.0, hit_frac
+    cold = 1.0 - hit_frac
+    flops = 2 * cfg.n_active_params() * scfg.prompt * scfg.batch * cold
+    g = _layer_geometry(cfg, scfg)
+    kv_total = g["kv_bytes_tok"] * scfg.prompt * scfg.batch * g["n_attn"]
+    disk_frac = max(0.0, 1.0 - scfg.gpu_frac - scfg.cpu_frac)
+    t_write = cold * (kv_total * disk_frac / hw.disk_bw
+                      + kv_total * (1 - scfg.gpu_frac) / hw.pcie_bw)
+    t_promote = hit_frac * kv_total * scfg.gpu_frac / hw.pcie_bw
+    return flops / hw.gpu_flops + t_write + t_promote
+
+
 def simulate_request(cfg: ArchConfig, scfg: ServeCfg, hw: HWCfg,
                      policy: str) -> Dict[str, float]:
     step = simulate_decode(cfg, scfg, hw, policy)

@@ -1,0 +1,459 @@
+"""Cross-request shared-prefix cache: content-addressable admission,
+refcounts, copy-on-write, billing, and scheduler integration (ISSUE 7).
+
+The load-bearing properties:
+
+* a warm-prefix admission is TOKEN-IDENTICAL to a cold admission, under
+  randomized interleavings of admissions, decodes and releases;
+* refcounts never strand or double-free a chunk — releasing N sharers
+  leaves the arena bytes exactly as the single-owner state, and entries
+  survive as warm cache until arena pressure evicts them;
+* COW privatizes the writer's chunk while still-shared readers keep
+  their bytes bit-for-bit;
+* by-reference adoption bills ZERO transfer bytes (``prefix_ref`` ops)
+  and COW bills exactly one chunk copy per layer (``cow_copy``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving.engine import BatchedLeoAMEngine, EngineCfg
+from repro.serving.prefix import PrefixIndex, chunk_hashes
+from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerCfg
+from repro.serving.simulator import (HWCfg, ServeCfg, prefill_time,
+                                     prefill_time_prefix)
+
+CHUNK = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("longchat-7b-32k", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=CHUNK,
+                                       importance_rate=0.4, early_rate=0.6,
+                                       min_seq_for_sparse=32))
+    params = lm.init(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _engine(cfg, params, prefix_cache=True, max_seqs=3, **kw):
+    ecfg = EngineCfg(max_len=128, selection="tree",
+                     prefill_chunk_tokens=32, prefix_cache=prefix_cache,
+                     **kw)
+    return BatchedLeoAMEngine(cfg, params, ecfg, max_seqs=max_seqs)
+
+
+def _decode(eng, sid, tok, n):
+    stream = [tok]
+    cur = {sid: tok}
+    for _ in range(n):
+        cur = eng.decode_round(cur)
+        stream.append(cur[sid])
+    return stream
+
+
+# ---------------------------------------------------------------------------
+# chunk_hashes / PrefixIndex units
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_hashes_chain_commits_to_prefix():
+    rng = np.random.RandomState(0)
+    toks = rng.randint(2, 500, 64)
+    h = chunk_hashes(toks, CHUNK)
+    assert len(h) == 4
+    # same prefix -> same hashes; a change in chunk 1 changes chunks 1..3
+    other = toks.copy()
+    other[CHUNK] += 1
+    h2 = chunk_hashes(other, CHUNK)
+    assert h2[0] == h[0] and all(a != b for a, b in zip(h[1:], h2[1:]))
+    # the partial tail commits to its length: 26 tokens vs the 32-token
+    # extension disagree on chunk 1 even though the 26 tokens are shared
+    assert chunk_hashes(toks[:26], CHUNK)[1] != chunk_hashes(
+        toks[:32], CHUNK)[1]
+    # chunk granularity changes the chain entirely
+    assert chunk_hashes(toks, CHUNK)[0] != chunk_hashes(toks, 2 * CHUNK)[0]
+
+
+def test_prefix_index_match_refcounts_and_eviction():
+    px = PrefixIndex(rows=[10, 11])
+    h = [b"h%d" % i for i in range(3)]
+    row, scrub = px.alloc_row()
+    assert (row, scrub) == (10, [])
+    px.plan(row, range(3))
+    for c in range(3):
+        assert px.publish(row, c, h[c])
+    assert not px.publish(99, 0, h[0])        # first registrant wins
+    assert px.match(h) == [(10, 0), (10, 1), (10, 2)]
+    assert px.match([h[0], b"x", h[2]]) == [(10, 0)]  # stops at first miss
+    px.acquire([(10, 0)])
+    px.acquire([(10, 0)])
+    assert px.ref_count((10, 0)) == 2
+    px.decref([(10, 0)])
+    assert px.ref_count((10, 0)) == 1
+    # a pinned row is not evictable: second alloc takes the free row,
+    # third finds nothing
+    row2, _ = px.alloc_row()
+    assert row2 == 11
+    px.plan(row2, [0])
+    px.acquire([(row2, 0)])
+    assert px.alloc_row() is None
+    # dropping the last refs makes row 10 LRU-evictable; its entries go
+    px.decref([(10, 0)])
+    victim, scrub = px.alloc_row()
+    assert victim == 10 and scrub == [0, 1, 2]
+    assert px.match(h, record=False) == []
+    with pytest.raises(AssertionError):
+        px.decref([(10, 0)])                  # double-free trips
+
+
+# ---------------------------------------------------------------------------
+# warm == cold token identity under randomized interleavings
+# ---------------------------------------------------------------------------
+
+
+def _schedule(seed, n_admit=6, max_live=3):
+    """Deterministic event list: admit/decode/release with shared
+    prefixes and chunk-partial suffixes (so COW paths fire)."""
+    rng = np.random.RandomState(seed)
+    prefixes = [rng.randint(2, 500, 64) for _ in range(2)]
+    events, live, decoded, admitted = [], [], {}, 0
+    while admitted < n_admit or live:
+        roll = rng.rand()
+        if admitted < n_admit and len(live) < max_live and roll < 0.4:
+            p = np.concatenate([prefixes[rng.randint(2)],
+                                rng.randint(2, 500, rng.choice([8, 12, 16]))])
+            events.append(("admit", admitted, p))
+            live.append(admitted)
+            decoded[admitted] = 0
+            admitted += 1
+        elif live and roll < 0.75:
+            events.append(("decode",))
+            for r in live:
+                decoded[r] += 1
+        elif live:
+            full = [r for r in live if decoded[r] >= 5]
+            r = full[0] if full else live[rng.randint(len(live))]
+            events.append(("release", r))
+            live.remove(r)
+        for r in [r for r in live if decoded[r] >= 6]:
+            events.append(("release", r))
+            live.remove(r)
+    return events
+
+
+def _replay(cfg, params, events, prefix_cache):
+    eng = _engine(cfg, params, prefix_cache=prefix_cache)
+    streams, sids, cur = {}, {}, {}
+    for ev in events:
+        if ev[0] == "admit":
+            _, rid, prompt = ev
+            sid, tok = eng.add_sequence(prompt)
+            sids[rid], streams[rid], cur[sid] = sid, [tok], tok
+        elif ev[0] == "decode":
+            cur = eng.decode_round(cur)
+            for rid, sid in sids.items():
+                if sid in cur:
+                    streams[rid].append(cur[sid])
+        else:
+            sid = sids[ev[1]]
+            eng.release(sid)
+            cur.pop(sid, None)
+    stats = eng.store.prefix_stats()
+    eng.store.close()
+    return streams, stats
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_warm_admission_token_identical_to_cold(setup, seed):
+    """Property (randomized over seeds): any interleaving of admissions,
+    decode rounds and releases over shared prefixes decodes the same
+    token streams with the cache on and off."""
+    cfg, params = setup
+    events = _schedule(seed)
+    warm, stats = _replay(cfg, params, events, prefix_cache=True)
+    cold, _ = _replay(cfg, params, events, prefix_cache=False)
+    assert warm == cold, (seed, warm, cold)
+    # the schedule shares prefixes across admissions: reuse must engage
+    assert stats["prefix_hit_chunks"] > 0
+    assert stats["shared_refs"] == 0          # all released -> no strand
+
+
+# ---------------------------------------------------------------------------
+# refcounts: N sharers release -> single-owner state, no strand/double-free
+# ---------------------------------------------------------------------------
+
+
+def test_release_of_n_sharers_restores_single_owner_state(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, max_seqs=3)
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(2, cfg.vocab_size, 80)   # 5 full chunks
+    store = eng.store
+
+    # single owner: registrant only, snapshot its arena refs
+    sid0, tok0 = eng.add_sequence(prompt)
+    single_refs = dict(store._prefix.refs)
+    arena_disk = {row: np.array(store._disk[row])
+                  for m in store._shared_map.values() for row in set(m.values())}
+    streams = {sid0: _decode(eng, sid0, tok0, 2)}
+
+    # two more sharers join, then release in admission order
+    sid1, tok1 = eng.add_sequence(prompt)
+    sid2, tok2 = eng.add_sequence(prompt)
+    streams[sid1] = _decode(eng, sid1, tok1, 2)
+    streams[sid2] = _decode(eng, sid2, tok2, 2)
+    assert streams[sid1] == streams[sid0] == streams[sid2]
+    assert store._prefix.live_refs() > sum(single_refs.values())
+    eng.release(sid1)
+    eng.release(sid2)
+
+    # bytes AND refcounts are back to the single-owner state; the arena
+    # payload never moved
+    assert dict(store._prefix.refs) == single_refs
+    for row, snap in arena_disk.items():
+        np.testing.assert_array_equal(np.array(store._disk[row]), snap)
+    eng.release(sid0)
+    assert store._prefix.live_refs() == 0     # nothing stranded
+    # zero refs is CACHE, not garbage: a fresh admission is still warm
+    sid3, tok3 = eng.add_sequence(prompt)
+    assert store.prefix_stats()["warm_admissions"] >= 3
+    assert _decode(eng, sid3, tok3, 2) == streams[sid0]
+    eng.store.close()
+
+
+# ---------------------------------------------------------------------------
+# COW: writer privatizes, readers keep bytes bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_cow_preserves_shared_readers_bytes(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, max_seqs=3)
+    rng = np.random.RandomState(6)
+    prompt = rng.randint(2, cfg.vocab_size, 76)   # partial tail chunk
+    tail_c = 76 // CHUNK                          # chunk 4, 12 tokens
+    store = eng.store
+
+    sid0, tok0 = eng.add_sequence(prompt)
+    sid1, tok1 = eng.add_sequence(prompt)
+    row = store._shared_map[sid1][tail_c]
+    assert row >= store.n_seqs
+    snap = np.array(store._disk[row, :, tail_c])
+
+    # sid0's first append COWs its tail; sid1 still points at the arena
+    s0 = _decode(eng, sid0, tok0, 3)
+    assert store.cow_copies >= 1
+    assert tail_c not in store._shared_map.get(sid0, {})
+    assert store._shared_map[sid1][tail_c] == row
+    np.testing.assert_array_equal(np.array(store._disk[row, :, tail_c]),
+                                  snap)
+
+    # the surviving reader decodes on the untouched arena bytes and
+    # matches the writer's stream (identical prompts, same model)
+    s1 = _decode(eng, sid1, tok1, 3)
+    assert s1 == s0
+    np.testing.assert_array_equal(np.array(store._disk[row, :, tail_c]),
+                                  snap)
+    eng.store.close()
+
+
+# ---------------------------------------------------------------------------
+# billing: zero-byte adoption, exactly one chunk copy per COW
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_ref_bills_zero_and_cow_bills_one_chunk_copy(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, max_seqs=2)
+    rng = np.random.RandomState(7)
+    prompt = rng.randint(2, cfg.vocab_size, 76)
+    store = eng.store
+    n_layers = store.n_layers
+
+    sid0, tok0 = eng.add_sequence(prompt)
+    sid1, tok1 = eng.add_sequence(prompt)
+    adopted = len(store._shared_map[sid1])
+    assert adopted == 5                           # 4 full + the tail
+    assert store.log.ops[("host", "disk", "prefix_ref")] == adopted
+    assert store.log.bytes[("host", "disk", "prefix_ref")] == 0.0
+
+    # warm admission wrote NO disk replicas or abstracts of its own
+    replica = store.log.bytes[("host", "disk", "kv_replica")]
+    _decode(eng, sid0, tok0, 2)
+    _decode(eng, sid1, tok1, 2)
+    cow = store.cow_copies
+    assert cow >= 1
+    assert store.log.bytes[("host", "disk", "cow_copy")] == \
+        pytest.approx(cow * n_layers * float(store.chunk_bytes))
+    assert store.log.bytes[("disk", "host", "cow_read")] == \
+        pytest.approx(cow * n_layers * float(store.chunk_bytes))
+    # shared-log == sum of per-seq logs still holds with the new kinds
+    for key, v in store.log.bytes.items():
+        per_seq = sum(lg.bytes.get(key, 0.0)
+                      for lg in store.seq_logs.values())
+        assert abs(v - per_seq) < 1e-6, (key, v, per_seq)
+    assert replica == store.log.bytes[("host", "disk", "kv_replica")] \
+        or cow > 0  # only COW may add post-admission replica traffic
+    eng.store.close()
+
+
+def test_shared_chunks_occupy_one_pool_slot(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, max_seqs=2)
+    rng = np.random.RandomState(8)
+    prompt = rng.randint(2, cfg.vocab_size, 80)
+    store = eng.store
+    sid0, tok0 = eng.add_sequence(prompt)
+    sid1, tok1 = eng.add_sequence(prompt)
+    cur = {sid0: tok0, sid1: tok1}
+    for _ in range(2):
+        cur = eng.decode_round(cur)
+    # device pool slots for shared chunks are keyed by the ARENA row:
+    # neither sequence ever buys a private slot for an adopted chunk
+    for sid in (sid0, sid1):
+        mapping = store._shared_map.get(sid, {})
+        for li, pool in enumerate(store.pools):
+            if pool is None:
+                continue
+            for c in mapping:
+                assert (sid, c) not in pool.slot_of, (sid, li, c)
+    eng.store.close()
+
+
+# ---------------------------------------------------------------------------
+# arena eviction under pressure
+# ---------------------------------------------------------------------------
+
+
+def test_arena_eviction_under_pressure_stays_correct(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, max_seqs=2, prefix_arena_rows=1)
+    rng = np.random.RandomState(9)
+    pa = rng.randint(2, cfg.vocab_size, 80)
+    pb = rng.randint(2, cfg.vocab_size, 80)
+    store = eng.store
+
+    sid, tok = eng.add_sequence(pa)
+    sa = _decode(eng, sid, tok, 2)
+    # while A is live its row is pinned: B admits fully cold, unregistered
+    sidb, tokb = eng.add_sequence(pb)
+    assert sidb not in store._shared_map
+    _decode(eng, sidb, tokb, 2)
+    eng.release(sid)
+    eng.release(sidb)
+
+    # with A released, B's re-admission evicts A's row and registers
+    sidb, tokb = eng.add_sequence(pb)
+    assert store.prefix_stats()["arena_evictions"] == 1
+    _decode(eng, sidb, tokb, 2)
+    eng.release(sidb)
+
+    # A lost its entries -> cold again, but still token-identical
+    assert store.prefix_probe(pa)["hit_chunks"] == 0
+    sid, tok = eng.add_sequence(pa)
+    assert _decode(eng, sid, tok, 2) == sa
+    eng.store.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: stats surface + admission credit
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_stats_and_admission_credit(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, max_seqs=3)
+    rng = np.random.RandomState(10)
+    prompt = rng.randint(2, cfg.vocab_size, 80)
+    b = ContinuousBatcher(cfg=SchedulerCfg(max_active=2, chunk=CHUNK),
+                          engine=eng)
+    req = Request(0, prompt, max_new=4)
+    cold_need = b._need(req)
+
+    # make the prefix device-resident, then a NEW rid gets the credit
+    sid, tok = eng.add_sequence(prompt)
+    _decode(eng, sid, tok, 2)
+    eng.release(sid)
+    probe = eng.store.prefix_probe(prompt)
+    assert probe["device_hits"] > 0
+    warm_need = b._need(Request(1, prompt, max_new=4))
+    assert warm_need == max(cold_need - probe["device_hits"], 1)
+    assert warm_need < cold_need
+    # credit is frozen per rid (memoized): index churn can't flap it
+    assert b._need(Request(1, prompt, max_new=4)) == warm_need
+
+    sid, tok = eng.add_sequence(prompt)       # a warm admission
+    eng.release(sid)
+    stt = b.stats()
+    assert stt["prefix_hit_rate"] > 0
+    assert "shared_chunks" in stt and "bytes_deduped" in stt
+    eng.store.close()
+
+
+def test_scheduler_runs_requests_through_prefix_engine(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, max_seqs=3)
+    rng = np.random.RandomState(11)
+    prefix = rng.randint(2, cfg.vocab_size, 64)
+    b = ContinuousBatcher(cfg=SchedulerCfg(max_active=2, chunk=CHUNK),
+                          engine=eng)
+    for rid in range(4):
+        p = np.concatenate([prefix, rng.randint(2, cfg.vocab_size, 12)])
+        b.submit(Request(rid, p, max_new=4))
+    done = b.run()
+    assert len(done) == 4 and all(len(r.out) == 4 for r in done)
+    assert b.stats()["warm_admissions"] >= 3
+    eng.store.close()
+
+
+# ---------------------------------------------------------------------------
+# engine config gates
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_rejects_recurrent_and_bad_chunking(setup):
+    cfg, params = setup
+    xcfg = get_config("xlstm-125m", smoke=True)
+    xparams = lm.init(xcfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attention-only"):
+        BatchedLeoAMEngine(xcfg, xparams,
+                           EngineCfg(max_len=128, prefix_cache=True,
+                                     prefill_chunk_tokens=32))
+    with pytest.raises(ValueError, match="multiple"):
+        BatchedLeoAMEngine(cfg, params,
+                           EngineCfg(max_len=128, prefix_cache=True,
+                                     prefill_chunk_tokens=24))
+
+
+# ---------------------------------------------------------------------------
+# simulator: prefix-aware TTFT model
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.0, 1.0))
+def test_prefill_time_prefix_bounded_and_anchored(hit_frac):
+    cfg = get_config("longchat-7b-32k")
+    scfg, hw = ServeCfg(), HWCfg()
+    base = prefill_time(cfg, scfg, hw)
+    t = prefill_time_prefix(cfg, scfg, hw, hit_frac)
+    assert 0.0 < t <= base + 1e-12
+    assert prefill_time_prefix(cfg, scfg, hw, 0.0) == pytest.approx(base)
+
+
+def test_prefill_time_prefix_monotone_decreasing():
+    cfg = get_config("longchat-7b-32k")
+    scfg, hw = ServeCfg(), HWCfg()
+    ts = [prefill_time_prefix(cfg, scfg, hw, h)
+          for h in np.linspace(0.0, 1.0, 9)]
+    assert all(a > b for a, b in zip(ts, ts[1:]))
