@@ -58,6 +58,10 @@ COUNT_LIMITS = {
 BOUNDS = {
     "fig15/prefix/hit_rate": (">=", 0.5),
     "fig15/prefix/warm_over_cold": ("<=", 0.5),
+    # the per-chunk CRC32 integrity layer must stay in the decode noise
+    # floor (ISSUE-8 acceptance bar): checksums-on over checksums-off
+    # per-round wall-clock, best-of-2 each side (fig13_pipeline.py)
+    "fig13/checksum/overhead": ("<=", 1.10),
 }
 
 

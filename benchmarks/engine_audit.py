@@ -13,7 +13,8 @@ from repro.configs import get_config
 from repro.core.tiers import lka_transfer_ratio
 from repro.models import lm
 from repro.serving.engine import BatchedLeoAMEngine, EngineCfg, LeoAMEngine
-from repro.serving.offload import DISK
+from repro.serving.faults import FaultPlan
+from repro.serving.offload import DISK, HOST
 
 
 def run() -> None:
@@ -81,3 +82,32 @@ def run() -> None:
          f"cow_copies={ps['cow_copies']:.0f} "
          f"prefix_ref_ops={peng.store.log.ops.get(('host', 'disk', 'prefix_ref'), 0):.0f}")
     peng.store.close()
+
+    # fault-containment audit: a deterministic FaultPlan (one transient
+    # disk error + one sidecar bitflip) against the same smoke engine —
+    # the counters and the recovery billing kinds are the observable
+    # residue of the degrade paths (docs/INVARIANTS.md I6)
+    plan = FaultPlan(schedule={"disk_read": {0: "io_error"},
+                               "sidecar_read": {1: "bitflip"}})
+    feng = BatchedLeoAMEngine(
+        cfg, params, EngineCfg(max_len=256, gpu_chunk_frac=0.1,
+                               cpu_chunk_frac=0.3, selection="tree",
+                               disk_sidecar=True, fault_plan=plan),
+        max_seqs=1)
+    sid, tok = feng.add_sequence(rng.randint(2, cfg.vocab_size, 200))
+    cur = {sid: tok}
+    for _ in range(6):
+        cur = feng.decode_round(cur)
+    fs = feng.fault_stats()
+    flog = feng.store.log
+    emit("engine/faults/io_retries", fs.get("io_retries", 0.0),
+         f"injected=1io_error,plan_calls={plan.calls()}")
+    emit("engine/faults/checksum_failures",
+         fs.get("checksum_failures", 0.0),
+         f"injected=1bitflip,degraded_seqs={fs.get('degraded_seqs', 0):.0f}")
+    emit("engine/faults/chunks_recomputed",
+         fs.get("chunks_recomputed", 0.0),
+         f"recompute_bytes={flog.total(src=HOST, kind='kv_recompute'):.0f}B")
+    emit("engine/faults/seqs_failed", fs.get("seqs_failed", 0.0),
+         f"fallback_bytes={flog.total(src=DISK, kind='kv_fallback'):.0f}B")
+    feng.store.close()

@@ -134,6 +134,54 @@ def run_debug_sync_overhead() -> None:
          f"overhead={t_on / max(t_off, 1e-12):.2f}x")
 
 
+def run_checksum_overhead() -> None:
+    """Cost of the per-chunk CRC32 integrity layer (EngineCfg(checksums)):
+    per-round decode wall-clock with replica/sidecar verification live vs
+    off, same smoke engine.  The overhead ratio is a gated row
+    (check_baseline.py BOUNDS: <= 1.10x) — the integrity tax must stay
+    in the noise, or the checksum layer is doing work on the wrong path."""
+    import jax
+    from repro.models import lm
+    from repro.serving.engine import BatchedLeoAMEngine, EngineCfg
+
+    cfg = get_config("longchat-7b-32k", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                       importance_rate=0.3, early_rate=0.5,
+                                       min_seq_for_sparse=32))
+    params = lm.init(cfg, jax.random.PRNGKey(1))
+    rng = np.random.RandomState(0)
+    batch, n_new = (2, 4) if common.SMOKE else (2, 8)
+    prompts = [rng.randint(2, cfg.vocab_size, 96) for _ in range(batch)]
+
+    def round_time(checksums: bool) -> float:
+        eng = BatchedLeoAMEngine(
+            cfg, params,
+            EngineCfg(max_len=160, pooled=True, pipeline=True,
+                      disk_sidecar=True, checksums=checksums),
+            max_seqs=batch)
+        toks = {}
+        for p in prompts:
+            sid, tok = eng.add_sequence(p)
+            toks[sid] = tok
+        toks = eng.decode_round(toks)           # jit warmup round
+        t0 = time.perf_counter()
+        for _ in range(n_new):
+            toks = eng.decode_round(toks)
+        dt = (time.perf_counter() - t0) / n_new
+        eng.store.close()
+        return dt
+
+    # best-of-2 per config: the gate compares a RATIO of two short smoke
+    # timings, so shave scheduler noise off both sides before dividing
+    t_off = min(round_time(False) for _ in range(2))
+    t_on = min(round_time(True) for _ in range(2))
+    emit("fig13/checksum/off", t_off * 1e6, f"b{batch}")
+    emit("fig13/checksum/on", t_on * 1e6, f"b{batch}")
+    emit("fig13/checksum/overhead", t_on / max(t_off, 1e-12),
+         "ratio_on_over_off,gated<=1.10")
+
+
 def run_admission_ttft() -> None:
     """TTFT breakdown: prefill compute vs tier-write stall, serial vs
     write-behind overlapped ingest — the analytic ``prefill_schedule``
@@ -295,6 +343,7 @@ def run() -> None:
     run_simulated()
     run_engine_overlap()
     run_debug_sync_overhead()
+    run_checksum_overhead()
     run_admission_ttft()
     run_mixed_length()
     run_mixed_length_mla()

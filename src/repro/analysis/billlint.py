@@ -46,10 +46,17 @@ ALLOWED_KINDS = {
     # write the private one — exactly one chunk each way per layer);
     # kv_shared: a refcounted promotion of a shared chunk (same bytes as
     # "kv", attributed to the reading sequence, phys row ≠ seq row).
+    # kv_recompute: a replica rebuilt from a prompt replay after checksum
+    # rejection (same landing as "kv_replica", distinct kind so audits
+    # can separate recovery traffic from first-write traffic);
+    # kv_fallback: an fp16-replica promotion serving in place of a
+    # quarantined packed sidecar (lossless degrade — full replica bytes
+    # where the sidecar read would have been cheaper).
     ("HOST", "DISK"): {"kv_replica", "kv_append", "sidecar_repack",
-                       "abstract", "prefix_ref", "cow_copy"},
+                       "abstract", "prefix_ref", "cow_copy",
+                       "kv_recompute"},
     ("DISK", "HOST"): {"kv", "abstract", "sidecar_repack_read",
-                       "kv_shared", "cow_read"},
+                       "kv_shared", "cow_read", "kv_fallback"},
     ("HOST", "DEVICE"): {"kv", "kv_append", "abstract", "kv_shared"},
     ("DEVICE", "HOST"): {"kv", "kv_append"},
 }

@@ -106,6 +106,7 @@ from repro.core.bounds import chunk_bounds_gqa_matmul
 from repro.core.tiers import AccessTable
 from repro.models import lm
 from repro.models import attention as attn_mod
+from repro.serving.faults import AdmissionError, ChunkLostError
 from repro.serving.offload import DEVICE, DISK, HOST, TieredKVStore
 from repro.serving.sanitizer import decode_thread_only, worker_thread
 
@@ -184,6 +185,17 @@ class EngineCfg:
                                      # debugging/stress only — never for
                                      # measured runs (benchmarks/run.py
                                      # refuses)
+    checksums: bool = True           # per-chunk CRC32 on disk replicas +
+                                     # packed sidecars, verified at every
+                                     # promotion: a corrupt sidecar falls
+                                     # back to the fp16 replica, a corrupt
+                                     # replica triggers recompute-from-
+                                     # prompt (or seq-level failure)
+    fault_plan: Optional[Any] = None  # serving.faults.FaultPlan threaded
+                                     # through the store's I/O choke
+                                     # points (chaos tests only)
+    io_retries: int = 3              # bounded retry budget on transient
+    io_backoff_s: float = 1e-4       # disk errors, exponential backoff
     # measured-cost θ balance (paper §4.4); defaults mirror TierBW
     pcie_bw: float = 16e9
     disk_bw: float = 3.5e9
@@ -235,6 +247,12 @@ class _SeqState:
     length: int
     access: AccessTable
     stats: List[StepStats] = field(default_factory=list)
+    tokens: Optional[np.ndarray] = None  # prompt tokens (recompute source
+                                     # for disk-lost prompt-span chunks)
+    prompt_len: int = 0              # tokens covered by the prompt — only
+                                     # chunks entirely within this span
+                                     # are recomputable (decode appends
+                                     # exist nowhere but the lost replica)
 
 
 def _attend_core(q, kg, vg, k_new, v_new, valid, wo, attn_softcap):
@@ -424,7 +442,9 @@ class BatchedLeoAMEngine:
             sidecar_lossless=ecfg.sidecar_lossless, latent=self.mla,
             prefix_rows=(max(1, ecfg.prefix_arena_rows)
                          if ecfg.prefix_cache else 0),
-            debug_sync=ecfg.debug_sync)
+            debug_sync=ecfg.debug_sync, checksums=ecfg.checksums,
+            faults=ecfg.fault_plan, io_retries=ecfg.io_retries,
+            io_backoff_s=ecfg.io_backoff_s)
         self.seqs: Dict[int, _SeqState] = {}
         self._free: List[int] = list(range(max_seqs - 1, -1, -1))
         # DTP state: prefetch executor, per-(seq, layer) previous-round
@@ -441,6 +461,11 @@ class BatchedLeoAMEngine:
         self._prefill_cache: Dict[int, Any] = {}
         self._chunk_prefill_cache: Dict[int, Any] = {}
         self._round_idx = 0
+        # fault domain: per-seq terminal failure reasons (scheduler pops
+        # them after each round) + engine-level counters
+        self.failed: Dict[int, str] = {}
+        self.seqs_failed = 0
+        self.ingest_errors = 0
 
     @property
     def free_slots(self) -> int:
@@ -466,7 +491,15 @@ class BatchedLeoAMEngine:
         self._check_capacity()
         self._check_prompt(tokens)     # validate BEFORE taking the slot
         sid = self._free.pop()
-        return self._admit(sid, tokens, pool_place=True)
+        self.failed.pop(sid, None)     # the slot starts a fresh lifetime
+        try:
+            return self._admit(sid, tokens, pool_place=True)
+        except BaseException:
+            # a failed synchronous admission must not leak the slot —
+            # drain whatever the partial prefill already queued and
+            # recycle before re-raising to the caller
+            self.abort_admission(sid)
+            raise
 
     @decode_thread_only
     def add_sequence_async(self, tokens: np.ndarray) -> Future:
@@ -482,7 +515,8 @@ class BatchedLeoAMEngine:
         self._check_capacity()
         self._check_prompt(tokens)     # validate BEFORE taking the slot
         sid = self._free.pop()
-        return _admit_executor().submit(self._admit, sid, tokens,
+        self.failed.pop(sid, None)     # the slot starts a fresh lifetime
+        return _admit_executor().submit(self._admit_guarded, sid, tokens,
                                         pool_place=False)
 
     def _check_capacity(self) -> None:
@@ -505,6 +539,19 @@ class BatchedLeoAMEngine:
                 f"prompt length {S} needs < max_len={self.ecfg.max_len} "
                 f"(decode appends past the prompt); raise EngineCfg.max_len "
                 f"or truncate the prompt")
+
+    @worker_thread
+    def _admit_guarded(self, sid: int, tokens: np.ndarray, *,
+                       pool_place: bool) -> Tuple[int, int]:
+        """Admission-worker wrapper: any failure surfaces as a typed
+        :class:`AdmissionError` carrying the slot id, so the scheduler
+        (decode thread) can reclaim exactly that slot via
+        :meth:`abort_admission` — the worker itself must not mutate the
+        free list (slot recycling is decode-thread-owned)."""
+        try:
+            return self._admit(sid, tokens, pool_place=pool_place)
+        except BaseException as e:
+            raise AdmissionError(sid, e) from e
 
     @worker_thread
     def _admit(self, sid: int, tokens: np.ndarray, *,
@@ -557,7 +604,8 @@ class BatchedLeoAMEngine:
             prefill_s = time.perf_counter() - t0 - ingest_s
         tok = int(np.argmax(np.asarray(logits)[0]))
         self.seqs[sid] = _SeqState(cache=cache, length=S,
-                                   access=AccessTable(self.n_chunks))
+                                   access=AccessTable(self.n_chunks),
+                                   tokens=np.asarray(tokens), prompt_len=S)
         self.admit_profiles.append({
             "total_s": time.perf_counter() - t0, "prefill_s": prefill_s,
             "ingest_s": ingest_s,
@@ -669,6 +717,7 @@ class BatchedLeoAMEngine:
         self._check_capacity()
         self._check_prompt(tokens)     # validate BEFORE taking the slot
         sid = self._free.pop()
+        self.failed.pop(sid, None)     # the slot starts a fresh lifetime
         return ChunkedAdmission(self, sid, tokens, C, pool_place=pool_place)
 
     _KV_LEAVES = ("k", "v", "ckv", "krope")
@@ -718,19 +767,90 @@ class BatchedLeoAMEngine:
         worker's staged reads, and queued sidecar repacks — BEFORE clearing
         the store, so a slow replica write can never land in a recycled
         slot's fresh data (and a queued repack completes deterministically
-        instead of being aborted by the slot's version bump)."""
-        self.store.ingest_fence(sid)
-        for li in list(self._pf_futs):
-            fut = self._pf_futs.pop(li, None)
-            if fut is not None:
-                fut.result()
-        self.store.requant_fence()
+        instead of being aborted by the slot's version bump).
+
+        Exception-safe: a raised cold-ingest future (the fence drains ALL
+        of the seq's futures before surfacing the first failure), a failed
+        prefetch, or a failed repack is counted but swallowed — the
+        sequence is being retired, so the store teardown and slot recycle
+        ALWAYS run; the slot can never leak and the fence can never stay
+        poisoned for the next admission."""
+        self._drain_seq(sid)
         self._abs_cache.clear()
         self.store.clear_seq(sid)
         self.seqs.pop(sid, None)
         for key in [k for k in self._prev_sels if k[0] == sid]:
             self._prev_sels.pop(key, None)
-        self._free.append(sid)
+        if sid not in self._free:
+            self._free.append(sid)
+
+    def _drain_seq(self, sid: int) -> None:
+        """Best-effort drain of every in-flight future that may reference
+        a slot (ingest fence, prefetch worker, repack queue).  Failures
+        are counted, never raised: every teardown path (release /
+        abort_admission / fail_sequence) must run to completion."""
+        try:
+            self.store.ingest_fence(sid)
+        except BaseException:
+            self.ingest_errors += 1
+        for li in list(self._pf_futs):
+            fut = self._pf_futs.pop(li, None)
+            if fut is not None:
+                try:
+                    fut.result()
+                except BaseException:
+                    pass
+        try:
+            self.store.requant_fence()
+        except BaseException:
+            pass
+
+    @decode_thread_only
+    def abort_admission(self, sid: int) -> None:
+        """Reclaim a slot whose admission failed or was cancelled
+        mid-flight (the decode-thread half of :class:`AdmissionError`
+        handling, and the teardown for a deadline-cancelled
+        :class:`ChunkedAdmission`).
+
+        Drains the slot's write-behind ingest futures (their failure is
+        the reason we are here — swallowed), then releases everything the
+        partial admission may hold: pool slots and deferred placements,
+        prefix-arena refcounts including the unpublished registration
+        plan, tier entries, and the per-slot traffic log — before
+        recycling the slot.  Idempotent."""
+        self._drain_seq(sid)
+        self.store.clear_seq(sid)
+        self.seqs.pop(sid, None)
+        for key in [k for k in self._prev_sels if k[0] == sid]:
+            self._prev_sels.pop(key, None)
+        if sid not in self._free:
+            self._free.append(sid)
+
+    @decode_thread_only
+    def fail_sequence(self, sid: int, reason: str) -> None:
+        """Contain ONE sequence's failure as its terminal state.
+
+        Tears the sequence down exactly like :meth:`release` (drain,
+        clear, recycle) and records the reason in :attr:`failed` for the
+        scheduler to surface — no other sequence's state is touched, so
+        their decode streams stay token-identical (chaos-tested)."""
+        self._drain_seq(sid)
+        self._abs_cache.clear()
+        self.store.clear_seq(sid)
+        self.seqs.pop(sid, None)
+        for key in [k for k in self._prev_sels if k[0] == sid]:
+            self._prev_sels.pop(key, None)
+        if sid not in self._free:
+            self._free.append(sid)
+        self.failed[sid] = reason
+        self.seqs_failed += 1
+
+    def fault_stats(self) -> Dict[str, float]:
+        """Engine + store fault-domain counters (scheduler/audit-facing)."""
+        out = self.store.fault_stats()
+        out["seqs_failed"] = float(self.seqs_failed)
+        out["ingest_errors"] = float(self.ingest_errors)
+        return out
 
     def pool_stats(self) -> Dict[str, float]:
         """Live device-pool occupancy/hit counters (scheduler-facing)."""
@@ -901,6 +1021,12 @@ class BatchedLeoAMEngine:
     # ------------------------------------------------------------------
     # Decode round
     # ------------------------------------------------------------------
+    # decode_round is allowed this many ChunkLostError recoveries before
+    # giving up — each recovery either restores chunks or removes a
+    # sequence, so a loop that reaches the bound indicates a live fault
+    # injector scheduling pathological back-to-back losses
+    _MAX_ROUND_RETRIES = 8
+
     @decode_thread_only
     def decode_round(self, tokens: Dict[int, int]) -> Dict[int, int]:
         """One token for every sequence in ``tokens`` ({seq id: last token}).
@@ -911,17 +1037,153 @@ class BatchedLeoAMEngine:
         under this layer's attention.  Non-attention (recurrent / dense)
         layers keep their exact per-sequence decode path.  Returns
         {seq id: next token}.
+
+        FAILURE CONTAINMENT (I6): a failure on one sequence never takes
+        the batch down.  A raised cold-ingest fence fails just that
+        sequence (terminal state in :attr:`failed`); a disk-lost chunk
+        (:class:`ChunkLostError` from a checksum mismatch or exhausted
+        retries) triggers recompute-from-prompt of exactly the affected
+        span when it lies inside the prompt (bitwise-identical chunked
+        prefill), else fails the owning sequence — and the round retries
+        with the survivors, whose streams stay token-identical (batched
+        attention is FP-exact w.r.t. batch composition).  Returns {} when
+        every sequence failed; the scheduler pops :attr:`failed`.
         """
-        cfg, ecfg = self.cfg, self.ecfg
-        order = sorted(tokens)
-        B = len(order)
-        if B == 0:
+        if not tokens:
             raise ValueError(
                 "decode_round needs at least one sequence: pass "
                 "{seq id: last token} for every live sequence (admit one "
                 "via add_sequence / add_sequence_async first)")
-        for sid in order:               # write-behind completion fence: no
-            self.store.ingest_fence(sid)  # read sees a half-written replica
+        live = dict(tokens)
+        for sid in sorted(live):        # write-behind completion fence: no
+            try:                        # read sees a half-written replica
+                self.store.ingest_fence(sid)
+            except BaseException as e:
+                self.ingest_errors += 1
+                self.fail_sequence(sid, f"cold ingest failed: {e!r}")
+                live.pop(sid)
+        for _ in range(self._MAX_ROUND_RETRIES):
+            if not live:
+                return {}
+            snap = self._snapshot_round(live)
+            try:
+                return self._decode_round_impl(live)
+            except ChunkLostError as e:
+                self._restore_round(snap)
+                self._recover_lost(e, live)
+        raise RuntimeError(
+            f"decode round failed to converge after "
+            f"{self._MAX_ROUND_RETRIES} chunk-loss recoveries — the disk "
+            f"is losing chunks faster than recompute restores them")
+
+    def _snapshot_round(self, live: Dict[int, int]) -> Dict[str, Any]:
+        """Capture the host-side state a partial round mutates before its
+        first dispatch can raise, so a retry re-runs from a clean slate.
+        Device/pool residency and store billing need no rollback: both
+        are value-neutral (residency moves bytes, never values; a retried
+        read honestly re-bills)."""
+        return {
+            "access": {sid: self.seqs[sid].access.counts.copy()
+                       for sid in live},
+            "prev_sels": dict(self._prev_sels),
+        }
+
+    def _restore_round(self, snap: Dict[str, Any]) -> None:
+        """Roll back the selection state a failed round half-mutated and
+        drop its speculative prefetch (the futures may hold stale layer
+        predictions — and one may carry the same ChunkLostError)."""
+        for sid, counts in snap["access"].items():
+            if sid in self.seqs:
+                self.seqs[sid].access.counts[:] = counts
+        self._prev_sels.clear()
+        self._prev_sels.update(snap["prev_sels"])
+        for li in list(self._pf_futs):
+            fut = self._pf_futs.pop(li, None)
+            if fut is not None:
+                try:
+                    fut.result()
+                except BaseException:
+                    pass
+        self._abs_cache.clear()
+
+    def _recover_lost(self, e: ChunkLostError,
+                      live: Dict[int, int]) -> None:
+        """Handle one ChunkLostError: recompute every affected sequence
+        whose lost chunks all lie inside its prompt span; fail the rest.
+
+        Recompute covers ALL of a sequence's currently-lost chunks (the
+        store's ``disk_lost_keys``), not just the ones this particular
+        gather tripped on — one chunked-prefill replay restores the whole
+        span."""
+        by_seq: Dict[int, set] = {}
+        for seq, _p, c in e.keys:
+            by_seq.setdefault(seq, set()).add(c)
+        lost_all = self.store.disk_lost_keys()
+        for sid, cs in by_seq.items():
+            if sid not in live:
+                continue
+            # fold in every OTHER chunk the store currently marks lost for
+            # this sequence (a speculative prefetch may have found more):
+            # one prefill replay restores the whole set
+            cs = cs | {c for (p, _li, c) in lost_all
+                       if self.store._phys(sid, c) == p}
+            s = self.seqs.get(sid)
+            recomputable = (
+                s is not None and s.tokens is not None
+                and all(min((c + 1) * self.chunk, s.length) <= s.prompt_len
+                        for c in cs))
+            if not recomputable:
+                # the lost span includes decode appends (or the prompt is
+                # gone): the KV exists nowhere else — terminal for this
+                # sequence, invisible to every other one
+                self.fail_sequence(
+                    sid, f"disk-lost chunks {sorted(cs)} at layer "
+                         f"{e.layer} not recomputable from prompt")
+                live.pop(sid)
+                continue
+            self._recompute_chunks(sid, cs)
+
+    def _recompute_chunks(self, sid: int, cs: List[int]) -> None:
+        """Recompute-from-prompt for one sequence's disk-lost prompt-span
+        chunks: replay the PR-4 chunked prefill (bitwise-identical to the
+        original admission) through the last lost chunk and re-land every
+        (layer, chunk) the store still marks lost via
+        :meth:`TieredKVStore.restore_chunk` — replica, abstract and CRC
+        rebuilt; the quarantined sidecar repacks lazily."""
+        s = self.seqs[sid]
+        toks = np.asarray(s.tokens)
+        C = self.ecfg.prefill_chunk_tokens
+        end = min(len(toks), (max(cs) + 1) * self.chunk)
+        end = min(-(-end // C) * C, self.ecfg.max_len)
+        cache = lm.init_decode_cache(self.cfg, 1, self.ecfg.max_len)
+        pos = 0
+        while pos < end:
+            chunk_toks = np.zeros(C, np.int64)
+            take = min(C, len(toks) - pos)
+            if take > 0:
+                chunk_toks[:take] = toks[pos:pos + take]
+            batch = {"tokens": jnp.asarray(chunk_toks[None], jnp.int32),
+                     "start": jnp.int32(pos),
+                     "length": jnp.int32(len(toks))}
+            _, cache = self._prefill_chunk(batch, cache)
+            pos += C
+        lost_now = self.store.disk_lost_keys()
+        for li, layer in enumerate(self.attn_layers):
+            for c in sorted(set(cs)):
+                if (self.store._phys(sid, c), li, c) not in lost_now:
+                    continue
+                k, v = self._layer_kv_slice(cache, layer, c * self.chunk,
+                                            self.chunk)
+                self.store.restore_chunk(li, sid, c, k, v)
+
+    @decode_thread_only
+    def _decode_round_impl(self, tokens: Dict[int, int]) -> Dict[int, int]:
+        """The round body (see :meth:`decode_round`); every sequence in
+        ``tokens`` is live and fenced.  Raises :class:`ChunkLostError`
+        for the wrapper's recovery loop."""
+        cfg, ecfg = self.cfg, self.ecfg
+        order = sorted(tokens)
+        B = len(order)
         states = [self.seqs[sid] for sid in order]
         lengths = np.array([s.length for s in states], np.int64)
         x = jnp.asarray([[tokens[sid]] for sid in order], jnp.int32)
@@ -1158,6 +1420,7 @@ class ChunkedAdmission:
         self.cache = lm.init_decode_cache(engine.cfg, 1, engine.ecfg.max_len)
         self.placement = engine._default_placement()
         self.result: Optional[Tuple[int, int]] = None
+        self.cancelled = False
         self.n_steps = 0
         self._t0 = time.perf_counter()
         self._prefill_s = 0.0
@@ -1206,8 +1469,22 @@ class ChunkedAdmission:
         paths, and ``pool_place=False`` defers pool mutation)."""
         return self._step_impl()
 
+    def cancel(self) -> None:
+        """Abandon a partially-admitted request (deadline expiry or
+        client cancellation).  Drains the write-behind futures of the
+        chunks already streamed and releases every resource the partial
+        admission holds — pool slots, deferred placements, prefix-arena
+        refcounts including the unpublished registration plan — via
+        :meth:`BatchedLeoAMEngine.abort_admission`; the slot recycles
+        immediately.  After cancel, :meth:`step` is a no-op.  Must run on
+        the decode thread (like ``step``)."""
+        if self.done or self.cancelled:
+            return
+        self.cancelled = True
+        self.engine.abort_admission(self.sid)
+
     def _step_impl(self) -> int:
-        if self.done:
+        if self.done or self.cancelled:
             return 0
         eng, C = self.engine, self.C
         take = min(C, self.S - self.pos)
@@ -1247,7 +1524,9 @@ class ChunkedAdmission:
         tok = int(np.argmax(np.asarray(logits)[0]))
         cache_np = jax.tree.map(np.asarray, self.cache)
         eng.seqs[self.sid] = _SeqState(cache=cache_np, length=self.S,
-                                       access=AccessTable(eng.n_chunks))
+                                       access=AccessTable(eng.n_chunks),
+                                       tokens=np.asarray(self.tokens),
+                                       prompt_len=self.S)
         if eng.ecfg.prefix_cache:
             # publish the chunks this admission registered ONLY after the
             # write-behind cold writes land: adopters read the arena row's

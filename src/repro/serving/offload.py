@@ -92,9 +92,10 @@ import os
 import tempfile
 import threading
 import time
+import zlib
 from collections import OrderedDict, defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -103,11 +104,22 @@ import numpy as np
 from repro.core import compression
 from repro.core.tiers import shared_prefix_savings
 from repro.serving import sanitizer as _san
+from repro.serving.faults import (ChunkLostError, DiskIOExhausted,
+                                  IngestError, TransientDiskError,
+                                  WorkerFault)
 from repro.serving.prefix import PrefixIndex, chunk_hashes
 from repro.serving.sanitizer import (any_thread, decode_thread_only,
                                      worker_thread)
 
 DEVICE, HOST, DISK = "device", "host", "disk"
+
+# per-chunk checksum states (persisted in kv_crc_state.bin): NONE = never
+# written (a REOPENED store treats a read of it as lost — torn ingest);
+# VALID = the stored CRC covers the replica bytes; DIRTY = a decode append
+# changed the replica in place, so the chunk is served unverified until
+# the requant sweep re-packs (and re-checksums) it once quiet — a CRC
+# read-back per appended row would double the append write traffic.
+_CRC_NONE, _CRC_VALID, _CRC_DIRTY = 0, 1, 2
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -260,7 +272,6 @@ class DeviceChunkPool:
         rows = [(key, slot, off, row)
                 for key, (off, row) in self.pending.items()
                 if (slot := self.slot_of.get(key)) is not None]
-        self.pending.clear()
         n = len(rows)
         width = -(-max(n, 1) // row_pad) * row_pad if n else 0
         if m:
@@ -291,6 +302,10 @@ class DeviceChunkPool:
         elif n:
             self.kv = _slab_set_rows(self.kv, jnp.asarray(si),
                                      jnp.asarray(oi), jnp.asarray(kv_rows))
+        # clear AFTER the slab updates land: an exception mid-scatter must
+        # not drop queued append rows on the floor (the retry re-flushes
+        # them, so the slab never serves a stale chunk row)
+        self.pending.clear()
         self.uploads += m
         return [key for key, _, _, _ in rows]
 
@@ -327,7 +342,10 @@ class TieredKVStore:
                  use_pool: bool = False, pool_slots: Optional[int] = None,
                  real_codec: bool = False, disk_sidecar: bool = False,
                  sidecar_lossless: bool = False, latent: bool = False,
-                 prefix_rows: int = 0, debug_sync: bool = False):
+                 prefix_rows: int = 0, debug_sync: bool = False,
+                 checksums: bool = True, faults=None,
+                 io_retries: int = 3, io_backoff_s: float = 1e-4,
+                 reopen: bool = False):
         # sync-sanitizer: refcounted enable so overlapping debug stores
         # compose; locks get wrapped in TrackedLock further down
         self.debug_sync = bool(debug_sync)
@@ -388,8 +406,16 @@ class TieredKVStore:
         shape = (rows, n_layers, n_chunks, self.planes, chunk, kv_heads,
                  head_dim)
         self._root = root or tempfile.mkdtemp(prefix="leoam_kv_")
+        # reopen=True re-attaches to an existing root after a (real or
+        # simulated) crash: memmaps open read-write over whatever bytes
+        # survived, every chunk starts disk-tier, and the checksum layer
+        # decides per read what is servable — a chunk whose cold ingest
+        # never landed has CRC state NONE and is rejected as disk-lost
+        # instead of served torn (crash-consistency test).
+        self._reopened = bool(reopen)
+        _mode = "r+" if reopen else "w+"
         self._disk = np.memmap(os.path.join(self._root, "kv.bin"),
-                               dtype=self.dtype, mode="w+", shape=shape)
+                               dtype=self.dtype, mode=_mode, shape=shape)
         # packed sidecar: quantize_chunks(group=chunk) layout per (seq,
         # layer, chunk, K|V plane) — int payload + f32 per-channel scales.
         # _sidecar_valid gates reads: decode appends invalidate the chunk
@@ -401,11 +427,46 @@ class TieredKVStore:
             dq = compression.packed_dim(transit_codec, d)
             self._disk_q = np.memmap(
                 os.path.join(self._root, "kv_q.bin"), dtype=np.int8,
-                mode="w+", shape=(rows, n_layers, n_chunks, self.planes,
-                                  chunk, dq))
+                mode=_mode, shape=(rows, n_layers, n_chunks, self.planes,
+                                   chunk, dq))
             self._disk_scale = np.memmap(
                 os.path.join(self._root, "kv_scale.bin"), dtype=np.float32,
-                mode="w+", shape=(rows, n_layers, n_chunks, self.planes, d))
+                mode=_mode, shape=(rows, n_layers, n_chunks, self.planes, d))
+        # fault domain (PR 8): per-chunk CRC32 over the replica planes and
+        # the packed sidecar payload+scales, persisted next to the data so
+        # a reopened store rejects torn/corrupt chunks instead of serving
+        # them.  ``faults`` is an optional serving.faults.FaultPlan threaded
+        # through the single I/O choke points (tests/chaos harness only).
+        self.checksums = bool(checksums)
+        self.faults = faults
+        self.io_retries = int(io_retries)
+        self.io_backoff_s = float(io_backoff_s)
+        self._crc = self._crc_state = self._q_crc = None
+        if self.checksums:
+            self._crc = np.memmap(
+                os.path.join(self._root, "kv_crc.bin"), dtype=np.uint32,
+                mode=_mode, shape=(rows, n_layers, n_chunks))
+            self._crc_state = np.memmap(
+                os.path.join(self._root, "kv_crc_state.bin"),
+                dtype=np.uint8, mode=_mode,
+                shape=(rows, n_layers, n_chunks))
+            if self.disk_sidecar:
+                self._q_crc = np.memmap(
+                    os.path.join(self._root, "kv_q_crc.bin"),
+                    dtype=np.uint32, mode=_mode,
+                    shape=(rows, n_layers, n_chunks))
+        self.fault_counters: Dict[str, int] = {
+            "io_retries": 0, "checksum_failures": 0, "chunks_recomputed": 0}
+        self._stats_lock = threading.Lock()   # counters only; leaf lock
+        self._disk_lost: Set[Tuple[int, int, int]] = set()
+        # sequences served degraded numerics this lifetime: a quarantined
+        # sidecar fell back to the lossless fp16 replica, so their values
+        # differ from the fault-free dequantized read (the chaos test
+        # exempts exactly these from token-identity)
+        self.degraded_seqs: Set[int] = set()
+        if reopen:
+            # hot tiers died with the process; all surviving state is disk
+            self.tier[:] = DISK
         # write-behind ingest: per-seq in-flight cold-write futures; the
         # fence pops under _futs_lock and waits OUTSIDE the store lock
         # (workers need the store lock to land their writes)
@@ -514,22 +575,154 @@ class TieredKVStore:
         return (self.disk_sidecar and not self.sidecar_lossless
                 and bool(self._sidecar_valid[seq, layer, c]))
 
-    def _read_sidecar(self, layer: int,  # leolint: waive[billlint] reason=coalesced read helper: every caller (_stage_disk, fetch_chunks) bills _packed_bytes() per key at its own promotion site, where per-seq attribution is known
-                      keys: Sequence[Tuple[int, int]]) -> np.ndarray:
+    # ------------------------------------------------------------------
+    # Fault domain: checksums, injection choke points, bounded retry
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _crc32(arr: np.ndarray) -> int:
+        """CRC32 over a chunk's stored bytes (cheap, no jax dispatch — safe
+        under the store lock)."""
+        return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+    def _sidecar_crc(self, data: np.ndarray, scale: np.ndarray) -> int:
+        """One chunk's packed-sidecar CRC: payload planes then scales, in
+        the exact (planes, chunk, dq) / (planes, d) read layout."""
+        z = zlib.crc32(np.ascontiguousarray(data).tobytes())
+        return zlib.crc32(np.ascontiguousarray(scale).tobytes(), z) \
+            & 0xFFFFFFFF
+
+    def _count(self, name: str, n: int = 1) -> None:
+        """Bump a fault counter (worker and decode threads both count)."""
+        with self._stats_lock:
+            self.fault_counters[name] = \
+                self.fault_counters.get(name, 0) + n
+
+    def _fault_point(self, site: str, key=None) -> None:
+        """THE injection choke point: every physical disk/sidecar/worker
+        attempt consults the plan here exactly once.  ``key`` for read
+        sites is the list of (phys row, layer, chunk) the attempt covers —
+        a scheduled bitflip corrupts the first one's stored bytes."""
+        plan = self.faults
+        if plan is None:
+            return
+        kind = plan.check(site, key)
+        if kind is None:
+            return
+        if kind == "latency":
+            time.sleep(plan.latency_s)
+        elif kind == "io_error":
+            raise TransientDiskError(f"injected transient {site} error")
+        elif kind == "exception":
+            raise WorkerFault(f"injected worker fault at {site}")
+        elif kind == "bitflip" and site in ("disk_read", "sidecar_read"):
+            self._flip_bit(site, key)
+
+    def _flip_bit(self, site: str, key) -> None:  # leolint: waive[billlint] reason=fault-injection hook: corrupts stored bytes in place to model silent media corruption; no tier transfer occurs, nothing is promoted or billed
+        """Flip one stored bit of the first targeted chunk — silent media
+        corruption the checksum layer must catch at the next promotion."""
+        if not key:
+            return
+        p, layer, c = key[0]
+        if site == "sidecar_read" and self._disk_q is not None:
+            buf = self._disk_q[p, layer, c].reshape(-1)
+            buf[0] = np.int8(int(buf[0]) ^ 0x40)
+        else:
+            flat = self._disk[p, layer, c].reshape(-1)
+            word = np.uint16 if self.dtype.itemsize == 2 else np.uint32
+            cell = flat[:1].view(word)
+            cell[0] ^= np.asarray(1 << 10, word)
+        if hasattr(self.faults, "record_key"):
+            self.faults.record_key((int(p), int(layer), int(c)))
+
+    def _with_retries(self, fn):
+        """Run one physical I/O attempt with bounded retry-with-backoff on
+        transient errors.  Each retry re-consults the fault plan at the
+        NEXT call index, so one scheduled ``io_error`` models a transient
+        blip (value-identical after retry) and ``io_retries + 1``
+        consecutive ones a persistent failure, surfacing as
+        :class:`DiskIOExhausted` for the caller to degrade on — never a
+        raw ``IOError`` into ``decode_round``."""
+        last: Optional[BaseException] = None
+        for attempt in range(self.io_retries + 1):
+            try:
+                return fn()
+            except TransientDiskError as e:
+                last = e
+                self._count("io_retries")
+                if attempt < self.io_retries:
+                    time.sleep(self.io_backoff_s * (2 ** attempt))
+        raise DiskIOExhausted(
+            f"disk I/O failed after {self.io_retries + 1} attempts: "
+            f"{last}") from last
+
+    def _read_sidecar(self, layer: int,  # leolint: waive[billlint] reason=coalesced read helper: every caller (_stage_disk, fetch_chunks) bills _packed_bytes() (or the fp16 fallback) per key at its own promotion site, where per-seq attribution is known
+                      keys: Sequence[Tuple[int, int]]
+                      ) -> Tuple[np.ndarray, Set[int]]:
         """Coalesced packed-sidecar read: dequantize every storage plane
-        for every (seq, chunk) key.  Returns (n, planes, chunk, Hkv, hd)
-        in store dtype."""
+        for every (seq, chunk) key.  Returns ``(out, bad)``: out is
+        (n, planes, chunk, Hkv, hd) in store dtype; ``bad`` holds the
+        positions whose payload failed CRC verification — those rows are
+        garbage, the sidecar is quarantined (valid bit cleared, counted)
+        and the caller falls back to the fp16 replica."""
         sq = np.array([s for s, _ in keys])
         cq = np.array([c for _, c in keys])
-        data = np.asarray(self._disk_q[sq, layer, cq])    # (n, planes, c, dq)
-        scale = np.asarray(self._disk_scale[sq, layer, cq])  # (n, planes, d)
+
+        def read():  # leolint: waive[billlint] reason=retryable attempt body of the coalesced helper; billing happens at the callers' promotion sites (see _read_sidecar waiver)
+            self._fault_point("sidecar_read",
+                              [(p, layer, c) for p, c in keys])
+            return (np.asarray(self._disk_q[sq, layer, cq]),
+                    np.asarray(self._disk_scale[sq, layer, cq]))
+
+        data, scale = self._with_retries(read)   # (n, planes, c, dq) / (n, planes, d)
+        bad: Set[int] = set()
+        if self._q_crc is not None:
+            for i, (p, c) in enumerate(keys):
+                if self._sidecar_crc(data[i], scale[i]) != \
+                        int(self._q_crc[p, layer, c]):
+                    bad.add(i)
+                    self._sidecar_valid[p, layer, c] = False
+                    self._count("checksum_failures")
         out = np.empty((len(keys), self.planes, self.chunk, self.kv_heads,
                         self.head_dim), self.dtype)
         for plane in range(self.planes):
             out[:, plane] = compression.dequantize_chunks(
                 data[:, plane], scale[:, plane], self.transit_codec,
                 self.kv_heads, self.head_dim, dtype=self.dtype)
-        return out
+        return out, bad
+
+    def _replica_read_verified(self, layer: int,  # leolint: waive[billlint] reason=coalesced verified-read helper: callers (_stage_disk, fetch_chunks) bill per key at their own promotion site, where per-seq attribution and the fallback kind are known
+                               entries: Sequence[Tuple[int, int, int]]
+                               ) -> Tuple[np.ndarray, Set[int]]:
+        """Coalesced fp16-replica gather through the fault choke point with
+        bounded retry, plus CRC verification.  ``entries`` is (bill seq,
+        phys row, chunk).  Returns ``(blk, lost)``: blk is (n, planes,
+        chunk, Hkv, hd); ``lost`` positions failed verification (replica
+        corrupt, or — in a reopened store — never landed), are marked
+        disk-lost, and must not be served."""
+        sq = np.array([p for _, p, _ in entries])
+        cq = np.array([c for _, _, c in entries])
+
+        def read():  # leolint: waive[billlint] reason=retryable attempt body of the coalesced helper; billing happens at the callers' promotion sites (see _replica_read_verified waiver)
+            self._fault_point("disk_read",
+                              [(p, layer, c) for _, p, c in entries])
+            return np.asarray(self._disk[sq, layer, cq])
+
+        blk = self._with_retries(read)
+        lost: Set[int] = set()
+        if self._crc is not None:
+            for i, (_, p, c) in enumerate(entries):
+                state = int(self._crc_state[p, layer, c])
+                ok = True
+                if state == _CRC_VALID:
+                    ok = self._crc32(blk[i]) == int(self._crc[p, layer, c])
+                elif state == _CRC_NONE and self._reopened:
+                    ok = False       # torn ingest: the cold write never landed
+                if not ok:
+                    lost.add(i)
+                    if (p, layer, c) not in self._disk_lost:
+                        self._disk_lost.add((p, layer, c))
+                        self._count("checksum_failures")
+        return blk, lost
 
     @worker_thread
     def ingest(self, layer: int, k: np.ndarray,
@@ -644,6 +837,11 @@ class TieredKVStore:
         STORAGE row (an arena row when a registration redirects);
         ``bill_seq`` attributes the traffic to the logical sequence."""
         bill = seq if bill_seq is None else bill_seq
+        # injected worker-thread fault: an arbitrary bug in this work item.
+        # It propagates through the future and surfaces at the seq's
+        # ingest fence as IngestError — that sequence's terminal state,
+        # never the batch's.
+        self._fault_point("worker", (layer, seq))
         packed = None
         if self.disk_sidecar:
             # quantize OUTSIDE the lock (pure compute on private arrays) —
@@ -651,6 +849,25 @@ class TieredKVStore:
             planes = (kcs,) if self.planes == 1 else (kcs, vcs)
             packed = tuple(compression.quantize_chunks(p, self.transit_codec)
                            for p in planes)
+        # checksums over the exact bytes about to land, computed outside
+        # the lock; the CRC rows are metadata (4B/chunk), not a tier
+        # transfer — unbilled by I6 (see docs/INVARIANTS.md)
+        crcs = q_crcs = None
+        n = len(cids)
+        if self._crc is not None:
+            crcs = [self._crc32(self._plane_stack(kcs[i], vcs[i]))
+                    for i in range(n)]
+        if packed is not None and self._q_crc is not None:
+            q_crcs = []
+            for i in range(n):
+                d = np.stack([pd.reshape(n, self.chunk, -1)[i]
+                              for pd, _ in packed])
+                s = np.stack([psc[i] for _, psc in packed])
+                q_crcs.append(self._sidecar_crc(d, s))
+        # transient write errors retry at the choke point; exhaustion
+        # (DiskIOExhausted) surfaces at the fence, not into decode
+        self._with_retries(
+            lambda: self._fault_point("disk_write", (layer, seq)))
         with self._lock:
             idx = np.asarray(cids, np.int64)
             self._disk[seq, layer, idx, 0] = kcs
@@ -658,14 +875,20 @@ class TieredKVStore:
                 self._disk[seq, layer, idx, 1] = vcs
             self._abs_km[seq, layer, idx] = kcs.max(1)
             self._abs_kn[seq, layer, idx] = kcs.min(1)
+            if crcs is not None:
+                for i, c in enumerate(cids):
+                    self._crc[seq, layer, c] = crcs[i]
+                    self._crc_state[seq, layer, c] = _CRC_VALID
             rep_bytes = float(self.chunk_bytes)
             if packed is not None:
-                n = len(cids)
                 for pl, (pd, psc) in enumerate(packed):
                     self._disk_q[seq, layer, idx, pl] = pd.reshape(
                         n, self.chunk, -1)
                     self._disk_scale[seq, layer, idx, pl] = psc
                 self._sidecar_valid[seq, layer, idx] = True
+                if q_crcs is not None:
+                    for i, c in enumerate(cids):
+                        self._q_crc[seq, layer, c] = q_crcs[i]
                 rep_bytes = self._packed_bytes()
             for _c in cids:
                 self._record(bill, HOST, DISK, "kv_replica", rep_bytes)
@@ -678,19 +901,41 @@ class TieredKVStore:
         landed (replicas, sidecars, abstracts, billing).  Reads of the
         sequence's disk tier or abstracts are only ordered after this
         fence.  Must be called WITHOUT the store lock held — the pending
-        workers need it to complete."""
+        workers need it to complete.
+
+        Exception-safe: ALL futures are awaited even when one raises, so
+        by the time the fence returns (or raises) no write of ``seq`` is
+        still in flight and the row can be reclaimed safely.  The first
+        failure re-raises wrapped as :class:`IngestError` — one typed,
+        per-sequence terminal signal instead of a fence poisoned for
+        every later admission of the slot."""
         with self._futs_lock:
             futs = self._ingest_futs.pop(seq, [])
+        first: Optional[BaseException] = None
         for fut in futs:
-            fut.result()
+            try:
+                fut.result()
+            except BaseException as e:
+                if first is None:
+                    first = e
+        if first is not None:
+            raise IngestError(seq, first) from first
 
     @any_thread
     def ingest_fence_all(self) -> None:
-        """Fence every sequence (shutdown path)."""
+        """Fence every sequence (shutdown path).  Every sequence is drained
+        even when one fails; the first failure re-raises at the end."""
         with self._futs_lock:
             seqs = list(self._ingest_futs)
+        first: Optional[BaseException] = None
         for s in seqs:
-            self.ingest_fence(s)
+            try:
+                self.ingest_fence(s)
+            except BaseException as e:
+                if first is None:
+                    first = e
+        if first is not None:
+            raise first
 
     @decode_thread_only
     def _pool_place(self, layer: int, seq: int,
@@ -860,6 +1105,9 @@ class TieredKVStore:
                     pool.evict((row, c))
                 self.tier[row, layer, c] = HOST
                 self._sidecar_valid[row, layer, c] = False
+                if self._crc_state is not None:
+                    self._crc_state[row, layer, c] = _CRC_NONE
+                self._disk_lost.discard((row, layer, c))
                 self._abs_km[row, layer, c] = -np.inf
                 self._abs_kn[row, layer, c] = np.inf
                 self._requant_pending.pop(key, None)
@@ -892,6 +1140,14 @@ class TieredKVStore:
                     self._disk_scale[row, layer, c]
                 self._sidecar_valid[seq, layer, c] = \
                     self._sidecar_valid[row, layer, c]
+            if self._crc is not None:
+                # the private copy inherits the arena chunk's checksum
+                # state — same bytes, same CRC
+                self._crc[seq, layer, c] = self._crc[row, layer, c]
+                self._crc_state[seq, layer, c] = \
+                    self._crc_state[row, layer, c]
+                if self._q_crc is not None:
+                    self._q_crc[seq, layer, c] = self._q_crc[row, layer, c]
             src = (row, layer, c)
             dst = (seq, layer, c)
             if src in self._host_k:
@@ -1012,18 +1268,39 @@ class TieredKVStore:
                     vs.append(self._dev_v[key])
                     continue
                 if self.tier[p, layer, c] == DISK or key not in self._host_k:
+                    kc = vc = None
+                    fell_back = False
                     if self._sidecar_ok(p, layer, c):
-                        # leolint: waive[locklint] reason=decode-thread fetch path: sidecar dequant under the short fetch critical section is the accepted PR-2 design (tier tables must not move mid-fetch)
-                        kv = self._read_sidecar(layer, [(p, c)])[0]
-                        kc, vc = kv[0], kv[-1]
-                        nb = self._packed_bytes()
-                    else:
-                        kc = np.asarray(self._disk[p, layer, c, 0])
-                        vc = kc if self.planes == 1 else \
-                            np.asarray(self._disk[p, layer, c, 1])
+                        try:
+                            # leolint: waive[locklint] reason=decode-thread fetch path: sidecar dequant under the short fetch critical section is the accepted PR-2 design (tier tables must not move mid-fetch)
+                            kv, bad = self._read_sidecar(layer, [(p, c)])
+                        except DiskIOExhausted:
+                            kv, bad = None, {0}
+                        if bad:
+                            # quarantined (CRC mismatch) or unreadable:
+                            # degrade to the lossless fp16 replica below
+                            fell_back = True
+                        else:
+                            kc, vc = kv[0][0], kv[0][-1]
+                            nb = self._packed_bytes()
+                    if kc is None:
+                        try:
+                            blk, lost = self._replica_read_verified(
+                                layer, [(seq, p, c)])
+                        except DiskIOExhausted:
+                            blk, lost = None, {0}
+                            self._disk_lost.add((p, layer, c))
+                        if blk is None or lost:
+                            # the replica is gone too: surface the typed
+                            # loss for the engine to recompute or contain
+                            raise ChunkLostError(layer, [(seq, p, c)])
+                        kc, vc = blk[0][0], blk[0][-1]
                         nb = (self._disk_read_bytes() if self.disk_sidecar
                               else self._transit_bytes())
-                    if p != seq:
+                    if fell_back:
+                        self.degraded_seqs.add(seq)
+                        self._record(seq, DISK, HOST, "kv_fallback", nb)
+                    elif p != seq:
                         self._record(seq, DISK, HOST, "kv_shared", nb)
                     else:
                         self._record(seq, DISK, HOST, "kv", nb)
@@ -1140,18 +1417,22 @@ class TieredKVStore:
         need_q = [e for e in need if self._sidecar_ok(e[1], layer, e[2])]
         need_fp = [e for e in need if not self._sidecar_ok(e[1], layer,
                                                            e[2])]
-        for group in (need_fp, need_q):
-            if not group:
-                continue
-            per_chunk = self._packed_bytes() if group is need_q else nbytes
-            if group is need_q:
-                blk = self._read_sidecar(layer,
-                                         [(p, c) for _, p, c in group])
-            else:
-                sq = np.array([p for _, p, _ in group])
-                cq = np.array([c for _, _, c in group])
-                blk = np.asarray(self._disk[sq, layer, cq])  # (n, 2, c, ...)
-            for (seq, p, c), kv in zip(group, blk):
+        # sidecar group first: a CRC-quarantined (or unreadable) sidecar
+        # key degrades into the fp16 group below and bills kv_fallback —
+        # the read that actually happened, at its honest full-chunk cost
+        fallback: Set[Tuple[int, int]] = set()
+        if need_q:
+            per_chunk = self._packed_bytes()
+            try:
+                blk, bad = self._read_sidecar(
+                    layer, [(p, c) for _, p, c in need_q])
+            except DiskIOExhausted:
+                blk, bad = None, set(range(len(need_q)))
+            for i, (seq, p, c) in enumerate(need_q):
+                if blk is None or i in bad:
+                    fallback.add((p, c))
+                    need_fp.append((seq, p, c))
+                    continue
                 key = (p, layer, c)
                 if p != seq:
                     # refcounted promotion of a shared chunk: read once
@@ -1160,9 +1441,38 @@ class TieredKVStore:
                 else:
                     self._record(seq, DISK, HOST, "kv", per_chunk)
                 billed += per_chunk
-                self._host_k[key], self._host_v[key] = kv[0], kv[-1]
+                self._host_k[key], self._host_v[key] = blk[i][0], blk[i][-1]
                 if retier:
                     self.tier[p, layer, c] = HOST
+        lost: List[Tuple[int, int, int]] = []
+        if need_fp:
+            try:
+                blk, bad = self._replica_read_verified(layer, need_fp)
+            except DiskIOExhausted:
+                # unreadable past the retry budget: degrade the whole
+                # gather to disk-lost — the engine recomputes the span
+                # from the prompt or fails just the affected sequence
+                blk, bad = None, set(range(len(need_fp)))
+                for _, p, c in need_fp:
+                    self._disk_lost.add((p, layer, c))
+            for i, (seq, p, c) in enumerate(need_fp):
+                if blk is None or i in bad:
+                    lost.append((seq, p, c))
+                    continue
+                key = (p, layer, c)
+                if (p, c) in fallback:
+                    self.degraded_seqs.add(seq)
+                    self._record(seq, DISK, HOST, "kv_fallback", nbytes)
+                elif p != seq:
+                    self._record(seq, DISK, HOST, "kv_shared", nbytes)
+                else:
+                    self._record(seq, DISK, HOST, "kv", nbytes)
+                billed += nbytes
+                self._host_k[key], self._host_v[key] = blk[i][0], blk[i][-1]
+                if retier:
+                    self.tier[p, layer, c] = HOST
+        if lost:
+            raise ChunkLostError(layer, lost)
         return len(need), billed
 
     @worker_thread
@@ -1172,14 +1482,22 @@ class TieredKVStore:
         chunks off disk so the true fetch finds them host-resident (they
         are re-tiered HOST — without that the fetch would re-read and
         re-bill the same chunk, and the prefetch would hide nothing);
-        wrong predictions cost only this read.  Returns #chunks staged."""
+        wrong predictions cost only this read.  Returns #chunks staged.
+
+        Faults are swallowed here BY DESIGN: the staging is speculative,
+        so a lost/unreadable chunk costs nothing now — the decode thread's
+        own fetch re-detects it on the authoritative path and recovers
+        there (the disk-lost marking this call already made is kept)."""
         with self._lock:
             keys = [(seq, c) for seq, chunks in chunks_by_seq.items()
                     for c in chunks]
-            # leolint: waive[locklint] reason=prefetch staging holds _lock so the re-tier to HOST is atomic with the read; the decode thread stalls at most one speculative batch (measured in fig13 prefetch bench)
-            n, _ = self._stage_disk(layer, keys,
-                                    nbytes=self._disk_read_bytes(),
-                                    skip_pool=True, retier=True)
+            try:
+                # leolint: waive[locklint] reason=prefetch staging holds _lock so the re-tier to HOST is atomic with the read; the decode thread stalls at most one speculative batch (measured in fig13 prefetch bench)
+                n, _ = self._stage_disk(layer, keys,
+                                        nbytes=self._disk_read_bytes(),
+                                        skip_pool=True, retier=True)
+            except (ChunkLostError, DiskIOExhausted):
+                return 0
             return n
 
     @decode_thread_only
@@ -1228,8 +1546,10 @@ class TieredKVStore:
             # fold deferred prefill placements (admission under decode)
             # into this round's slab update — unbilled, the decode thread
             # is the only pool mutator so the attend gather never races
+            place_keys: List[Tuple[int, int]] = []
             place_slots: List[int] = []
             place_kv: List[np.ndarray] = []
+            fresh: Dict[Tuple[int, int], int] = {}
             if pool.pending_place:
                 for key, kv in list(pool.pending_place.items()):
                     pool.pending_place.pop(key)
@@ -1240,6 +1560,7 @@ class TieredKVStore:
                     if evicted is not None:
                         self.tier[evicted[0], layer, evicted[1]] = HOST
                     self.tier[key[0], layer, key[1]] = DEVICE
+                    place_keys.append(key)
                     place_slots.append(slot)
                     place_kv.append(kv)
             missing: List[Tuple[int, int, int, int, int]] = []
@@ -1254,6 +1575,28 @@ class TieredKVStore:
                         slots[i, j] = slot
                         st.hits += 1
             t1 = time.perf_counter()
+
+            def scrub_partial():
+                # a worker future / jit dispatch raised between slot
+                # allocation and the slab scatter landing: residency must
+                # never point at a slab row the scatter did not write.
+                # Evict the half-uploaded slots back to HOST (host copies
+                # and disk replicas are intact, so nothing is lost) and
+                # return deferred placements to pending_place for the
+                # next fetch.  The lock itself is released by ``with``.
+                for pk_, slot_ in fresh.items():
+                    if pool.slot_of.get(pk_) == slot_:
+                        pool.slot_of.pop(pk_, None)
+                        pool.free.append(slot_)
+                    self.tier[pk_[0], layer, pk_[1]] = HOST
+                for pk_, slot_, kv_ in zip(place_keys, place_slots,
+                                           place_kv):
+                    if pool.slot_of.get(pk_) == slot_:
+                        pool.slot_of.pop(pk_, None)
+                        pool.free.append(slot_)
+                    self.tier[pk_[0], layer, pk_[1]] = HOST
+                    pool.pending_place[pk_] = kv_
+
             if missing:
                 # shared chunks dedupe here too: two sequences missing the
                 # same arena chunk allocate ONE slot and bill ONE upload
@@ -1261,55 +1604,60 @@ class TieredKVStore:
                 # twice would orphan the first slot
                 up_slots: List[int] = []
                 up_keys: List[Tuple[int, int, int]] = []  # (seq, phys, c)
-                fresh: Dict[Tuple[int, int], int] = {}
-                for i, j, seq, p, c in missing:
-                    pk = (p, c)
-                    slot = fresh.get(pk)
-                    if slot is None:
-                        slot, evicted = pool.alloc(pk, pinned)
-                        if evicted is not None:
-                            self.tier[evicted[0], layer, evicted[1]] = HOST
-                        self.tier[p, layer, c] = DEVICE
-                        fresh[pk] = slot
-                        up_slots.append(slot)
-                        up_keys.append((seq, p, c))
-                    slots[i, j] = slot
-                kv_stack = np.stack(
-                    [self._plane_stack(self._host_k[(p, layer, c)],
-                                       self._host_v[(p, layer, c)])
-                     for _, p, c in up_keys])      # (m, planes, c, Hkv, hd)
-                m = len(up_keys)
-                n_comp = 0
-                if self.real_codec:
-                    n_comp = int(round(min(1.0, max(0.0, theta)) * m))
-                if n_comp:
-                    from repro.kernels.kv_quant.ops import kv_dequant
-                    dq = lambda d, s: kv_dequant(
-                        jnp.asarray(d), jnp.asarray(s),
-                        codec=self.transit_codec,
-                        out_dtype=self.dtype).reshape(
-                            n_comp, self.chunk, self.kv_heads, self.head_dim)
-                    kv_dev = jnp.stack(
-                        [dq(*compression.quantize_chunks(
-                            kv_stack[:n_comp, pl], self.transit_codec))
-                         for pl in range(self.planes)], axis=1)
-                    if n_comp < m:
-                        kv_dev = jnp.concatenate(
-                            [kv_dev, jnp.asarray(kv_stack[n_comp:])])
-                else:
-                    kv_dev = kv_stack
-                if place_kv:           # deferred placements ride along
-                    pk = np.stack(place_kv)
-                    kv_dev = jnp.concatenate([kv_dev, jnp.asarray(pk)]) \
-                        if isinstance(kv_dev, jnp.ndarray) \
-                        else np.concatenate([kv_dev, pk])
-                    up_slots = up_slots + place_slots
-                # bucket the scatter shape so repeated rounds reuse the
-                # compiled program instead of recompiling per delta size
-                pad_to = -(-len(up_slots) // self.upload_pad) \
-                    * self.upload_pad
-                self._bill_flushed_rows(
-                    pool.scatter(up_slots, kv_dev, pad_to=pad_to))
+                try:
+                    for i, j, seq, p, c in missing:
+                        pk = (p, c)
+                        slot = fresh.get(pk)
+                        if slot is None:
+                            slot, evicted = pool.alloc(pk, pinned)
+                            if evicted is not None:
+                                self.tier[evicted[0], layer,
+                                          evicted[1]] = HOST
+                            self.tier[p, layer, c] = DEVICE
+                            fresh[pk] = slot
+                            up_slots.append(slot)
+                            up_keys.append((seq, p, c))
+                        slots[i, j] = slot
+                    kv_stack = np.stack(
+                        [self._plane_stack(self._host_k[(p, layer, c)],
+                                           self._host_v[(p, layer, c)])
+                         for _, p, c in up_keys])  # (m, planes, c, Hkv, hd)
+                    m = len(up_keys)
+                    n_comp = 0
+                    if self.real_codec:
+                        n_comp = int(round(min(1.0, max(0.0, theta)) * m))
+                    if n_comp:
+                        from repro.kernels.kv_quant.ops import kv_dequant
+                        dq = lambda d, s: kv_dequant(
+                            jnp.asarray(d), jnp.asarray(s),
+                            codec=self.transit_codec,
+                            out_dtype=self.dtype).reshape(
+                                n_comp, self.chunk, self.kv_heads,
+                                self.head_dim)
+                        kv_dev = jnp.stack(
+                            [dq(*compression.quantize_chunks(
+                                kv_stack[:n_comp, pl], self.transit_codec))
+                             for pl in range(self.planes)], axis=1)
+                        if n_comp < m:
+                            kv_dev = jnp.concatenate(
+                                [kv_dev, jnp.asarray(kv_stack[n_comp:])])
+                    else:
+                        kv_dev = kv_stack
+                    if place_kv:           # deferred placements ride along
+                        pk = np.stack(place_kv)
+                        kv_dev = jnp.concatenate([kv_dev, jnp.asarray(pk)]) \
+                            if isinstance(kv_dev, jnp.ndarray) \
+                            else np.concatenate([kv_dev, pk])
+                        up_slots = up_slots + place_slots
+                    # bucket the scatter shape so repeated rounds reuse the
+                    # compiled program instead of recompiling per delta size
+                    pad_to = -(-len(up_slots) // self.upload_pad) \
+                        * self.upload_pad
+                    self._bill_flushed_rows(
+                        pool.scatter(up_slots, kv_dev, pad_to=pad_to))
+                except BaseException:
+                    scrub_partial()
+                    raise
                 per_comp = self._packed_bytes() if self.real_codec \
                     else self._transit_bytes()
                 per_plain = float(self.chunk_bytes) if self.real_codec \
@@ -1328,9 +1676,13 @@ class TieredKVStore:
             elif place_slots:
                 pad_to = -(-len(place_slots) // self.upload_pad) \
                     * self.upload_pad
-                self._bill_flushed_rows(
-                    pool.scatter(place_slots, np.stack(place_kv),
-                                 pad_to=pad_to))
+                try:
+                    self._bill_flushed_rows(
+                        pool.scatter(place_slots, np.stack(place_kv),
+                                     pad_to=pad_to))
+                except BaseException:
+                    scrub_partial()
+                    raise
             elif pool.pending:
                 self._bill_flushed_rows(pool.scatter([], None))
             st.upload_s = time.perf_counter() - t1
@@ -1403,6 +1755,12 @@ class TieredKVStore:
             self._disk[sq, layer, cs, 0, offs] = kd
             if self.planes == 2:
                 self._disk[sq, layer, cs, 1, offs] = vd
+            if self._crc_state is not None:
+                # append-dirtied: the replica changed under its checksum;
+                # serve unverified until the requant sweep re-packs (and
+                # re-checksums) the chunk once quiet — a CRC read-back
+                # per appended row would double the append write traffic
+                self._crc_state[sq, layer, cs] = _CRC_DIRTY
             if self.disk_sidecar:
                 # the chunk's per-channel scales no longer cover the new
                 # row — reads fall back to the lossless fp16 replica until
@@ -1454,14 +1812,22 @@ class TieredKVStore:
             return 0
         # prune landed repacks so the in-flight list stays bounded on a
         # long-running server (one append per sweep otherwise), surfacing
-        # any worker exception instead of swallowing it
-        still = []
+        # any worker exception instead of swallowing it — exception-safe:
+        # the whole list is pruned even when an early future raised, then
+        # the first failure re-raises
+        still, first = [], None
         for f in self._requant_futs:
             if f.done():
-                f.result()
+                try:
+                    f.result()
+                except BaseException as e:
+                    if first is None:
+                        first = e
             else:
                 still.append(f)
         self._requant_futs = still
+        if first is not None:
+            raise first
         with self._lock:
             self._sweep_round += 1
             r = self._sweep_round
@@ -1499,6 +1865,18 @@ class TieredKVStore:
                              float(self.chunk_bytes))
             packed = [compression.quantize_chunks(p[None], self.transit_codec)
                       for p in planes]
+            # the repack already paid for reading the whole replica — use
+            # it to refresh the chunk's checksums for free: the replica
+            # CRC leaves append-dirtied (state 2) for valid (state 1),
+            # and the sidecar CRC covers the freshly-packed payload
+            rep_crc = self._crc32(np.stack(planes)) \
+                if self._crc is not None else None
+            side_crc = None
+            if self._q_crc is not None:
+                side_crc = self._sidecar_crc(
+                    np.stack([pd.reshape(self.chunk, -1)
+                              for pd, _ in packed]),
+                    np.stack([psc[0] for _, psc in packed]))
             with self._lock:
                 if self._chunk_version[key] != vers[key]:
                     continue            # raced an append mid-repack
@@ -1507,16 +1885,30 @@ class TieredKVStore:
                                                                  -1)
                     self._disk_scale[seq, layer, c, pl] = psc[0]
                 self._sidecar_valid[seq, layer, c] = True
+                if rep_crc is not None:
+                    self._crc[seq, layer, c] = rep_crc
+                    self._crc_state[seq, layer, c] = _CRC_VALID
+                if side_crc is not None:
+                    self._q_crc[seq, layer, c] = side_crc
                 self.sidecar_repacks += 1
                 self._record(seq, HOST, DISK, "sidecar_repack",
                              self._packed_bytes())
 
     @any_thread
     def requant_fence(self) -> None:
-        """Drain in-flight background repacks (shutdown / test ordering)."""
+        """Drain in-flight background repacks (shutdown / test ordering).
+        Exception-safe: every future is awaited even when one raises —
+        nothing is left in flight — and the first failure re-raises."""
         futs, self._requant_futs = self._requant_futs, []
+        first: Optional[BaseException] = None
         for f in futs:
-            f.result()
+            try:
+                f.result()
+            except BaseException as e:
+                if first is None:
+                    first = e
+        if first is not None:
+            raise first
 
     # ------------------------------------------------------------------
     @decode_thread_only
@@ -1558,6 +1950,71 @@ class TieredKVStore:
                 self._chunk_version[key] += 1
             if seq in self.seq_logs:
                 self.retired_logs.append(self.seq_logs.pop(seq))
+            # fault-domain state is per-slot: a reused slot must not
+            # inherit the old request's degradation or lost-chunk marks
+            self.degraded_seqs.discard(seq)
+            self._disk_lost = {k for k in self._disk_lost if k[0] != seq}
+            if self._crc_state is not None:
+                self._crc_state[seq] = _CRC_NONE
+
+    # ------------------------------------------------------------------
+    # fault-domain recovery surface
+    # ------------------------------------------------------------------
+    @any_thread
+    def restore_chunk(self, layer: int, seq: int, c: int,
+                      k_rows: np.ndarray, v_rows: np.ndarray) -> None:
+        """Re-land one disk-lost chunk from recomputed prompt KV.
+
+        ``k_rows``/``v_rows`` are the chunk's ``(chunk, Hkv, hd)`` rows
+        (possibly short for the tail chunk — zero-padded here exactly
+        like ingest so the replica CRC matches a fresh ingest).  Rebuilds
+        the fp16 replica, abstracts, and replica CRC; the packed sidecar
+        is left quarantined (``_sidecar_valid`` False) — the requant
+        sweep repacks it lazily off the restored replica.
+        """
+        kc = np.asarray(k_rows, dtype=self.dtype)
+        vc = np.asarray(v_rows, dtype=self.dtype)
+        if kc.shape[0] < self.chunk:
+            pad = np.zeros((self.chunk - kc.shape[0],) + kc.shape[1:],
+                           dtype=self.dtype)
+            kc = np.concatenate([kc, pad], axis=0)
+            vc = np.concatenate([vc, pad], axis=0)
+        with self._lock:
+            p = self._phys(seq, c)
+            self._disk[p, layer, c, 0] = kc
+            if self.planes > 1:
+                self._disk[p, layer, c, 1] = vc
+            self._abs_km[p, layer, c] = kc.max(axis=0)
+            self._abs_kn[p, layer, c] = kc.min(axis=0)
+            self._sidecar_valid[p, layer, c] = False
+            # abort any in-flight repack that read the pre-restore bytes:
+            # its version check fails and it never re-marks stale CRCs
+            if (p, layer, c) in self._chunk_version:
+                self._chunk_version[(p, layer, c)] += 1
+            if self._crc is not None:
+                self._crc[p, layer, c] = self._crc32(
+                    self._plane_stack(kc, vc))
+                self._crc_state[p, layer, c] = _CRC_VALID
+            self._disk_lost.discard((p, layer, c))
+            self.fault_counters["chunks_recomputed"] += 1
+            self._record(seq, HOST, DISK, "kv_recompute",
+                         float(self.chunk_bytes))
+
+    @any_thread
+    def disk_lost_keys(self) -> Set[Tuple[int, int, int]]:
+        """Snapshot of ``(phys_row, layer, chunk)`` keys marked disk-lost."""
+        with self._lock:
+            return set(self._disk_lost)
+
+    @any_thread
+    def fault_stats(self) -> Dict[str, float]:
+        """Fault-domain counters for ``stats()`` / ``engine_audit``."""
+        with self._stats_lock:
+            out = {k: float(v) for k, v in self.fault_counters.items()}
+        with self._lock:
+            out["disk_lost"] = float(len(self._disk_lost))
+            out["degraded_seqs"] = float(len(self.degraded_seqs))
+        return out
 
     def device_bytes(self) -> int:
         resident = len(self._dev_k) + sum(
@@ -1572,8 +2029,17 @@ class TieredKVStore:
         return dict(out)
 
     def close(self) -> None:
-        self.ingest_fence_all()        # never tear the memmaps out from
-        self.requant_fence()           # under an in-flight cold write
+        # the fences still drain every in-flight write before the memmaps
+        # go away, but close() itself is best-effort: a fault that already
+        # failed a worker must not block shutdown of the survivors
+        try:
+            self.ingest_fence_all()
+        except Exception:
+            pass
+        try:
+            self.requant_fence()
+        except Exception:
+            pass
         if self.debug_sync:
             _san.disable()
             self.debug_sync = False    # idempotent on double-close
@@ -1582,3 +2048,10 @@ class TieredKVStore:
             del self._disk_q
             del self._disk_scale
             self._disk_q = self._disk_scale = None
+        if self._crc is not None:
+            del self._crc
+            del self._crc_state
+            self._crc = self._crc_state = None
+        if self._q_crc is not None:
+            del self._q_crc
+            self._q_crc = None

@@ -62,6 +62,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.pipeline import chunked_admission_model
+from repro.serving.faults import AdmissionError
 from repro.serving.sanitizer import any_thread, decode_thread_only
 
 
@@ -71,16 +72,34 @@ class Request:
     prompt: np.ndarray
     max_new: int
     eos_id: Optional[int] = None
+    deadline_s: Optional[float] = None  # wall-clock budget from submit; an
+                                       # expired request is cancelled at
+                                       # whatever lifecycle stage it is in
+                                       # (queued / mid-admission / decoding)
     out: List[int] = field(default_factory=list)
     t_submit: float = field(default_factory=time.perf_counter)
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    error: Optional[str] = None        # terminal failure/cancellation
+                                       # reason (None = completed normally)
+    degraded: bool = False             # served with degraded numerics (a
+                                       # corrupt sidecar fell back to the
+                                       # lossless fp16 replica)
+    sid: Optional[int] = None          # engine slot the request decoded in
+                                       # (observability: lets audits map
+                                       # store/fault events back to the
+                                       # request; slots are reused)
 
     @property
     def done(self) -> bool:
         if self.out and self.eos_id is not None and self.out[-1] == self.eos_id:
             return True
         return len(self.out) >= self.max_new
+
+    @property
+    def expired(self) -> bool:
+        return (self.deadline_s is not None
+                and time.perf_counter() - self.t_submit > self.deadline_s)
 
 
 @dataclass
@@ -139,6 +158,11 @@ class SchedulerCfg:
     max_round_inflation: float = 0.5   # tolerated round-time inflation
                                        # before the pacing gate closes
     ewma_alpha: float = 0.25           # round-time EWMA smoothing
+    max_queue: int = 0                 # bounded admission-queue
+                                       # backpressure: submit() rejects
+                                       # (returns False, req.error set)
+                                       # once this many requests wait;
+                                       # 0 = unbounded (legacy behavior)
     credit_prefix: bool = True         # when the engine runs the shared-
                                        # prefix cache, credit a request's
                                        # predicted warm span (chunks whose
@@ -204,11 +228,30 @@ class ContinuousBatcher:
         # first sight so a request's charge stays stable across rounds
         # even as the shared-prefix index churns underneath it
         self._prefix_credit: Dict[int, int] = {}
+        # fault-domain request accounting: rejected submissions (bounded
+        # queue) and cancelled requests (deadline expiry) — surfaced
+        # through stats() next to the engine/store fault counters
+        self.rejected: List[Request] = []
+        self._requests_rejected = 0
+        self._requests_cancelled = 0
 
     @any_thread
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request; returns False (with ``req.error`` set) when
+        the bounded queue is full — structured backpressure instead of an
+        unbounded deque under overload.  The length check and append are
+        not atomic together, so the bound is approximate by at most the
+        number of concurrent producers (each submit adds one)."""
+        if self.cfg.max_queue > 0 and len(self.queue) >= self.cfg.max_queue:
+            req.error = (f"rejected: admission queue at "
+                         f"max_queue={self.cfg.max_queue}")
+            req.t_done = time.perf_counter()
+            self.rejected.append(req)
+            self._requests_rejected += 1
+            return False
         # deque.append is atomic; any producer thread may enqueue
         self.queue.append(req)
+        return True
 
     # ------------------------------------------------------------------
     # Admission
@@ -304,6 +347,7 @@ class ContinuousBatcher:
                 continue
             if self.engine is not None:
                 handle, tok = self.engine.add_sequence(req.prompt)
+                req.sid = handle
             else:
                 handle = self.make_engine()
                 tok = handle.prefill(req.prompt)
@@ -324,7 +368,19 @@ class ContinuousBatcher:
         still = []
         for i, (req, fut) in enumerate(self._pending):
             if fut.done() or (block and i == 0 and not self._ready):
-                sid, tok = fut.result()
+                try:
+                    sid, tok = fut.result()
+                except AdmissionError as e:
+                    # the admission worker failed mid-prefill: reclaim
+                    # exactly that slot (drain its write-behind futures,
+                    # release pool/arena holds) and fail just this request
+                    self.engine.abort_admission(e.sid)
+                    req.error = f"admission failed: {e.cause!r}"
+                    req.t_done = time.perf_counter()
+                    self._prefix_credit.pop(req.rid, None)
+                    self.finished.append(req)
+                    continue
+                req.sid = sid
                 req.t_first = time.perf_counter()
                 req.out.append(tok)
                 self._ready.append((req, sid, tok))
@@ -394,6 +450,7 @@ class ContinuousBatcher:
             if adm.done:
                 self._chunked.pop(0)
                 sid, tok = adm.result
+                req.sid = sid
                 req.t_first = time.perf_counter()
                 req.out.append(tok)
                 self._ready.append((req, sid, tok))
@@ -421,11 +478,86 @@ class ContinuousBatcher:
                     self._round_ewma
                     <= self._idle_ewma * (1.0 + self.cfg.max_round_inflation))
 
+    def _cancel(self, req: Request, reason: str) -> None:
+        """Terminal cancellation bookkeeping shared by every deadline
+        path — the caller has already released whatever the request
+        held."""
+        req.error = reason
+        req.t_done = time.perf_counter()
+        self._prefix_credit.pop(req.rid, None)
+        self.finished.append(req)
+        self._requests_cancelled += 1
+
+    def _sweep_deadlines(self) -> None:
+        """Cancel every expired request at whatever lifecycle stage it
+        reached: queued requests just drop; mid-admission requests drain
+        their ingest/prefetch futures and release pool slots + prefix-
+        arena refcounts (``abort_admission`` / ``ChunkedAdmission.cancel``
+        — I1–I5 hold throughout); active/ready ones release normally.  A
+        pending async admission is only reclaimed once its future has
+        resolved — the slot is worker-owned until then (checked again
+        next round)."""
+        if not any(r.expired for r in
+                   list(self.queue)
+                   + [r for r, *_ in self._pending + self._ready
+                      + self._chunked]
+                   + [r for r, _, _ in self.active.values()]):
+            return
+        for r in list(self.queue):      # remove in place: submit() may be
+            if r.expired:               # appending from another thread
+                try:
+                    self.queue.remove(r)
+                except ValueError:
+                    continue
+                self._cancel(r, "deadline expired while queued")
+        still_p = []
+        for req, fut in self._pending:
+            if req.expired and fut.done():
+                try:
+                    sid, _tok = fut.result()
+                    self.engine.release(sid)
+                except AdmissionError as e:
+                    self.engine.abort_admission(e.sid)
+                self._cancel(req, "deadline expired during admission")
+            else:
+                still_p.append((req, fut))
+        self._pending = still_p
+        still_r = []
+        for req, sid, tok in self._ready:
+            if req.expired:
+                self.engine.release(sid)
+                self._cancel(req, "deadline expired before first round")
+            else:
+                still_r.append((req, sid, tok))
+        self._ready = still_r
+        still_c = []
+        for req, adm in self._chunked:
+            if req.expired:
+                adm.cancel()
+                self._cancel(req, "deadline expired mid-admission")
+            else:
+                still_c.append((req, adm))
+        self._chunked = still_c
+        for rid in [rid for rid, (req, _, _) in self.active.items()
+                    if req.expired]:
+            req, handle, _ = self.active.pop(rid)
+            if self.engine is not None:
+                self.engine.release(handle)
+            elif hasattr(handle, "store") and handle.store is not None:
+                handle.store.close()
+            self._cancel(req, "deadline expired while decoding")
+
     def _retire(self, rids: List[int]) -> None:
+        store = getattr(self.engine, "store", None) \
+            if self.engine is not None else None
         for rid in rids:
             req, handle, _ = self.active.pop(rid)
             req.t_done = time.perf_counter()
             self._prefix_credit.pop(rid, None)
+            # degraded-numerics flag must be read BEFORE release: the
+            # store clears per-slot fault state when the slot recycles
+            if store is not None and hasattr(store, "degraded_seqs"):
+                req.degraded = handle in store.degraded_seqs
             self.finished.append(req)
             if self.engine is not None:
                 self.engine.release(handle)
@@ -443,6 +575,7 @@ class ContinuousBatcher:
     @decode_thread_only
     def step(self) -> int:
         """One decode round over all active requests; returns #active."""
+        self._sweep_deadlines()
         self._admit()
         self._collect_admitted(block=not self.active and bool(self._pending))
         retired = [rid for rid, (req, _, _) in self.active.items() if req.done]
@@ -457,6 +590,18 @@ class ContinuousBatcher:
                 {sid: tok for (_, sid, tok) in live.values()})
             self._note_round(time.perf_counter() - t0, admission_active)
             for rid, (req, sid, _) in live.items():
+                if sid not in toks:
+                    # the engine contained this sequence's failure
+                    # (fail_sequence already drained and recycled the
+                    # slot — releasing again would double-free); surface
+                    # the terminal state on just this request
+                    req.error = self.engine.failed.pop(
+                        sid, "sequence failed")
+                    req.t_done = time.perf_counter()
+                    self._prefix_credit.pop(rid, None)
+                    self.active.pop(rid)
+                    self.finished.append(req)
+                    continue
                 tok = toks[sid]
                 req.out.append(tok)
                 self.active[rid] = (req, sid, tok)
@@ -505,6 +650,10 @@ class ContinuousBatcher:
         store = getattr(self.engine, "store", None)
         if store is not None and hasattr(store, "prefix_stats"):
             pacing.update(store.prefix_stats())
+        if self.engine is not None and hasattr(self.engine, "fault_stats"):
+            pacing.update(self.engine.fault_stats())
+        pacing["requests_cancelled"] = float(self._requests_cancelled)
+        pacing["requests_rejected"] = float(self._requests_rejected)
         done = [r for r in self.finished
                 if r.t_first is not None and r.t_done is not None]
         if not done:

@@ -1,0 +1,334 @@
+"""Fault injection + integrity layer: store-level containment.
+
+Covers docs/INVARIANTS.md I6 at the `TieredKVStore` boundary:
+
+- `FaultPlan` determinism (same seed -> byte-identical schedule) and
+  per-site kind pools;
+- CRC rejection of corrupted replicas (-> `ChunkLostError`) and
+  sidecars (-> lossless fp16 fallback, seq flagged degraded);
+- `restore_chunk` recovery round-trip;
+- bounded retry: one transient error is value-identical after retry,
+  persistent errors exhaust into the degrade paths;
+- crash consistency: a reopened store rejects torn (never-checksummed)
+  chunks instead of serving garbage;
+- exception-safe `ingest_fence` (regression: used to leave later
+  futures in flight when the first one raised) and the pooled-fetch
+  partial-failure scrub (regression: used to leak slots + dangling
+  residency when the stack/codec/scatter raised after allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.serving.faults import (FAULT_KINDS, FAULT_SITES, ChunkLostError,
+                                  DiskIOExhausted, FaultPlan, IngestError,
+                                  TransientDiskError, WorkerFault,
+                                  _SITE_KINDS)
+from repro.serving.offload import DISK, HOST, TieredKVStore
+
+L, NC, CH, HKV, HD = 2, 4, 8, 2, 4     # layers, chunks, chunk, Hkv, hd
+
+
+def _mk(root=None, reopen=False, faults=None, **kw):
+    kw.setdefault("io_backoff_s", 0.0)
+    return TieredKVStore(L, NC, CH, HKV, HD, n_seqs=2, disk_sidecar=True,
+                         transit_codec="int8", root=root, reopen=reopen,
+                         faults=faults, **kw)
+
+
+def _kv(seed=0):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(NC * CH, HKV, HD).astype(np.float16),
+            rng.randn(NC * CH, HKV, HD).astype(np.float16))
+
+
+def _ingest_all(st, k, v, seq=0, **kw):
+    for li in range(L):
+        st.ingest(li, k, v, {c: DISK for c in range(NC)}, seq=seq, **kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_from_seed_deterministic():
+    a = FaultPlan.from_seed(7, rate=0.2)
+    b = FaultPlan.from_seed(7, rate=0.2)
+    assert a.schedule == b.schedule
+    # a handful of seeds must not all collapse onto one schedule
+    assert len({str(FaultPlan.from_seed(s, rate=0.2).schedule)
+                for s in range(8)}) > 1
+
+
+def test_fault_plan_site_kind_pools():
+    # seeded schedules draw from the per-site pools: no "exception" at
+    # decode-thread read sites, no "bitflip" at write/worker sites
+    for seed in range(20):
+        plan = FaultPlan.from_seed(seed, rate=0.5, horizon=50)
+        for site, hits in plan.schedule.items():
+            for kind in hits.values():
+                assert kind in _SITE_KINDS[site]
+
+
+def test_fault_plan_check_consumes_indices():
+    plan = FaultPlan(schedule={"disk_read": {1: "io_error"}})
+    assert plan.check("disk_read") is None
+    assert plan.check("disk_read", key="k") == "io_error"
+    assert plan.check("disk_read") is None
+    assert plan.calls()["disk_read"] == 3
+    [ev] = plan.fired_events()
+    assert (ev.site, ev.index, ev.kind, ev.key) == ("disk_read", 1,
+                                                    "io_error", "k")
+
+
+def test_fault_plan_rejects_unknown_names():
+    with pytest.raises(ValueError):
+        FaultPlan(schedule={"nope": {0: "io_error"}})
+    with pytest.raises(ValueError):
+        FaultPlan(schedule={"disk_read": {0: "nope"}})
+    assert set(_SITE_KINDS) == set(FAULT_SITES)
+    assert all(k in FAULT_KINDS for ks in _SITE_KINDS.values() for k in ks)
+
+
+# ---------------------------------------------------------------------------
+# checksum rejection + recovery
+# ---------------------------------------------------------------------------
+
+def test_clean_fetch_counts_nothing():
+    st = _mk()
+    k, v = _kv()
+    _ingest_all(st, k, v)
+    ks, _ = st.fetch_chunks(0, [0, 1], seq=0)
+    assert ks.shape == (2, CH, HKV, HD)
+    fs = st.fault_stats()
+    assert fs["io_retries"] == fs["checksum_failures"] == 0
+    assert fs["chunks_recomputed"] == fs["disk_lost"] == 0
+    st.close()
+
+
+def test_replica_corruption_raises_chunk_lost():
+    st = _mk()
+    k, v = _kv()
+    _ingest_all(st, k, v)
+    st._disk[0, 1, 2, 0].reshape(-1)[3] += np.float16(1.0)
+    st._sidecar_valid[0, 1, 2] = False      # force the replica path
+    with pytest.raises(ChunkLostError) as ei:
+        st.fetch_chunks(1, [2], seq=0)
+    assert ei.value.layer == 1 and ei.value.keys == [(0, 0, 2)]
+    assert st.disk_lost_keys() == {(0, 1, 2)}
+    assert st.fault_stats()["checksum_failures"] == 1
+    # re-detection of an already-lost chunk must not double count
+    with pytest.raises(ChunkLostError):
+        st.fetch_chunks(1, [2], seq=0)
+    assert st.fault_stats()["checksum_failures"] == 1
+    st.close()
+
+
+def test_restore_chunk_roundtrip():
+    st = _mk()
+    k, v = _kv()
+    _ingest_all(st, k, v)
+    st._disk[0, 1, 2, 0].reshape(-1)[3] += np.float16(1.0)
+    st._sidecar_valid[0, 1, 2] = False
+    with pytest.raises(ChunkLostError):
+        st.fetch_chunks(1, [2], seq=0)
+    kc, vc = k[2 * CH:3 * CH], v[2 * CH:3 * CH]
+    st.restore_chunk(1, 0, 2, kc, vc)
+    ks, vs = st.fetch_chunks(1, [2], seq=0)
+    assert np.array_equal(ks[0], kc) and np.array_equal(vs[0], vc)
+    fs = st.fault_stats()
+    assert fs["chunks_recomputed"] == 1 and fs["disk_lost"] == 0
+    # recovery traffic is billed under its own kind
+    assert st.log.total(src=HOST, kind="kv_recompute") == st.chunk_bytes
+    st.close()
+
+
+def test_sidecar_bitflip_falls_back_lossless():
+    plan = FaultPlan(schedule={"sidecar_read": {0: "bitflip"}})
+    st = _mk(faults=plan)
+    k, v = _kv()
+    _ingest_all(st, k, v, seq=1)
+    ks, _ = st.fetch_chunks(0, [0], seq=1)
+    # the fallback serves the fp16 replica: lossless, not the codec
+    assert np.array_equal(ks[0], k[:CH])
+    assert 1 in st.degraded_seqs
+    assert st.fault_stats()["checksum_failures"] == 1
+    assert st.log.total(src=DISK, kind="kv_fallback") > 0
+    [ev] = plan.fired_events()
+    assert ev.site == "sidecar_read" and ev.key is not None
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# bounded retry
+# ---------------------------------------------------------------------------
+
+def test_transient_error_retries_value_identical():
+    ref = _mk()
+    k, v = _kv()
+    _ingest_all(ref, k, v)
+    ref._sidecar_valid[:] = False
+    want, _ = ref.fetch_chunks(0, [1], seq=0)
+    ref.close()
+
+    plan = FaultPlan(schedule={"disk_read": {0: "io_error"}})
+    st = _mk(faults=plan)
+    _ingest_all(st, k, v)
+    st._sidecar_valid[:] = False
+    got, _ = st.fetch_chunks(0, [1], seq=0)
+    assert np.array_equal(got, want)
+    fs = st.fault_stats()
+    assert fs["io_retries"] == 1 and fs["checksum_failures"] == 0
+    st.close()
+
+
+def test_persistent_errors_exhaust_to_chunk_lost():
+    plan = FaultPlan(schedule={"disk_read": {i: "io_error"
+                                             for i in range(10)}})
+    st = _mk(faults=plan, io_retries=3)
+    k, v = _kv()
+    _ingest_all(st, k, v)
+    st._sidecar_valid[:] = False
+    with pytest.raises(ChunkLostError):
+        st.fetch_chunks(0, [1], seq=0)
+    assert st.fault_stats()["io_retries"] == 4     # io_retries + 1 attempts
+    st.close()
+
+
+def test_retry_wrapper_raises_exhausted():
+    st = _mk(io_retries=2)
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise TransientDiskError("blip")
+
+    with pytest.raises(DiskIOExhausted):
+        st._with_retries(always_fails)
+    assert len(calls) == 3
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# crash consistency
+# ---------------------------------------------------------------------------
+
+def test_reopen_rejects_torn_chunk():
+    st = _mk()
+    k, v = _kv()
+    _ingest_all(st, k, v)
+    root = st._root
+    # simulate a kill between the hot placement and the cold CRC landing:
+    # the replica bytes may be anything, the CRC state never left "none"
+    st._crc_state[0, 0, 3] = 0
+    st._crc.flush()
+    st._disk.flush()
+
+    st2 = _mk(root=root, reopen=True)
+    st2._sidecar_valid[:] = False
+    ks, _ = st2.fetch_chunks(0, [0, 1, 2], seq=0)   # intact chunks serve
+    assert np.array_equal(ks[0], k[:CH])
+    with pytest.raises(ChunkLostError):
+        st2.fetch_chunks(0, [3], seq=0)
+    assert (0, 0, 3) in st2.disk_lost_keys()
+    st2.close()
+
+
+def test_clear_seq_resets_fault_state():
+    st = _mk()
+    k, v = _kv()
+    _ingest_all(st, k, v)
+    st._disk[0, 0, 1, 0].reshape(-1)[0] += np.float16(1.0)
+    st._sidecar_valid[0, 0, 1] = False
+    with pytest.raises(ChunkLostError):
+        st.fetch_chunks(0, [1], seq=0)
+    st.degraded_seqs.add(0)
+    st.clear_seq(0)
+    fs = st.fault_stats()
+    assert fs["disk_lost"] == 0 and fs["degraded_seqs"] == 0
+    # the row restarts with no stale CRC claims about reused storage
+    assert int(st._crc_state[0].max()) == 0
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# exception-safe fence (regression) + worker faults
+# ---------------------------------------------------------------------------
+
+def test_ingest_fence_drains_all_futures_then_raises():
+    # REGRESSION: the fence used to re-raise the first future's error
+    # immediately, leaving the seq's remaining write-behind futures in
+    # flight while the caller reclaimed the row.  It must await ALL of
+    # them, then surface one typed IngestError.
+    plan = FaultPlan(schedule={"disk_write": {i: "io_error"
+                                              for i in range(64)}})
+    st = _mk(faults=plan, io_retries=1)
+    k, v = _kv()
+    with ThreadPoolExecutor(2) as ex:
+        _ingest_all(st, k, v, executor=ex)
+        with pytest.raises(IngestError) as ei:
+            st.ingest_fence(0)
+        assert ei.value.seq == 0
+        assert isinstance(ei.value.cause, DiskIOExhausted)
+        assert not st._ingest_futs.get(0)    # drained, not abandoned
+        st.ingest_fence(0)                   # second fence: clean no-op
+    st.close()
+
+
+def test_worker_fault_surfaces_at_fence():
+    plan = FaultPlan(schedule={"worker": {0: "exception"}})
+    st = _mk(faults=plan)
+    k, v = _kv()
+    with ThreadPoolExecutor(1) as ex:
+        _ingest_all(st, k, v, executor=ex)
+        with pytest.raises(IngestError) as ei:
+            st.ingest_fence_all()
+        assert isinstance(ei.value.cause, WorkerFault)
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# pooled-fetch partial-failure scrub (regression)
+# ---------------------------------------------------------------------------
+
+def test_pooled_fetch_scrubs_partial_failure():
+    # REGRESSION: an exception between slot allocation and the slab
+    # scatter used to leak the freshly-allocated slots (residency kept
+    # pointing at rows the scatter never wrote, the free list never got
+    # them back).  The scrub must evict the half-uploaded slots to HOST
+    # and leave the pool conservation invariant intact.
+    st = _mk(use_pool=True, pool_slots=NC)
+    k, v = _kv()
+    _ingest_all(st, k, v)
+    st.ingest_fence_all()
+    pool = st.pools[0]
+    real = st._plane_stack
+    boom = {"armed": True}
+
+    def exploding(kc, vc):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("jit dispatch failed mid-upload")
+        return real(kc, vc)
+
+    st._plane_stack = exploding
+    with pytest.raises(RuntimeError):
+        st.fetch_chunks_pooled(0, {0: [0, 1]})
+    # conservation: every slot is either free or scatter-backed resident
+    assert len(pool.free) + len(pool.slot_of) == pool.n_slots
+    assert not pool.slot_of                  # nothing half-uploaded stayed
+    assert all(st.tier[0, 0, c] == HOST for c in (0, 1))
+    # the retry serves the correct bytes from the intact host/disk copies
+    # (sidecar path: int8 round-trip, so compare against the host copy)
+    st._plane_stack = real
+    slots, nsel, _ = st.fetch_chunks_pooled(0, {0: [0, 1]})
+    got = np.asarray(pool.kv[slots[0, 0], 0])
+    assert np.array_equal(got, st._host_k[(0, 0, 0)].astype(st.dtype))
+    assert np.allclose(got.astype(np.float32), k[:CH].astype(np.float32),
+                       atol=0.05)
+    st.close()
