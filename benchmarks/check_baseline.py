@@ -15,6 +15,9 @@ Usage:
     python benchmarks/run.py --smoke | tee bench.csv
     python benchmarks/check_baseline.py bench.csv            # gate
     python benchmarks/check_baseline.py bench.csv --update   # refresh json
+    python benchmarks/check_baseline.py bench.csv --prefix=fig15/overload
+        # gate only metrics under a name prefix (for CI jobs that run a
+        # single bench module and produce a partial CSV)
 """
 
 from __future__ import annotations
@@ -62,6 +65,13 @@ BOUNDS = {
     # floor (ISSUE-8 acceptance bar): checksums-on over checksums-off
     # per-round wall-clock, best-of-2 each side (fig13_pipeline.py)
     "fig13/checksum/overhead": ("<=", 1.10),
+    # overload robustness (ISSUE-9 acceptance bar): the preempting
+    # scheduler's goodput on the all-at-once burst replay must stay
+    # >= 0.8x its steady-paced goodput, and every request across all
+    # three harness runs must land in exactly one terminal bucket
+    # (completed + shed + failed == submitted)
+    "fig15/overload/burst_over_steady": (">=", 0.8),
+    "fig15/overload/unaccounted": ("<=", 0.0),
 }
 
 
@@ -109,6 +119,18 @@ def main() -> int:
 
     with open(baseline_path) as fh:
         base = json.load(fh)
+    # --prefix= narrows the gate to one name subtree so a CI job running
+    # a single bench module (partial CSV) doesn't fail on MISSING rows
+    # that other modules emit
+    prefix = None
+    for a in sys.argv[1:]:
+        if a.startswith("--prefix="):
+            prefix = a.split("=", 1)[1]
+    if prefix is not None:
+        for key in ("metrics_us", "counts_max", "bounds"):
+            if key in base:
+                base[key] = {n: v for n, v in base[key].items()
+                             if n.startswith(prefix)}
     tol = float(base.get("tolerance", 4.0))
     failures = []
     for name, want_us in base["metrics_us"].items():

@@ -52,11 +52,17 @@ ALLOWED_KINDS = {
     # kv_fallback: an fp16-replica promotion serving in place of a
     # quarantined packed sidecar (lossless degrade — full replica bytes
     # where the sidecar read would have been cheaper).
+    # kv_swapout/kv_swapin: whole-sequence preemption — suspend drops a
+    # victim's host copies (the write-through replica is already current,
+    # so kv_swapout is a ZERO-byte audit op per released chunk, like
+    # prefix_ref), and resume re-stages exactly those chunks disk→host
+    # (CRC-verified read; kv_swapin bills the bytes that really cross).
     ("HOST", "DISK"): {"kv_replica", "kv_append", "sidecar_repack",
                        "abstract", "prefix_ref", "cow_copy",
-                       "kv_recompute"},
+                       "kv_recompute", "kv_swapout"},
     ("DISK", "HOST"): {"kv", "abstract", "sidecar_repack_read",
-                       "kv_shared", "cow_read", "kv_fallback"},
+                       "kv_shared", "cow_read", "kv_fallback",
+                       "kv_swapin"},
     ("HOST", "DEVICE"): {"kv", "kv_append", "abstract", "kv_shared"},
     ("DEVICE", "HOST"): {"kv", "kv_append"},
 }

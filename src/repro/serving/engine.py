@@ -466,6 +466,10 @@ class BatchedLeoAMEngine:
         self.failed: Dict[int, str] = {}
         self.seqs_failed = 0
         self.ingest_errors = 0
+        # overload control: preempted sequences park here ({sid:
+        # _SeqState}); they keep their engine slot — the store row holds
+        # their only full replica — but release every hot-tier resource
+        self.suspended: Dict[int, _SeqState] = {}
 
     @property
     def free_slots(self) -> int:
@@ -779,6 +783,7 @@ class BatchedLeoAMEngine:
         self._abs_cache.clear()
         self.store.clear_seq(sid)
         self.seqs.pop(sid, None)
+        self.suspended.pop(sid, None)
         for key in [k for k in self._prev_sels if k[0] == sid]:
             self._prev_sels.pop(key, None)
         if sid not in self._free:
@@ -821,6 +826,7 @@ class BatchedLeoAMEngine:
         self._drain_seq(sid)
         self.store.clear_seq(sid)
         self.seqs.pop(sid, None)
+        self.suspended.pop(sid, None)
         for key in [k for k in self._prev_sels if k[0] == sid]:
             self._prev_sels.pop(key, None)
         if sid not in self._free:
@@ -838,12 +844,57 @@ class BatchedLeoAMEngine:
         self._abs_cache.clear()
         self.store.clear_seq(sid)
         self.seqs.pop(sid, None)
+        self.suspended.pop(sid, None)
         for key in [k for k in self._prev_sels if k[0] == sid]:
             self._prev_sels.pop(key, None)
         if sid not in self._free:
             self._free.append(sid)
         self.failed[sid] = reason
         self.seqs_failed += 1
+
+    # ------------------------------------------------------------------
+    # Whole-sequence preemption (overload control)
+    # ------------------------------------------------------------------
+    @decode_thread_only
+    def suspend_sequence(self, sid: int) -> None:
+        """Preempt ONE live sequence: fence its write-behind ingest, drop
+        its speculative prefetch state, swap its entire hot working set
+        down to the disk tier (pool slots, host copies and prefix-arena
+        refs all released — :meth:`TieredKVStore.swap_out_seq`), and park
+        its decode state in :attr:`suspended`.
+
+        The engine slot stays reserved — the victim's only full replica
+        lives in that store row — so preemption relieves pool slots, host
+        bytes, and the scheduler's batch seat, never ``free_slots``.
+        Transparency (I7): the host-side ``_SeqState`` (model cache,
+        access counts, prompt tokens) is preserved untouched, the store's
+        access/abstract/CRC state is NOT cleared, and the write-through
+        replica already holds every appended row — so suspend + resume is
+        the identity on the token stream (property-tested)."""
+        if sid not in self.seqs:
+            raise KeyError(f"suspend_sequence: seq {sid} is not live "
+                           f"(live={sorted(self.seqs)})")
+        self._drain_seq(sid)
+        self._abs_cache.clear()
+        for key in [k for k in self._prev_sels if k[0] == sid]:
+            self._prev_sels.pop(key, None)
+        st = self.seqs.pop(sid)
+        self.store.swap_out_seq(sid)
+        self.suspended[sid] = st
+
+    @decode_thread_only
+    def resume_sequence(self, sid: int) -> None:
+        """Un-park a suspended sequence: re-stage its remembered host
+        working set from the disk replicas (``swap_in_seq``; a chunk that
+        fails verification degrades to the engine's usual disk-lost
+        recovery on its next fetch) and rejoin the live set — the next
+        decode round continues bitwise where the victim left off."""
+        st = self.suspended.pop(sid, None)
+        if st is None:
+            raise KeyError(f"resume_sequence: seq {sid} is not suspended "
+                           f"(suspended={sorted(self.suspended)})")
+        self.store.swap_in_seq(sid)
+        self.seqs[sid] = st
 
     def fault_stats(self) -> Dict[str, float]:
         """Engine + store fault-domain counters (scheduler/audit-facing)."""

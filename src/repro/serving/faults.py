@@ -28,6 +28,10 @@ Fault sites (the choke points that consult the plan):
                    (``_read_sidecar``)
 ``disk_write``     cold-ingest replica/sidecar landing (``_ingest_cold``)
 ``worker``         executor work item entry (ingest worker body)
+``pressure``       resource-pressure monitor sample
+                   (``overload.PressureMonitor.sample``) — forces
+                   watermark transitions: ``latency`` ⇒ at least yellow,
+                   ``io_error`` ⇒ red
 =================  =====================================================
 
 Fault kinds:
@@ -60,9 +64,11 @@ __all__ = [
     "FaultPlan", "FaultEvent", "FAULT_SITES", "FAULT_KINDS",
     "TransientDiskError", "DiskIOExhausted", "WorkerFault",
     "ChunkLostError", "IngestError", "AdmissionError",
+    "RejectedOverload",
 ]
 
-FAULT_SITES = ("disk_read", "sidecar_read", "disk_write", "worker")
+FAULT_SITES = ("disk_read", "sidecar_read", "disk_write", "worker",
+               "pressure")
 FAULT_KINDS = ("io_error", "latency", "bitflip", "exception")
 
 # Default per-site kind pools for seeded schedules.  Read sites run on
@@ -76,6 +82,10 @@ _SITE_KINDS: Dict[str, Tuple[str, ...]] = {
     "sidecar_read": ("io_error", "latency", "bitflip"),
     "disk_write": ("io_error", "latency"),
     "worker": ("exception", "latency"),
+    # the pressure site never raises: the monitor maps "latency" to a
+    # forced yellow watermark and "io_error" to a forced red — chaos
+    # tests use it to drive preemption/shed transitions on demand
+    "pressure": ("latency", "io_error"),
 }
 
 
@@ -133,6 +143,25 @@ class IngestError(RuntimeError):
         self.seq = int(seq)
         self.cause = cause
         super().__init__(f"cold ingest failed for seq {seq}: {cause!r}")
+
+
+class RejectedOverload(RuntimeError):
+    """A queued request was shed under red resource pressure.
+
+    The structured terminal state of load shedding (scheduler policy §3c):
+    the request never admitted, so no slot/tier state exists for it —
+    ``reasons`` carries the monitor signals that tripped red (e.g.
+    ``{"queue", "pool"}``) so clients and audits can distinguish shed
+    causes.  Stored on ``Request.error`` / the rejected list, never
+    raised across the scheduler boundary.
+    """
+
+    def __init__(self, rid: int, reasons: Tuple[str, ...] = ()):
+        self.rid = int(rid)
+        self.reasons = tuple(reasons)
+        super().__init__(
+            f"request {rid} shed under red overload pressure "
+            f"({', '.join(self.reasons) or 'forced'})")
 
 
 class AdmissionError(RuntimeError):

@@ -464,6 +464,12 @@ class TieredKVStore:
         # differ from the fault-free dequantized read (the chaos test
         # exempts exactly these from token-identity)
         self.degraded_seqs: Set[int] = set()
+        # whole-sequence preemption (overload control): per-seq remembered
+        # hot working set at swap-out time — {seq: {layer: [chunks]}} —
+        # so swap_in_seq restores exactly the residency the victim had
+        self._swapped: Dict[int, Dict[int, List[int]]] = {}
+        self.seq_swapouts = 0
+        self.seq_swapins = 0
         if reopen:
             # hot tiers died with the process; all surviving state is disk
             self.tier[:] = DISK
@@ -1723,6 +1729,101 @@ class TieredKVStore:
                     self._host_v.pop(key, None)
                 self.tier[p, layer, c] = to
 
+    # ------------------------------------------------------------------
+    # Whole-sequence preemption (overload control)
+    # ------------------------------------------------------------------
+    @decode_thread_only
+    def swap_out_seq(self, seq: int) -> int:
+        """Demote a preempted victim's ENTIRE hot working set down-tier.
+
+        The disk replica is write-through (appends land every round), so
+        swap-out moves no payload bytes — like :meth:`demote` it RELEASES
+        resources: shared prefix chunks privatize first (their arena refs
+        drop — a suspended victim must not pin arena rows), device-pool
+        slots and legacy device entries free, and every host copy drops.
+        Each previously host-resident chunk is billed as a zero-byte
+        ``kv_swapout`` audit op (the ``prefix_ref`` precedent: the ledger
+        records the op without claiming traffic that never crossed).  The
+        resident set is remembered so :meth:`swap_in_seq` restores exactly
+        it.  The caller (engine) fences the seq's write-behind ingest
+        first.  Unlike :meth:`clear_seq` this preserves the slot's access
+        counts, abstracts, logs and CRC state — the sequence is paused,
+        not retired.  Returns the number of chunks swapped out."""
+        with self._lock:
+            if self._prefix is not None:
+                for c in list(self._shared_map.get(seq) or {}):
+                    self._cow(seq, c)
+            resident: Dict[int, List[int]] = {}
+            n = 0
+            for layer in range(self.n_layers):
+                pool = self.pools[layer]
+                cs = {c for (s, l, c) in self._host_k
+                      if s == seq and l == layer}
+                cs |= {c for (s, l, c) in self._dev_k
+                       if s == seq and l == layer}
+                if pool is not None:
+                    cs |= {c for (s, c) in pool.slot_of if s == seq}
+                    pool.evict_seq(seq)
+                for c in sorted(cs):
+                    key = (seq, layer, c)
+                    host = key in self._host_k
+                    self._host_k.pop(key, None)
+                    self._host_v.pop(key, None)
+                    self._dev_k.pop(key, None)
+                    self._dev_v.pop(key, None)
+                    self._lru.pop(key, None)
+                    self.tier[seq, layer, c] = DISK
+                    if host:
+                        self._record(seq, HOST, DISK, "kv_swapout", 0.0)
+                if cs:
+                    resident[layer] = sorted(cs)
+                    n += len(cs)
+            self._swapped[seq] = resident
+            self.seq_swapouts += 1
+            return n
+
+    @decode_thread_only
+    def swap_in_seq(self, seq: int) -> int:
+        """Restore a suspended sequence's remembered host working set from
+        the disk replicas (CRC-verified coalesced read; ``kv_swapin``
+        bills the re-staged bytes — unlike swap-out, these really cross).
+
+        A chunk that fails verification stays disk-tier and is marked
+        lost — the next decode fetch routes it through the engine's
+        recompute/containment path exactly like any other disk-lost
+        chunk; an exhausted retry budget likewise degrades to lazy
+        re-reads instead of failing the resume.  Returns the number of
+        chunks restored host-side."""
+        with self._lock:
+            resident = self._swapped.pop(seq, {})
+            n = 0
+            for layer, cs in resident.items():
+                entries = [(seq, seq, c) for c in cs]
+                try:
+                    blk, lost = self._replica_read_verified(layer, entries)
+                except (TransientDiskError, DiskIOExhausted):
+                    # stays disk-tier; decode's own fetch re-reads (and
+                    # retries/degrades) through its containment path
+                    continue
+                for i, c in enumerate(cs):
+                    if i in lost:
+                        continue
+                    key = (seq, layer, c)
+                    self._host_k[key], self._host_v[key] = \
+                        blk[i][0], blk[i][-1]
+                    self.tier[seq, layer, c] = HOST
+                    self._record(seq, DISK, HOST, "kv_swapin",
+                                 float(self.chunk_bytes))
+                    n += 1
+            self.seq_swapins += 1
+            return n
+
+    @any_thread
+    def host_bytes(self) -> int:
+        """Live host-tier copy bytes (pressure-monitor surface)."""
+        with self._lock:
+            return len(self._host_k) * self.chunk_bytes
+
     def append_token(self, layer: int, pos: int, k_new: np.ndarray,
                      v_new: np.ndarray, *, seq: int = 0) -> None:
         """Decode-step cache append: update chunk + abstract in place."""
@@ -1952,6 +2053,7 @@ class TieredKVStore:
                 self.retired_logs.append(self.seq_logs.pop(seq))
             # fault-domain state is per-slot: a reused slot must not
             # inherit the old request's degradation or lost-chunk marks
+            self._swapped.pop(seq, None)
             self.degraded_seqs.discard(seq)
             self._disk_lost = {k for k in self._disk_lost if k[0] != seq}
             if self._crc_state is not None:

@@ -62,8 +62,13 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.pipeline import chunked_admission_model
-from repro.serving.faults import AdmissionError
+from repro.serving.faults import AdmissionError, RejectedOverload
 from repro.serving.sanitizer import any_thread, decode_thread_only
+
+# pressure watermark states (mirrored by serving.overload — the monitor
+# lives there; the string values are the contract, so the scheduler never
+# imports overload.py and LoadHarness can import the scheduler freely)
+_GREEN, _YELLOW, _RED = "green", "yellow", "red"
 
 
 @dataclass
@@ -89,6 +94,18 @@ class Request:
                                        # (observability: lets audits map
                                        # store/fault events back to the
                                        # request; slots are reused)
+    priority: int = 0                  # scheduling class (higher = more
+                                       # important): overload preemption
+                                       # picks victims lowest-class-first
+                                       # and red-pressure shedding drops
+                                       # lowest-class-newest-first
+    t_admit: Optional[float] = None    # when the request left the queue
+                                       # (queue wait = t_admit - t_submit)
+    t_suspend: Optional[float] = None  # set while preempted (suspended)
+    suspended_s: float = 0.0           # total time spent suspended so far
+    rejected_overload: Optional[RejectedOverload] = None
+                                       # structured shed result (red
+                                       # pressure); error carries the text
 
     @property
     def done(self) -> bool:
@@ -97,9 +114,20 @@ class Request:
         return len(self.out) >= self.max_new
 
     @property
+    def paused_s(self) -> float:
+        """Wall time this request has spent preempted (suspended) — its
+        deadline clock stops while swapped out (I7: preemption must not
+        silently consume the victim's latency budget)."""
+        p = self.suspended_s
+        if self.t_suspend is not None:
+            p += time.perf_counter() - self.t_suspend
+        return p
+
+    @property
     def expired(self) -> bool:
         return (self.deadline_s is not None
-                and time.perf_counter() - self.t_submit > self.deadline_s)
+                and time.perf_counter() - self.t_submit - self.paused_s
+                > self.deadline_s)
 
 
 @dataclass
@@ -163,6 +191,14 @@ class SchedulerCfg:
                                        # (returns False, req.error set)
                                        # once this many requests wait;
                                        # 0 = unbounded (legacy behavior)
+    aging_s: float = 5.0               # anti-starvation clock: a suspended
+                                       # request gains one effective
+                                       # priority class per aging_s
+                                       # seconds preempted; once it
+                                       # out-ranks the weakest active
+                                       # victim it swaps back in even
+                                       # under sustained yellow pressure
+                                       # (0 disables aging)
     credit_prefix: bool = True         # when the engine runs the shared-
                                        # prefix cache, credit a request's
                                        # predicted warm span (chunks whose
@@ -185,7 +221,8 @@ class ContinuousBatcher:
     """
 
     def __init__(self, make_engine: Optional[Callable[[], "object"]] = None,
-                 cfg: Optional[SchedulerCfg] = None, *, engine=None):
+                 cfg: Optional[SchedulerCfg] = None, *, engine=None,
+                 monitor=None):
         if (make_engine is None) == (engine is None):
             raise ValueError(
                 "pass exactly one of make_engine= (legacy per-request "
@@ -194,6 +231,15 @@ class ContinuousBatcher:
         self.make_engine = make_engine
         self.engine = engine
         self.cfg = cfg or SchedulerCfg()
+        # optional resource-pressure monitor (serving.overload): any object
+        # with sample(queue_depth) -> (state, reasons) where state is
+        # "green" / "yellow" / "red".  None = no overload control (legacy)
+        self.monitor = monitor
+        if monitor is not None and engine is None:
+            raise ValueError(
+                "overload control (monitor=) needs the shared batched "
+                "engine: legacy per-request engines have no "
+                "suspend/resume surface")
         if self.cfg.chunked_admission and self.cfg.overlap_admission:
             raise ValueError(
                 "SchedulerCfg(chunked_admission=True, "
@@ -234,6 +280,16 @@ class ContinuousBatcher:
         self.rejected: List[Request] = []
         self._requests_rejected = 0
         self._requests_cancelled = 0
+        # overload-control state: preempted requests parked with their
+        # engine slot ({rid: (req, sid, last tok)}); the admission pause
+        # flag (resource yellow/red closes it); watermark observability
+        self._suspended: Dict[int, Tuple[Request, "object", int]] = {}
+        self._admission_paused = False
+        self._pressure_state = _GREEN
+        self._pressure_rounds = {_GREEN: 0, _YELLOW: 0, _RED: 0}
+        self._requests_submitted = 0
+        self._suspensions = 0
+        self._resumes = 0
 
     @any_thread
     def submit(self, req: Request) -> bool:
@@ -242,6 +298,7 @@ class ContinuousBatcher:
         unbounded deque under overload.  The length check and append are
         not atomic together, so the bound is approximate by at most the
         number of concurrent producers (each submit adds one)."""
+        self._requests_submitted += 1
         if self.cfg.max_queue > 0 and len(self.queue) >= self.cfg.max_queue:
             req.error = (f"rejected: admission queue at "
                          f"max_queue={self.cfg.max_queue}")
@@ -306,6 +363,8 @@ class ContinuousBatcher:
                 and hasattr(self.engine, "begin_admission"))
 
     def _can_admit(self) -> bool:
+        if self._admission_paused:
+            return False               # resource pressure: hold admission
         # async/chunked admissions may run prefill_ahead past the decode
         # slots: the ready queue backfills a retiring slot with zero
         # prefill stall
@@ -337,6 +396,7 @@ class ContinuousBatcher:
                     and self.active and (overlap or chunked)):
                 break                  # host has no headroom: hold overlap
             req = self.queue.popleft()
+            req.t_admit = time.perf_counter()
             if chunked:
                 adm = self.engine.begin_admission(req.prompt)
                 self._chunked.append((req, adm))
@@ -478,6 +538,163 @@ class ContinuousBatcher:
                     self._round_ewma
                     <= self._idle_ewma * (1.0 + self.cfg.max_round_inflation))
 
+    # ------------------------------------------------------------------
+    # Overload control: watermark policy, preemption, shedding
+    # ------------------------------------------------------------------
+    def _eff_priority(self, req: Request, now: float) -> float:
+        """Effective scheduling class: the static priority plus one class
+        per ``aging_s`` seconds spent suspended — the anti-starvation
+        clock that guarantees every preempted request eventually
+        out-ranks a sustained-yellow victim and swaps back in."""
+        if req.t_suspend is None or self.cfg.aging_s <= 0:
+            return float(req.priority)
+        return req.priority + (now - req.t_suspend) / self.cfg.aging_s
+
+    def _victim_rid(self) -> Optional[int]:
+        """Preemption victim among active requests: lowest priority class
+        first, longest remaining decode (max_new - produced) as the
+        tie-break — the request whose eviction frees capacity for the
+        longest time at the smallest class cost."""
+        if not self.active:
+            return None
+        return min(self.active,
+                   key=lambda rid: (self.active[rid][0].priority,
+                                    -(self.active[rid][0].max_new
+                                      - len(self.active[rid][0].out))))
+
+    def _suspend(self, rid: int) -> None:
+        """Preempt one active request: the engine swaps its whole working
+        set down-tier (slot retained), the request parks in
+        ``_suspended`` and its deadline clock stops."""
+        req, sid, tok = self.active.pop(rid)
+        self.engine.suspend_sequence(sid)
+        req.t_suspend = time.perf_counter()
+        self._suspended[rid] = (req, sid, tok)
+        self._suspensions += 1
+
+    def _resume(self, rid: int) -> None:
+        """Un-park one suspended request: re-stage its working set and
+        restart its deadline clock; it rejoins the next decode round."""
+        req, sid, tok = self._suspended.pop(rid)
+        self.engine.resume_sequence(sid)
+        req.suspended_s += time.perf_counter() - req.t_suspend
+        req.t_suspend = None
+        self.active[rid] = (req, sid, tok)
+        self._resumes += 1
+
+    def _shed_queue(self, reasons) -> None:
+        """Red pressure: shed queued requests — lowest priority class
+        first, newest arrival first within a class — down to the
+        monitor's yellow queue watermark, each with a structured
+        :class:`RejectedOverload` terminal result."""
+        floor = getattr(getattr(self.monitor, "cfg", None),
+                        "queue_yellow", 0)
+        while len(self.queue) > max(0, floor):
+            victim = min(self.queue,
+                         key=lambda r: (r.priority, -r.t_submit))
+            try:
+                self.queue.remove(victim)
+            except ValueError:
+                break                  # raced a producer; try next round
+            exc = RejectedOverload(victim.rid, tuple(sorted(reasons)))
+            victim.rejected_overload = exc
+            victim.error = str(exc)
+            victim.t_done = time.perf_counter()
+            self.rejected.append(victim)
+            self._requests_rejected += 1
+
+    def _apply_pressure(self) -> None:
+        """One watermark-policy step (runs at the top of every round):
+
+        * **green** — resume suspended requests (highest effective class
+          first) into free decode seats before fresh admissions backfill.
+        * **yellow from queue depth only** — capacity is fine but demand
+          is piling up: priority preemption.  While the best queued
+          request strictly out-ranks the weakest active victim and no
+          seat is free, suspend the victim and move that request to the
+          queue head; admission stays open so it backfills immediately.
+        * **yellow from resources** (pool/host/disk) — pause admission
+          and suspend the weakest victim (keeping at least one active)
+          so the tier store stops thrashing.
+        * **red** — shed the queue down to the yellow watermark with
+          structured ``RejectedOverload`` results, plus the yellow
+          actions.
+
+        Anti-starvation: under sustained yellow a suspended request's
+        effective class grows (``aging_s``); once it out-ranks the
+        weakest active victim by a full class it swaps back in.  And
+        whenever nothing is active or mid-admission, one suspended
+        request force-resumes regardless of pressure — the loop always
+        makes progress (no-starvation half of I7)."""
+        if self.monitor is None:
+            return
+        state, reasons = self.monitor.sample(len(self.queue))
+        self._pressure_state = state
+        self._pressure_rounds[state] = \
+            self._pressure_rounds.get(state, 0) + 1
+        now = time.perf_counter()
+        resource = bool(set(reasons) - {"queue"})
+        self._admission_paused = state == _RED or (state == _YELLOW
+                                                   and resource)
+        if state == _RED:
+            self._shed_queue(reasons)
+        if state == _GREEN:
+            while self._suspended and len(self.active) < self.cfg.max_active:
+                rid = max(self._suspended,
+                          key=lambda r: self._eff_priority(
+                              self._suspended[r][0], now))
+                self._resume(rid)
+        elif resource:
+            # resource pressure: drain the batch one victim per round,
+            # never below a single active sequence (forward progress)
+            if len(self.active) > 1:
+                victim = self._victim_rid()
+                if victim is not None:
+                    self._suspend(victim)
+        elif self.queue:
+            # queue-only yellow: priority preemption.  Suspending frees a
+            # decode seat (not an engine slot), so it only helps when
+            # seats are the constraint and a slot exists for the admit.
+            while (self.queue and self.active
+                   and len(self.active) >= self.cfg.max_active
+                   and self.engine.free_slots > 0):
+                best = max(self.queue,
+                           key=lambda r: (r.priority, -r.t_submit))
+                victim = self._victim_rid()
+                if victim is None or \
+                        best.priority <= self.active[victim][0].priority:
+                    break
+                self._suspend(victim)
+                try:
+                    self.queue.remove(best)
+                    self.queue.appendleft(best)
+                except ValueError:
+                    pass               # raced a producer; order stands
+        if state == _YELLOW and self._suspended and self.active \
+                and self.cfg.aging_s > 0:
+            # aged swap: the most-starved suspended request trades places
+            # with the weakest victim once a full class ahead of it
+            rid_s = max(self._suspended,
+                        key=lambda r: self._eff_priority(
+                            self._suspended[r][0], now))
+            victim = self._victim_rid()
+            if victim is not None and \
+                    self._eff_priority(self._suspended[rid_s][0], now) \
+                    > self.active[victim][0].priority + 1.0:
+                self._suspend(victim)
+                self._resume(rid_s)
+        if self._suspended and not self.active and not self._pending \
+                and not self._ready and not self._chunked \
+                and (not self.queue or self._admission_paused):
+            # termination safety: nothing else can make progress — an
+            # open queue is about to backfill via _admit, but with it
+            # empty (or admission paused) one suspended request resumes
+            # even under red pressure, so the loop never stalls
+            rid = max(self._suspended,
+                      key=lambda r: self._eff_priority(
+                          self._suspended[r][0], now))
+            self._resume(rid)
+
     def _cancel(self, req: Request, reason: str) -> None:
         """Terminal cancellation bookkeeping shared by every deadline
         path — the caller has already released whatever the request
@@ -501,7 +718,8 @@ class ContinuousBatcher:
                    list(self.queue)
                    + [r for r, *_ in self._pending + self._ready
                       + self._chunked]
-                   + [r for r, _, _ in self.active.values()]):
+                   + [r for r, _, _ in self.active.values()]
+                   + [r for r, _, _ in self._suspended.values()]):
             return
         for r in list(self.queue):      # remove in place: submit() may be
             if r.expired:               # appending from another thread
@@ -546,6 +764,16 @@ class ContinuousBatcher:
             elif hasattr(handle, "store") and handle.store is not None:
                 handle.store.close()
             self._cancel(req, "deadline expired while decoding")
+        # a suspended request's deadline clock is paused (paused_s), so
+        # this only fires when the budget was already spent pre-suspend;
+        # engine.release also un-parks the suspended slot
+        for rid in [rid for rid, (req, _, _) in self._suspended.items()
+                    if req.expired]:
+            req, sid, _ = self._suspended.pop(rid)
+            req.suspended_s += time.perf_counter() - req.t_suspend
+            req.t_suspend = None
+            self.engine.release(sid)
+            self._cancel(req, "deadline expired while preempted")
 
     def _retire(self, rids: List[int]) -> None:
         store = getattr(self.engine, "store", None) \
@@ -570,12 +798,13 @@ class ContinuousBatcher:
         the loop condition :meth:`run` uses (public, so external drivers
         don't reach into the admission queues)."""
         return bool(self.queue or self.active or self._pending
-                    or self._ready or self._chunked)
+                    or self._ready or self._chunked or self._suspended)
 
     @decode_thread_only
     def step(self) -> int:
         """One decode round over all active requests; returns #active."""
         self._sweep_deadlines()
+        self._apply_pressure()
         self._admit()
         self._collect_admitted(block=not self.active and bool(self._pending))
         retired = [rid for rid, (req, _, _) in self.active.items() if req.done]
@@ -654,6 +883,34 @@ class ContinuousBatcher:
             pacing.update(self.engine.fault_stats())
         pacing["requests_cancelled"] = float(self._requests_cancelled)
         pacing["requests_rejected"] = float(self._requests_rejected)
+        # terminal accounting: every submitted request must land in
+        # exactly one of {completed, shed, failed}; at quiescence
+        # (pending_work False) unaccounted is ZERO — the overload bench
+        # gates on it
+        completed = sum(1 for r in self.finished if r.error is None)
+        failed = sum(1 for r in self.finished if r.error is not None)
+        shed = len(self.rejected)
+        pacing["requests_submitted"] = float(self._requests_submitted)
+        pacing["requests_completed"] = float(completed)
+        pacing["requests_failed"] = float(failed)
+        pacing["requests_shed"] = float(shed)
+        pacing["requests_unaccounted"] = float(
+            self._requests_submitted - completed - failed - shed)
+        # overload-control observability (stats() is Dict[str, float]:
+        # the state exports as its watermark level, 0/1/2)
+        pacing["pressure_level"] = float(
+            {_GREEN: 0, _YELLOW: 1, _RED: 2}.get(self._pressure_state, 0))
+        for st, n in self._pressure_rounds.items():
+            pacing[f"pressure_rounds_{st}"] = float(n)
+        pacing["suspensions"] = float(self._suspensions)
+        pacing["resumes"] = float(self._resumes)
+        pacing["suspended_now"] = float(len(self._suspended))
+        waited = np.array([r.t_admit - r.t_submit for r in self.finished
+                           if r.t_admit is not None])
+        if len(waited):
+            pacing["p50_queue_wait_s"] = float(np.percentile(waited, 50))
+            pacing["p95_queue_wait_s"] = float(np.percentile(waited, 95))
+            pacing["p99_queue_wait_s"] = float(np.percentile(waited, 99))
         done = [r for r in self.finished
                 if r.t_first is not None and r.t_done is not None]
         if not done:
@@ -672,8 +929,10 @@ class ContinuousBatcher:
                "mean_ttft_s": float(ttft.mean()),
                "p50_ttft_s": float(np.percentile(ttft, 50)),
                "p95_ttft_s": float(np.percentile(ttft, 95)),
+               "p99_ttft_s": float(np.percentile(ttft, 99)),
                "mean_latency_s": float(lat.mean()),
                "p95_latency_s": float(np.percentile(lat, 95)),
+               "p99_latency_s": float(np.percentile(lat, 99)),
                "throughput_tok_s": toks / span}
         if len(dec):
             out.update({"mean_decode_tok_s": float(dec.mean()),

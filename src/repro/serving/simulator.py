@@ -233,3 +233,41 @@ def compare_policies(cfg: ArchConfig, scfg: ServeCfg,
                      hw: Optional[HWCfg] = None) -> Dict[str, Dict[str, float]]:
     hw = hw or HWCfg()
     return {p: simulate_request(cfg, scfg, hw, p) for p in POLICIES}
+
+
+def simulate_trace_goodput(cfg: ArchConfig, scfg: ServeCfg, hw: HWCfg,
+                           arrivals, policy: str = "leoam_all",
+                           servers: int = 1) -> Dict[str, float]:
+    """Analytic goodput over an arrival trace (the simulator half of the
+    fig15 simulator-vs-measured comparison).
+
+    Replays the trace through a ``servers``-way FCFS queue where each
+    request's service time comes from the cost model at ITS OWN prompt
+    length (``prefill + max_new * decode_step``); goodput is the fraction
+    of arrivals whose sojourn (wait + service) lands within their
+    deadline — deadline-free arrivals always count.  ``arrivals`` is any
+    iterable with ``t`` / ``prompt_len`` / ``max_new`` / ``deadline_s``
+    fields (:class:`repro.serving.trace.Arrival`).  Per-length service
+    times are memoized — a zipfian trace repeats lengths heavily."""
+    free = [0.0] * max(1, int(servers))
+    svc_cache: Dict[int, Dict[str, float]] = {}
+    ok = n = 0
+    lat_sum = 0.0
+    for a in sorted(arrivals, key=lambda a: a.t):
+        plen = int(a.prompt_len)
+        r = svc_cache.get(plen)
+        if r is None:
+            r = simulate_request(cfg, replace(scfg, prompt=plen), hw, policy)
+            svc_cache[plen] = r
+        service = r["prefill_s"] + a.max_new * r["decode_step_s"]
+        k = min(range(len(free)), key=free.__getitem__)
+        start = max(a.t, free[k])
+        free[k] = start + service
+        sojourn = free[k] - a.t
+        lat_sum += sojourn
+        n += 1
+        if a.deadline_s is None or sojourn <= a.deadline_s:
+            ok += 1
+    return {"goodput": ok / max(1, n), "requests": float(n),
+            "mean_latency_s": lat_sum / max(1, n),
+            "makespan_s": max(free) if n else 0.0}

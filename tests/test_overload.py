@@ -1,0 +1,570 @@
+"""Overload robustness: preemption transparency, watermark policy, and
+the trace-driven load harness.
+
+The I7 contract (docs/INVARIANTS.md):
+
+- **preemption transparency** — suspending a sequence (whole working set
+  demoted to the disk replica, slot parked) and resuming it later yields
+  a token stream identical to a never-preempted run, for ANY seeded
+  interleaving of suspend/resume/decode across the batch;
+- **no starvation** — a preempted request's deadline clock pauses while
+  swapped out, aging lets it out-rank sustained-yellow victims, and the
+  scheduler force-resumes when nothing else can make progress;
+- **terminal accounting** — every submitted request lands in exactly one
+  of {completed, shed, failed}; red-pressure shedding is structured
+  (:class:`RejectedOverload`), never silent.
+
+The chaos case combines preemption with seeded disk faults under the
+runtime sync-sanitizer (the dedicated CI job runs ``-m chaos``).
+"""
+
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as hst
+
+from repro.serving import sanitizer
+from repro.serving.faults import FaultPlan, RejectedOverload
+from repro.serving.trace import Arrival, TraceCfg, gen_trace
+
+_SETUP = {}
+
+
+def _setup():
+    if not _SETUP:
+        import jax
+        from repro.configs import get_config
+        from repro.models import lm
+        cfg = get_config("longchat-7b-32k", smoke=True)
+        cfg = dataclasses.replace(
+            cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                           importance_rate=0.4,
+                                           early_rate=0.6,
+                                           min_seq_for_sparse=32))
+        _SETUP["cfg"] = cfg
+        _SETUP["params"] = lm.init(cfg, jax.random.PRNGKey(1))
+        rng = np.random.RandomState(11)
+        _SETUP["prompts"] = [rng.randint(2, cfg.vocab_size, n)
+                             for n in (48, 57, 64)]
+    return _SETUP["cfg"], _SETUP["params"], _SETUP["prompts"]
+
+
+def _engine(cfg, params, *, plan=None, max_seqs=2, **ecfg_kw):
+    from repro.serving.engine import BatchedLeoAMEngine, EngineCfg
+    return BatchedLeoAMEngine(
+        cfg, params,
+        EngineCfg(max_len=128, selection="tree", overlap_ingest=True,
+                  disk_sidecar=True, debug_sync=True, fault_plan=plan,
+                  io_backoff_s=0.0, **ecfg_kw),
+        max_seqs=max_seqs)
+
+
+def _assert_engine_clean(eng):
+    """Post-release leak audit: slots, futures, pool, swap ledger."""
+    assert sorted(eng._free) == list(range(eng.max_seqs))
+    assert not eng.seqs and not eng.suspended
+    assert not eng.store._swapped
+    assert all(not futs for futs in eng.store._ingest_futs.values())
+    ps = eng.store.pool_stats()
+    if ps.get("slots"):
+        assert ps["free_slots"] == ps["slots"], ps
+    if hasattr(eng.store, "prefix_stats"):
+        assert eng.store.prefix_stats().get("shared_refs", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# trace generator
+# ---------------------------------------------------------------------------
+
+def test_trace_deterministic_and_bounded():
+    cfg = TraceCfg(n_requests=48, scenario="mixed", min_prompt=32,
+                   max_prompt=512, priorities=(0, 1), deadline_s=9.0)
+    a = gen_trace(cfg, seed=7)
+    b = gen_trace(cfg, seed=7)
+    assert a == b                       # same (cfg, seed) -> same trace
+    assert a != gen_trace(cfg, seed=8)
+    assert len(a) == 48
+    ts = [x.t for x in a]
+    assert ts == sorted(ts) and ts[0] > 0.0
+    assert all(32 <= x.prompt_len <= 512 for x in a)
+    assert all(x.priority in (0, 1) for x in a)
+    assert all(x.deadline_s == 9.0 for x in a)
+
+
+def test_trace_scenarios_shape_lengths():
+    lo, hi = 64, 1024
+    mk = lambda sc: gen_trace(TraceCfg(n_requests=64, scenario=sc,
+                                       min_prompt=lo, max_prompt=hi),
+                              seed=3)
+    chat = [a.prompt_len for a in mk("chat")]
+    doc = [a.prompt_len for a in mk("longdoc")]
+    assert max(chat) <= hi // 4         # chat stays in the bottom band
+    assert min(doc) >= hi // 2          # longdoc stays in the top band
+    # zipfian: the modal chat length is the short end of its band
+    assert sorted(chat)[len(chat) // 2] < hi // 8
+
+
+def test_trace_cfg_validation():
+    with pytest.raises(ValueError):
+        TraceCfg(scenario="video")
+    with pytest.raises(ValueError):
+        TraceCfg(zipf_a=1.0)
+    with pytest.raises(ValueError):
+        TraceCfg(min_prompt=64, max_prompt=32)
+
+
+def test_trace_burst_state_raises_local_rate():
+    """The MMPP burst state must actually change local arrival density:
+    with a hot burst rate the densest observed window beats the calm
+    rate's expectation by a wide margin."""
+    cfg = TraceCfg(n_requests=200, base_rate=2.0, burst_rate=64.0,
+                   calm_dwell_s=1.0, burst_dwell_s=1.0)
+    ts = [a.t for a in gen_trace(cfg, seed=1)]
+    gaps = np.diff(ts)
+    win = 8
+    dens = [win / (ts[i + win] - ts[i]) for i in range(len(ts) - win)]
+    assert max(dens) > 4 * cfg.base_rate
+    assert np.median(gaps) < 1.0 / cfg.base_rate
+
+
+# ---------------------------------------------------------------------------
+# pressure monitor (duck-typed engine: no model needed)
+# ---------------------------------------------------------------------------
+
+class _FakeStore:
+    def __init__(self, host=0, root=None):
+        self._host = host
+        self._root = root
+
+    def host_bytes(self):
+        return self._host
+
+
+class _FakeEngine:
+    def __init__(self, free=8, slots=8, host=0):
+        self._free, self._slots = free, slots
+        self.store = _FakeStore(host)
+
+    def pool_stats(self):
+        return {"slots": self._slots, "free_slots": self._free,
+                "hits": 0, "misses": 0, "hit_rate": 0.0, "resident": 0}
+
+
+def test_monitor_green_by_default():
+    from repro.serving.overload import GREEN, PressureMonitor, WatermarkCfg
+    mon = PressureMonitor(_FakeEngine(), WatermarkCfg(),
+                          disk_free_fn=lambda: 1 << 40)
+    state, reasons = mon.sample(queue_depth=0)
+    assert state == GREEN and not reasons
+    assert mon.state_counts[GREEN] == 1
+
+
+def test_monitor_watermarks_per_signal():
+    from repro.serving.overload import (RED, YELLOW, PressureMonitor,
+                                        WatermarkCfg)
+    cfg = WatermarkCfg(pool_free_yellow=0.5, pool_free_red=0.125,
+                       host_bytes_yellow=100, host_bytes_red=1000,
+                       disk_free_yellow=1 << 20, disk_free_red=1 << 10,
+                       queue_yellow=4, queue_red=16)
+    big = 1 << 40
+    mk = lambda eng, disk=big: PressureMonitor(eng, cfg,
+                                               disk_free_fn=lambda: disk)
+    assert mk(_FakeEngine(free=3, slots=8)).sample(0) == (YELLOW, {"pool"})
+    assert mk(_FakeEngine(free=0, slots=8)).sample(0) == (RED, {"pool"})
+    assert mk(_FakeEngine(host=500)).sample(0) == (YELLOW, {"host"})
+    assert mk(_FakeEngine(host=5000)).sample(0) == (RED, {"host"})
+    assert mk(_FakeEngine(), disk=1 << 15).sample(0) == (YELLOW, {"disk"})
+    assert mk(_FakeEngine(), disk=1 << 5).sample(0) == (RED, {"disk"})
+    assert mk(_FakeEngine()).sample(8) == (YELLOW, {"queue"})
+    assert mk(_FakeEngine()).sample(64) == (RED, {"queue"})
+    # worst state wins, reasons accumulate
+    st, why = mk(_FakeEngine(free=0, slots=8)).sample(8)
+    assert st == RED and why == {"pool", "queue"}
+
+
+def test_monitor_fault_site_forces_transitions():
+    from repro.serving.overload import RED, YELLOW, PressureMonitor, \
+        WatermarkCfg
+    plan = FaultPlan(schedule={"pressure": {0: "latency", 1: "io_error"}})
+    mon = PressureMonitor(_FakeEngine(), WatermarkCfg(), fault_plan=plan,
+                          disk_free_fn=lambda: 1 << 40)
+    assert mon.sample(0) == (YELLOW, {"forced"})
+    assert mon.sample(0) == (RED, {"forced"})
+    assert mon.sample(0)[0] == "green"   # schedule exhausted
+    assert mon.forced == 2
+    assert [e.site for e in plan.fired_events()] == ["pressure"] * 2
+
+
+# ---------------------------------------------------------------------------
+# I7 property: preemption transparency (engine level)
+# ---------------------------------------------------------------------------
+
+def _drive_interleaved(seed, n_tokens=5):
+    """Decode two sequences to exactly ``n_tokens`` each while a seeded
+    interleaving of suspend/resume ops (seed None = never preempt)
+    perturbs which subset decodes each round."""
+    cfg, params, prompts = _setup()
+    eng = _engine(cfg, params)
+    rng = None if seed is None else np.random.RandomState(seed)
+    toks, out, parked = {}, {}, {}
+    for p in prompts[:2]:
+        sid, tok = eng.add_sequence(p)
+        toks[sid], out[sid] = tok, []
+    swaps = 0
+    for _ in range(200):
+        if all(len(v) >= n_tokens for v in out.values()):
+            break
+        if rng is not None:
+            op = rng.randint(4)
+            if op == 0 and toks:
+                sid = sorted(toks)[rng.randint(len(toks))]
+                eng.suspend_sequence(sid)
+                parked[sid] = toks.pop(sid)
+                swaps += 1
+            elif op == 1 and parked:
+                sid = sorted(parked)[rng.randint(len(parked))]
+                eng.resume_sequence(sid)
+                toks[sid] = parked.pop(sid)
+        live = {s: t for s, t in toks.items() if len(out[s]) < n_tokens}
+        if not live:
+            if not parked:
+                continue               # all done, loop exits next pass
+            sid = sorted(parked)[0]    # progress guarantee: force-resume
+            eng.resume_sequence(sid)
+            toks[sid] = parked.pop(sid)
+            continue
+        got = eng.decode_round(live)
+        for sid, t in got.items():
+            out[sid].append(t)
+            toks[sid] = t
+    for sid in sorted(parked):
+        eng.resume_sequence(sid)
+    for sid in sorted(out):
+        eng.release(sid)
+    _assert_engine_clean(eng)
+    so, si = eng.store.seq_swapouts, eng.store.seq_swapins
+    eng.store.close()
+    assert so == si == swaps           # every swap-out had its swap-in
+    return {sid: v[:n_tokens] for sid, v in out.items()}
+
+
+_REF = {}
+
+
+def _reference_tokens():
+    if "out" not in _REF:
+        _REF["out"] = _drive_interleaved(None)
+    return _REF["out"]
+
+
+@settings(max_examples=4, deadline=None)
+@given(hst.integers(min_value=0, max_value=63))
+def test_preemption_transparent_any_interleaving(seed):
+    """I7: ANY seeded interleaving of suspend/resume/decode yields token
+    streams identical to the never-preempted run, and no slot, pool,
+    future, or swap-ledger state leaks."""
+    assert _drive_interleaved(seed) == _reference_tokens()
+
+
+def test_suspend_resume_guards():
+    cfg, params, prompts = _setup()
+    eng = _engine(cfg, params)
+    with pytest.raises(KeyError):
+        eng.suspend_sequence(0)        # not live
+    sid, _ = eng.add_sequence(prompts[0])
+    eng.suspend_sequence(sid)
+    with pytest.raises(KeyError):
+        eng.suspend_sequence(sid)      # already suspended
+    eng.resume_sequence(sid)
+    with pytest.raises(KeyError):
+        eng.resume_sequence(sid)       # not suspended
+    eng.release(sid)
+    _assert_engine_clean(eng)
+    eng.store.close()
+
+
+def test_release_reclaims_suspended_slot():
+    """engine.release on a suspended sid drops the parked state AND the
+    store's swap ledger — the deadline-expiry-while-preempted path."""
+    cfg, params, prompts = _setup()
+    eng = _engine(cfg, params)
+    sid, _ = eng.add_sequence(prompts[0])
+    eng.suspend_sequence(sid)
+    assert eng.store._swapped
+    eng.release(sid)
+    _assert_engine_clean(eng)
+    eng.store.close()
+
+
+def test_swap_bills_zero_out_chunkbytes_in():
+    """kv_swapout is a zero-byte audit op (the write-through replica is
+    already current); kv_swapin bills exactly the chunk bytes it
+    re-stages — billed == crossed, I3."""
+    cfg, params, prompts = _setup()
+    eng = _engine(cfg, params)
+    st = eng.store
+    sid, _ = eng.add_sequence(prompts[0])
+    n_out = st.swap_out_seq(sid)
+    assert n_out > 0
+    log = st.seq_logs[sid]
+    outs = [k for k in log.ops if k[2] == "kv_swapout"]
+    assert outs
+    assert all(log.bytes[k] == 0 and log.ops[k] > 0 for k in outs)
+    n_in = st.swap_in_seq(sid)
+    assert n_in == n_out
+    from repro.serving.offload import DISK, HOST
+    ins = [k for k in log.ops if k[2] == "kv_swapin"]
+    assert ins == [(DISK, HOST, "kv_swapin")]
+    k = ins[0]
+    assert log.bytes[k] == n_in * st.chunk_bytes and log.ops[k] == n_in
+    eng.release(sid)
+    eng.store.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy (deterministic)
+# ---------------------------------------------------------------------------
+
+def _batcher(eng, mon, **kw):
+    from repro.serving.scheduler import ContinuousBatcher, SchedulerCfg
+    cfg = dict(max_active=1, chunk=16)
+    cfg.update(kw)
+    return ContinuousBatcher(cfg=SchedulerCfg(**cfg), engine=eng,
+                             monitor=mon)
+
+
+def test_priority_preemption_and_aging_resume():
+    """Queue-only yellow: a strictly higher class preempts the weakest
+    victim, runs to completion first, and the victim resumes and
+    finishes — suspended time tracked, nothing leaks."""
+    from repro.serving.overload import PressureMonitor, WatermarkCfg
+    from repro.serving.scheduler import Request
+    cfg, params, prompts = _setup()
+    eng = _engine(cfg, params, max_seqs=3)
+    mon = PressureMonitor(eng, WatermarkCfg(queue_yellow=0, queue_red=99),
+                          disk_free_fn=lambda: 1 << 40)
+    b = _batcher(eng, mon)
+    b.submit(Request(0, prompts[0], max_new=6, priority=0))
+    b.step()
+    assert 0 in b.active
+    b.submit(Request(1, prompts[1], max_new=3, priority=5))
+    b.step()
+    assert 0 in b._suspended           # victim preempted for the VIP
+    done = b.run()
+    by = {r.rid: r for r in done}
+    assert by[0].error is None and by[1].error is None
+    assert len(by[0].out) == 6 and len(by[1].out) == 3
+    assert by[1].t_done < by[0].t_done
+    assert by[0].suspended_s > 0 and by[0].t_suspend is None
+    st = b.stats()
+    assert st["suspensions"] >= 1 and st["resumes"] >= 1
+    assert st["requests_unaccounted"] == 0.0
+    assert not b._suspended
+    _assert_engine_clean(eng)
+    eng.store.close()
+
+
+def test_equal_priority_never_preempts():
+    from repro.serving.overload import PressureMonitor, WatermarkCfg
+    from repro.serving.scheduler import Request
+    cfg, params, prompts = _setup()
+    eng = _engine(cfg, params, max_seqs=3)
+    mon = PressureMonitor(eng, WatermarkCfg(queue_yellow=0, queue_red=99),
+                          disk_free_fn=lambda: 1 << 40)
+    b = _batcher(eng, mon)
+    b.submit(Request(0, prompts[0], max_new=6, priority=1))
+    b.step()
+    b.submit(Request(1, prompts[1], max_new=3, priority=1))
+    done = b.run()
+    assert b._suspensions == 0         # same class: FIFO order holds
+    assert all(r.error is None for r in done)
+    _assert_engine_clean(eng)
+    eng.store.close()
+
+
+def test_red_pressure_sheds_structured():
+    """Forced red at the first sample sheds every queued request with a
+    structured RejectedOverload; accounting stays exact."""
+    from repro.serving.overload import PressureMonitor, WatermarkCfg
+    from repro.serving.scheduler import Request
+    cfg, params, prompts = _setup()
+    plan = FaultPlan(schedule={"pressure": {0: "io_error"}})
+    eng = _engine(cfg, params, max_seqs=3, plan=plan)
+    mon = PressureMonitor(eng, WatermarkCfg(queue_yellow=0),
+                          fault_plan=plan, disk_free_fn=lambda: 1 << 40)
+    b = _batcher(eng, mon)
+    for i, p in enumerate(prompts):
+        b.submit(Request(i, p, max_new=3, priority=i))
+    b.run()
+    # shedding is lowest-class-newest-first down to the yellow watermark
+    assert sorted(r.rid for r in b.rejected) == [0, 1, 2]
+    for r in b.rejected:
+        assert isinstance(r.rejected_overload, RejectedOverload)
+        assert r.rejected_overload.rid == r.rid
+        assert "forced" in r.rejected_overload.reasons
+        assert r.t_done is not None and "overload" in r.error
+    st = b.stats()
+    assert st["requests_shed"] == 3.0
+    assert st["requests_unaccounted"] == 0.0
+    assert st["pressure_rounds_red"] >= 1.0
+    _assert_engine_clean(eng)
+    eng.store.close()
+
+
+def test_resource_yellow_pauses_admission_and_drains():
+    """Sustained resource (non-queue) yellow: admission pauses and the
+    batch drains one victim per round but never below one active —
+    then green resumes everything and the queue drains."""
+    from repro.serving.overload import GREEN, PressureMonitor, WatermarkCfg
+    from repro.serving.scheduler import Request
+
+    class _ScriptedMonitor(PressureMonitor):
+        def __init__(self, eng, n_yellow):
+            super().__init__(eng, WatermarkCfg(),
+                             disk_free_fn=lambda: 1 << 40)
+            self.n_yellow = n_yellow
+
+        def sample(self, queue_depth=0):
+            # sample 1 green (both requests admit), then n_yellow rounds
+            # of resource pressure, then green again
+            self.samples += 1
+            if 2 <= self.samples <= 1 + self.n_yellow:
+                return "yellow", {"disk"}
+            return GREEN, set()
+
+    cfg, params, prompts = _setup()
+    eng = _engine(cfg, params, max_seqs=4)
+    mon = _ScriptedMonitor(eng, n_yellow=2)
+    b = _batcher(eng, mon, max_active=2)
+    for i, p in enumerate(prompts[:2]):
+        b.submit(Request(i, p, max_new=6))
+    b.step()
+    assert len(b.active) == 2
+    b.submit(Request(2, prompts[2], max_new=3))
+    b.step()                           # yellow(disk): pause + 1 victim
+    assert b._admission_paused
+    assert len(b._suspended) == 1 and len(b.active) == 1
+    assert all(r.rid == 2 for r in b.queue)   # nothing admitted
+    done = b.run()                     # green: resume + admit + finish
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(r.error is None for r in done)
+    assert b.stats()["requests_unaccounted"] == 0.0
+    _assert_engine_clean(eng)
+    eng.store.close()
+
+
+def test_deadline_clock_pauses_while_suspended():
+    """I7 no-starvation: a suspended request's deadline clock stops —
+    wall time spent preempted does not consume its latency budget."""
+    from repro.serving.scheduler import Request
+    cfg, params, prompts = _setup()
+    eng = _engine(cfg, params, max_seqs=2)
+    b = _batcher(eng, None)
+    b.submit(Request(99, prompts[1], max_new=2))   # jit warmup: the first
+    b.run()                                        # round compiles (~s)
+    req = Request(0, prompts[0], max_new=4)
+    b.submit(req)
+    b.step()
+    assert 0 in b.active
+    b._suspend(0)
+    # budget = time already burned + 0.2s; the 0.3s nap would blow it if
+    # the clock kept running while suspended
+    req.deadline_s = (time.perf_counter() - req.t_submit) + 0.2
+    time.sleep(0.3)
+    assert b.active == {}
+    assert req.paused_s >= 0.3
+    assert not req.expired             # paused clock saved it
+    b._resume(0)
+    by = {r.rid: r for r in b.run()}   # finished includes the warmup
+    assert by[0].error is None and len(by[0].out) == 4
+    assert by[0].suspended_s >= 0.3
+    _assert_engine_clean(eng)
+    eng.store.close()
+
+
+def test_harness_accounting_and_percentiles():
+    """LoadHarness over a bursty trace: exact terminal accounting and
+    the p99 TTFT / queue-wait observability rows exist."""
+    from repro.serving.overload import LoadHarness, PressureMonitor, \
+        WatermarkCfg
+    cfg, params, _ = _setup()
+    eng = _engine(cfg, params, max_seqs=4)
+    mon = PressureMonitor(eng, WatermarkCfg(queue_yellow=6, queue_red=99),
+                          disk_free_fn=lambda: 1 << 40)
+    b = _batcher(eng, mon, max_active=2)
+    arrivals = gen_trace(TraceCfg(n_requests=8, min_prompt=24,
+                                  max_prompt=96, max_new=2,
+                                  deadline_s=120.0), seed=3)
+    res = LoadHarness(b, arrivals, time_scale=0.0, seed=1,
+                      vocab=cfg.vocab_size).run()
+    assert res["requests_submitted"] == 8.0
+    assert res["requests_unaccounted"] == 0.0
+    assert res["goodput"] == res["requests_completed"] / 8.0
+    for key in ("p99_ttft_s", "p50_queue_wait_s", "p99_queue_wait_s",
+                "pressure_level", "suspensions", "harness_rounds"):
+        assert key in res, key
+    _assert_engine_clean(eng)
+    eng.store.close()
+
+
+def test_simulator_trace_goodput_matches_queueing_logic():
+    """The analytic goodput function is a plain FCFS replay: generous
+    deadlines -> goodput 1, impossible deadlines -> goodput 0, and an
+    infinite-rate burst backs up the queue (sojourn grows with index)."""
+    from repro.serving.simulator import HWCfg, ServeCfg, \
+        simulate_trace_goodput
+    cfg, _, _ = _setup()
+    arr = [Arrival(t=0.0, prompt_len=64, max_new=4, deadline_s=None)
+           for _ in range(4)]
+    hw, scfg = HWCfg(), ServeCfg(output=4)
+    r = simulate_trace_goodput(cfg, scfg, hw, arr)
+    assert r["goodput"] == 1.0 and r["requests"] == 4.0
+    tight = [dataclasses.replace(a, deadline_s=1e-12) for a in arr]
+    assert simulate_trace_goodput(cfg, scfg, hw, tight)["goodput"] == 0.0
+    # two servers halve the backlog a simultaneous burst builds
+    m1 = simulate_trace_goodput(cfg, scfg, hw, arr)["makespan_s"]
+    m2 = simulate_trace_goodput(cfg, scfg, hw, arr,
+                                servers=2)["makespan_s"]
+    assert m2 < m1
+
+
+# ---------------------------------------------------------------------------
+# chaos: preemption under seeded disk faults + sanitizer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@settings(max_examples=4, deadline=None)
+@given(hst.integers(min_value=0, max_value=31))
+def test_chaos_preemption_with_disk_faults(seed):
+    """Seeded disk/worker faults + forced pressure transitions against
+    the preempting scheduler (sanitizer on): every request terminates in
+    exactly one of {completed, shed, failed}, and no slot, pool slot,
+    refcount, or swap-ledger entry leaks."""
+    from repro.serving.overload import PressureMonitor, WatermarkCfg
+    from repro.serving.scheduler import Request
+    cfg, params, prompts = _setup()
+    plan = FaultPlan.from_seed(seed, rate=0.04, horizon=300,
+                               latency_s=1e-3)
+    was_active = sanitizer.active()
+    eng = _engine(cfg, params, max_seqs=3, plan=plan)
+    mon = PressureMonitor(eng, WatermarkCfg(queue_yellow=1, queue_red=99),
+                          fault_plan=plan, disk_free_fn=lambda: 1 << 40)
+    b = _batcher(eng, mon, max_active=2)
+    for i, p in enumerate(prompts):
+        b.submit(Request(i, p, max_new=3, priority=i % 2))
+    b.run()
+    try:
+        reqs = list(b.finished) + list(b.rejected)
+        assert {r.rid for r in reqs} == {0, 1, 2}
+        for r in reqs:
+            assert r.t_done is not None
+        st = b.stats()
+        assert st["requests_unaccounted"] == 0.0, st
+        assert not b._suspended
+        _assert_engine_clean(eng)
+    finally:
+        eng.store.close()
+    assert sanitizer.active() == was_active
