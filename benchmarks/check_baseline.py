@@ -72,6 +72,13 @@ BOUNDS = {
     # (completed + shed + failed == submitted)
     "fig15/overload/burst_over_steady": (">=", 0.8),
     "fig15/overload/unaccounted": ("<=", 0.0),
+    # PQ abstract plane (ISSUE-10 acceptance bar): ADC selection
+    # overlap@k against the exact attention ranking must match or beat
+    # the min/max upper-bound ranking on the paired seed panel
+    # (fig14_quality.run_pq_overlap, deterministic seeds), at no more
+    # than half the min/max abstract bytes per chunk
+    "fig14/pq/overlap_gain": (">=", 0.0),
+    "fig14/pq/bytes_ratio": ("<=", 0.5),
 }
 
 

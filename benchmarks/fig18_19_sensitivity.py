@@ -1,11 +1,39 @@
 """Paper Fig. 18 (chunk-size sensitivity) and Fig. 19 (batch-size
-latency/throughput)."""
+latency/throughput), plus the PQ-abstract sensitivity sweep (ISSUE-10):
+selection overlap and bytes/chunk across subvector count ``m`` and
+codebook size ``K`` — the two knobs `EngineCfg(pq_m, pq_centroids)`
+exposes."""
 
 from __future__ import annotations
 
+import numpy as np
+
+from benchmarks import common
 from benchmarks.common import emit
+from benchmarks.fig14_quality import selection_overlap
 from repro.configs import get_config
 from repro.serving.simulator import ServeCfg, simulate_request, HWCfg
+
+
+def run_pq_sensitivity() -> None:
+    """Overlap@k and abstract bytes vs (m, K) on the clustered-key panel.
+
+    Bytes per chunk token per kv head: ``m`` uint8 codes vs 4 fp16
+    bound coordinates per min/max box (2*hd*2 bytes per chunk per head,
+    amortized 4*hd/chunk per token) — more subvectors buy overlap
+    linearly in bytes, more centroids buy it for free per chunk (the
+    codebook is shared per-layer state)."""
+    chunk, hd = 16, 16
+    seeds = range(6) if common.SMOKE else range(16)
+    grid = ((1, 16), (2, 16), (2, 64), (2, 256), (4, 16)) \
+        if common.SMOKE else \
+        ((1, 16), (1, 64), (2, 16), (2, 64), (2, 256), (4, 16), (4, 64))
+    for m, K in grid:
+        mm, pq = zip(*[selection_overlap(s, m=m, K=K, chunk=chunk, hd=hd)
+                       for s in seeds])
+        ratio = (chunk * m) / (4.0 * hd)    # code bytes / box bytes
+        emit(f"fig18/pq_m{m}_K{K}", float(np.mean(pq)),
+             f"minmax={np.mean(mm):.3f} bytes_ratio={ratio:.3f}")
 
 
 def run() -> None:
@@ -27,3 +55,4 @@ def run() -> None:
                                            output=128), hw, "leoam_all")
         emit(f"fig19/batch{batch}", r["total_s"] * 1e6,
              f"tput={r['tokens_per_s']:.2f}tok_s")
+    run_pq_sensitivity()

@@ -32,7 +32,8 @@ from repro.analysis.core import Finding, FuncInfo, Index, walk_in_func
 PASS_ID = "billlint"
 
 #: memmap attributes whose subscript writes/reads are tier crossings
-TRACKED_ATTRS = ("_disk", "_disk_q", "_disk_scale")
+TRACKED_ATTRS = ("_disk", "_disk_q", "_disk_scale", "_pq_codes",
+                 "_pq_codebook")
 
 _TIERS = {"DEVICE", "HOST", "DISK"}
 
@@ -57,12 +58,18 @@ ALLOWED_KINDS = {
     # so kv_swapout is a ZERO-byte audit op per released chunk, like
     # prefix_ref), and resume re-stages exactly those chunks disk→host
     # (CRC-verified read; kv_swapin bills the bytes that really cross).
+    # pq_codes_write/pq_codes_read: the PQ abstract plane — uint8
+    # nearest-centroid codes landing next to (not instead of) the min/max
+    # boxes at cold ingest / requant re-encode, and the per-round code
+    # gather that replaces an "abstract" read for code-valid disk chunks
+    # (a degraded chunk bills "abstract" instead, so fallbacks are
+    # visible in the ledger).
     ("HOST", "DISK"): {"kv_replica", "kv_append", "sidecar_repack",
                        "abstract", "prefix_ref", "cow_copy",
-                       "kv_recompute", "kv_swapout"},
+                       "kv_recompute", "kv_swapout", "pq_codes_write"},
     ("DISK", "HOST"): {"kv", "abstract", "sidecar_repack_read",
                        "kv_shared", "cow_read", "kv_fallback",
-                       "kv_swapin"},
+                       "kv_swapin", "pq_codes_read"},
     ("HOST", "DEVICE"): {"kv", "kv_append", "abstract", "kv_shared"},
     ("DEVICE", "HOST"): {"kv", "kv_append"},
 }

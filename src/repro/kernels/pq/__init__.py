@@ -1,0 +1,5 @@
+from repro.kernels.pq.ops import (adc_chunk_scores, pq_assign, pq_decode,
+                                  pq_encode, pq_train, pq_update)
+
+__all__ = ["pq_assign", "pq_update", "pq_train", "pq_encode", "pq_decode",
+           "adc_chunk_scores"]

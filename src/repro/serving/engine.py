@@ -104,6 +104,7 @@ from repro.core import pipeline as dtp
 from repro.core.adaptive import flat_select_chunks, tree_select_chunks
 from repro.core.bounds import chunk_bounds_gqa_matmul
 from repro.core.tiers import AccessTable
+from repro.kernels.pq import adc_chunk_scores
 from repro.models import lm
 from repro.models import attention as attn_mod
 from repro.serving.faults import AdmissionError, ChunkLostError
@@ -163,6 +164,24 @@ class EngineCfg:
     sidecar_lossless: bool = False   # flag the fallback on: promotions
                                      # read the fp16 replica (full bytes)
                                      # even when the sidecar is valid
+    pq_abstracts: bool = False       # PQ abstract plane: per-layer online
+                                     # k-means codebooks over ingested key
+                                     # chunks; importance evaluation scores
+                                     # code-valid chunks via the ADC lookup
+                                     # table (codes are a fraction of the
+                                     # min/max box bytes), falling back
+                                     # BITWISE to the bounds matmul for
+                                     # append-dirtied/corrupt chunks; off
+                                     # = the exact min/max path, untouched
+    pq_m: Optional[int] = None       # key subvectors per head dim (None =
+                                     # head_dim // 8)
+    pq_centroids: int = 256          # codebook entries per subspace
+                                     # (uint8 codes: <= 256; the codebook
+                                     # is shared per-layer state, so more
+                                     # centroids sharpen ADC at zero
+                                     # per-chunk byte cost)
+    pq_train_iters: int = 4          # Lloyd iterations on the first
+                                     # (codebook-initializing) ingest
     prefix_cache: bool = False       # content-addressable cross-request
                                      # shared-prefix reuse: warm prompts
                                      # adopt matching chunk-aligned spans
@@ -444,7 +463,10 @@ class BatchedLeoAMEngine:
                          if ecfg.prefix_cache else 0),
             debug_sync=ecfg.debug_sync, checksums=ecfg.checksums,
             faults=ecfg.fault_plan, io_retries=ecfg.io_retries,
-            io_backoff_s=ecfg.io_backoff_s)
+            io_backoff_s=ecfg.io_backoff_s,
+            abstract_kind=("pq" if ecfg.pq_abstracts else "minmax"),
+            pq_m=ecfg.pq_m, pq_centroids=ecfg.pq_centroids,
+            pq_train_iters=ecfg.pq_train_iters)
         self.seqs: Dict[int, _SeqState] = {}
         self._free: List[int] = list(range(max_seqs - 1, -1, -1))
         # DTP state: prefetch executor, per-(seq, layer) previous-round
@@ -997,7 +1019,9 @@ class BatchedLeoAMEngine:
 
         @worker_thread
         def work():
-            res = self.store.read_abstracts_batch(li, chunks_by_seq)
+            res = (self.store.read_abstracts_pq_batch(li, chunks_by_seq)
+                   if self.ecfg.pq_abstracts
+                   else self.store.read_abstracts_batch(li, chunks_by_seq))
             self._abs_cache[li] = (key, res)
             self.store.stage_host(li, pred)
 
@@ -1023,22 +1047,42 @@ class BatchedLeoAMEngine:
         n_valid = {sid: (int(L) + chunk - 1) // chunk
                    for sid, L in zip(order, lengths)}
         chunks_by_seq = {sid: list(range(n_valid[sid])) for sid in order}
+        use_pq = self.ecfg.pq_abstracts
         fut = self._pf_futs.pop(li, None)
         if fut is not None:
             fut.result()
         cached = self._abs_cache.pop(li, None)
         key = tuple((sid, n_valid[sid]) for sid in order)
         if cached is not None and cached[0] == key:
-            km, kn, abs_billed = cached[1]
+            res = cached[1]
         else:   # speculation miss (round composition changed): sync read.
                 # The worker's read stays billed — two reads really
                 # happened; that is the cost of a wrong speculation.
-            km, kn, abs_billed = self.store.read_abstracts_batch(
-                li, chunks_by_seq)
+            res = (self.store.read_abstracts_pq_batch(li, chunks_by_seq)
+                   if use_pq
+                   else self.store.read_abstracts_batch(li, chunks_by_seq))
+        if use_pq:
+            km, kn, pq_codes, pq_valid, pq_cb, abs_billed = res
+        else:
+            km, kn, abs_billed = res
+            pq_valid = None
 
         qj = jnp.asarray(q)                                  # (B, H, d)
         ub, _ = chunk_bounds_gqa_matmul(qj, jnp.asarray(km), jnp.asarray(kn))
         ub = np.asarray(ub)                                  # (B, Hkv, ncmax)
+        adc = None
+        if use_pq and pq_valid.any():
+            # asymmetric-distance scores off the PQ codes: the exact-logit
+            # analog of the bounds path's group sum — q summed per kv
+            # group against decoded centroids, max over a chunk's live
+            # tokens.  Only code-valid chunks use it; the rest keep the
+            # min/max upper bound BITWISE (np.where below selects whole
+            # values, never mixes them).
+            B, H = q.shape[0], q.shape[1]
+            Hkv = km.shape[2]
+            q_sum = q.reshape(B, Hkv, H // Hkv, -1).sum(2)   # (B, Hkv, d)
+            adc = adc_chunk_scores(q_sum, pq_cb, pq_codes,
+                                   np.asarray(lengths))      # (B, Hkv, nc)
 
         rate = (cfg.leoam.early_rate if layer < cfg.leoam.early_layers
                 else cfg.leoam.importance_rate)
@@ -1049,6 +1093,9 @@ class BatchedLeoAMEngine:
             nv = n_valid[sid]
             length = int(lengths[i])
             scores = ub[i].max(0)[:nv]                       # (nv,)
+            if adc is not None:
+                v = pq_valid[i, :nv]
+                scores = np.where(v, adc[i].max(0)[:nv], scores)
             budget_tokens = max(chunk, int(math.ceil(length * rate)))
             # chunk-level fast path: equivalent to the per-token
             # repeat+select (tested) without the length-S allocation
@@ -1433,10 +1480,11 @@ class BatchedLeoAMEngine:
             s.stats.append(round_stats[sid])
             out[sid] = int(np.argmax(logits[i]))
         self._round_idx += 1
-        if ecfg.disk_sidecar and ecfg.sidecar_requant:
-            # background repack of append-dirtied sidecars (chunks quiet
-            # for a full round): long-running sequences regain packed
-            # disk->host promotions instead of fp16-forever
+        if ecfg.sidecar_requant and (ecfg.disk_sidecar or ecfg.pq_abstracts):
+            # background repack of append-dirtied sidecars and/or PQ
+            # re-encode of append-dirtied codes (chunks quiet for a full
+            # round): long-running sequences regain packed disk->host
+            # promotions / ADC scoring instead of fp16/min-max forever
             self.store.requant_sweep(executor=_prefetch_executor())
         return out
 

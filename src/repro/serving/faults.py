@@ -26,6 +26,9 @@ Fault sites (the choke points that consult the plan):
                    / ``fetch_chunks``)
 ``sidecar_read``   coalesced packed int4/int8 sidecar gather
                    (``_read_sidecar``)
+``pq_read``        coalesced PQ-code memmap gather
+                   (``read_abstracts_pq_batch``) — degrades importance
+                   evaluation to the min/max boxes, never fails a round
 ``disk_write``     cold-ingest replica/sidecar landing (``_ingest_cold``)
 ``worker``         executor work item entry (ingest worker body)
 ``pressure``       resource-pressure monitor sample
@@ -67,8 +70,8 @@ __all__ = [
     "RejectedOverload",
 ]
 
-FAULT_SITES = ("disk_read", "sidecar_read", "disk_write", "worker",
-               "pressure")
+FAULT_SITES = ("disk_read", "sidecar_read", "pq_read", "disk_write",
+               "worker", "pressure")
 FAULT_KINDS = ("io_error", "latency", "bitflip", "exception")
 
 # Default per-site kind pools for seeded schedules.  Read sites run on
@@ -80,6 +83,7 @@ FAULT_KINDS = ("io_error", "latency", "bitflip", "exception")
 _SITE_KINDS: Dict[str, Tuple[str, ...]] = {
     "disk_read": ("io_error", "latency", "bitflip"),
     "sidecar_read": ("io_error", "latency", "bitflip"),
+    "pq_read": ("io_error", "latency", "bitflip"),
     "disk_write": ("io_error", "latency"),
     "worker": ("exception", "latency"),
     # the pressure site never raises: the monitor maps "latency" to a

@@ -103,6 +103,7 @@ import numpy as np
 
 from repro.core import compression
 from repro.core.tiers import shared_prefix_savings
+from repro.kernels.pq import pq_encode, pq_train
 from repro.serving import sanitizer as _san
 from repro.serving.faults import (ChunkLostError, DiskIOExhausted,
                                   IngestError, TransientDiskError,
@@ -345,7 +346,9 @@ class TieredKVStore:
                  prefix_rows: int = 0, debug_sync: bool = False,
                  checksums: bool = True, faults=None,
                  io_retries: int = 3, io_backoff_s: float = 1e-4,
-                 reopen: bool = False):
+                 reopen: bool = False, abstract_kind: str = "minmax",
+                 pq_m: Optional[int] = None, pq_centroids: int = 256,
+                 pq_train_iters: int = 4, pq_impl: Optional[str] = None):
         # sync-sanitizer: refcounted enable so overlapping debug stores
         # compose; locks get wrapped in TrackedLock further down
         self.debug_sync = bool(debug_sync)
@@ -455,8 +458,68 @@ class TieredKVStore:
                     os.path.join(self._root, "kv_q_crc.bin"),
                     dtype=np.uint32, mode=_mode,
                     shape=(rows, n_layers, n_chunks))
+        # PQ abstract plane (abstract_kind="pq"): per-layer product-
+        # quantization codebooks learned online from ingested key chunks,
+        # plus per-(row, layer, chunk) uint8 codes on disk — the SECOND
+        # abstract representation next to the min/max boxes (which stay
+        # as the exactness fallback for append-dirtied / unreadable /
+        # corrupt codes).  ``_pq_valid`` gates ADC reads exactly like
+        # ``_sidecar_valid`` gates packed promotions: any mutation of a
+        # chunk's replica clears it, and the requant sweep re-encodes
+        # once the chunk goes quiet (docs/INVARIANTS.md I8).
+        if abstract_kind not in ("minmax", "pq"):
+            raise ValueError(f"unknown abstract_kind {abstract_kind!r}")
+        self.pq = abstract_kind == "pq"
+        self.pq_m = 0
+        self.pq_centroids = int(pq_centroids)
+        self.pq_train_iters = int(pq_train_iters)
+        self.pq_impl = pq_impl
+        self._pq_codes = self._pq_codebook = self._pq_crc = None
+        self._pq_cb = self._pq_counts = None
+        self._pq_valid = None
+        self.pq_reencodes = 0
+        if self.pq:
+            self.pq_m = int(pq_m) if pq_m is not None \
+                else max(1, head_dim // 8)
+            if head_dim % self.pq_m:
+                raise ValueError(
+                    f"pq_m={self.pq_m} must divide head_dim={head_dim}")
+            if not 0 < self.pq_centroids <= 256:
+                raise ValueError("pq_centroids must fit uint8 codes")
+            dsub = head_dim // self.pq_m
+            self._pq_codes = np.memmap(
+                os.path.join(self._root, "kv_pq.bin"), dtype=np.uint8,
+                mode=_mode, shape=(rows, n_layers, n_chunks, chunk,
+                                   kv_heads, self.pq_m))
+            self._pq_codebook = np.memmap(
+                os.path.join(self._root, "kv_pq_cb.bin"), dtype=np.float32,
+                mode=_mode, shape=(n_layers, self.pq_m, self.pq_centroids,
+                                   dsub))
+            # RAM mirrors: codebook reads (selection, encode) never touch
+            # the memmap; counts make the online k-means a running mean.
+            # A REOPENED store starts with every code invalid (min/max
+            # serves until the sweep re-encodes) but keeps the persisted
+            # codebook so re-encodes continue it.
+            self._pq_cb = np.array(self._pq_codebook)
+            self._pq_counts = np.zeros((n_layers, self.pq_m,
+                                        self.pq_centroids), np.float64)
+            self._pq_valid = np.zeros((rows, n_layers, n_chunks), bool)
+            if self.checksums:
+                self._pq_crc = np.memmap(
+                    os.path.join(self._root, "kv_pq_crc.bin"),
+                    dtype=np.uint32, mode=_mode,
+                    shape=(rows, n_layers, n_chunks))
+        # codebook mutations (train/merge) serialize on a leaf lock so
+        # cold-ingest workers never hold the store lock across them; the
+        # k-means kernels themselves run OUTSIDE any lock
+        # (snapshot-compute-merge) per docs/INVARIANTS.md I1
+        self._pq_lock = threading.Lock()
+        if self.debug_sync:
+            self._pq_lock = _san.TrackedLock(self._pq_lock,
+                                             "TieredKVStore._pq_lock")
         self.fault_counters: Dict[str, int] = {
-            "io_retries": 0, "checksum_failures": 0, "chunks_recomputed": 0}
+            "io_retries": 0, "checksum_failures": 0, "chunks_recomputed": 0,
+            "pq_fallbacks": 0}
         self._stats_lock = threading.Lock()   # counters only; leaf lock
         self._disk_lost: Set[Tuple[int, int, int]] = set()
         # sequences served degraded numerics this lifetime: a quarantined
@@ -523,6 +586,12 @@ class TieredKVStore:
         """One chunk's LKA abstract: the (min, max) box pair over the key
         plane (latent plane for MLA) — the 2 here is min+max, not planes."""
         return 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
+
+    @property
+    def pq_bytes(self) -> int:
+        """One chunk's PQ abstract: uint8 codes per (token, kv head, m)
+        subvector — the bytes a ``pq_codes_read`` promotion moves."""
+        return self.chunk * self.kv_heads * self.pq_m
 
     @property
     def row_bytes(self) -> int:
@@ -620,7 +689,8 @@ class TieredKVStore:
             raise TransientDiskError(f"injected transient {site} error")
         elif kind == "exception":
             raise WorkerFault(f"injected worker fault at {site}")
-        elif kind == "bitflip" and site in ("disk_read", "sidecar_read"):
+        elif kind == "bitflip" and site in ("disk_read", "sidecar_read",
+                                            "pq_read"):
             self._flip_bit(site, key)
 
     def _flip_bit(self, site: str, key) -> None:  # leolint: waive[billlint] reason=fault-injection hook: corrupts stored bytes in place to model silent media corruption; no tier transfer occurs, nothing is promoted or billed
@@ -629,7 +699,10 @@ class TieredKVStore:
         if not key:
             return
         p, layer, c = key[0]
-        if site == "sidecar_read" and self._disk_q is not None:
+        if site == "pq_read" and self._pq_codes is not None:
+            buf = self._pq_codes[p, layer, c].reshape(-1)
+            buf[0] = np.uint8(int(buf[0]) ^ 0x01)
+        elif site == "sidecar_read" and self._disk_q is not None:
             buf = self._disk_q[p, layer, c].reshape(-1)
             buf[0] = np.int8(int(buf[0]) ^ 0x40)
         else:
@@ -870,6 +943,32 @@ class TieredKVStore:
                               for pd, _ in packed])
                 s = np.stack([psc[i] for _, psc in packed])
                 q_crcs.append(self._sidecar_crc(d, s))
+        # PQ abstract plane: fold this batch's key vectors into the
+        # layer's online codebook and encode every chunk.  The k-means
+        # kernels (jax) run OUTSIDE any lock; the codebook mirror is
+        # snapshotted and merged back under the leaf _pq_lock (last
+        # writer wins — codebook drift is estimator error, never a
+        # correctness hazard: attention always reads real KV).
+        pq_codes_arr = pq_crcs = None
+        if self.pq:
+            vecs = kcs.reshape(-1, self.head_dim).astype(np.float32)
+            # tail-chunk zero padding (and all-zero admission rows) must
+            # not poison the codebook: train on non-zero rows only
+            train = vecs[np.any(vecs != 0.0, axis=1)]
+            with self._pq_lock:
+                cb0 = self._pq_cb[layer].copy()
+                cnt0 = self._pq_counts[layer].copy()
+            cb1, cnt1 = pq_train(train, cb0, cnt0,
+                                 iters=self.pq_train_iters,
+                                 impl=self.pq_impl)
+            pq_codes_arr = pq_encode(vecs, cb1, impl=self.pq_impl).reshape(
+                n, self.chunk, self.kv_heads, self.pq_m)
+            with self._pq_lock:
+                self._pq_cb[layer] = cb1
+                self._pq_counts[layer] = cnt1
+                self._pq_codebook[layer] = cb1
+            if self._pq_crc is not None:
+                pq_crcs = [self._crc32(pq_codes_arr[i]) for i in range(n)]
         # transient write errors retry at the choke point; exhaustion
         # (DiskIOExhausted) surfaces at the fence, not into decode
         self._with_retries(
@@ -896,10 +995,24 @@ class TieredKVStore:
                     for i, c in enumerate(cids):
                         self._q_crc[seq, layer, c] = q_crcs[i]
                 rep_bytes = self._packed_bytes()
+            if pq_codes_arr is not None:
+                self._pq_codes[seq, layer, idx] = pq_codes_arr
+                self._pq_valid[seq, layer, idx] = True
+                if pq_crcs is not None:
+                    for i, c in enumerate(cids):
+                        self._pq_crc[seq, layer, c] = pq_crcs[i]
+                # write-through codebook persistence, billed once per
+                # cold batch (it is shared state, ~K*d floats)
+                self._record(bill, HOST, DISK, "pq_codes_write",
+                             4.0 * self.pq_m * self.pq_centroids
+                             * (self.head_dim // self.pq_m))
             for _c in cids:
                 self._record(bill, HOST, DISK, "kv_replica", rep_bytes)
                 self._record(bill, HOST, DISK, "abstract",
                              self.abstract_bytes)
+                if pq_codes_arr is not None:
+                    self._record(bill, HOST, DISK, "pq_codes_write",
+                                 float(self.pq_bytes))
 
     @any_thread
     def ingest_fence(self, seq: int) -> None:
@@ -1111,6 +1224,8 @@ class TieredKVStore:
                     pool.evict((row, c))
                 self.tier[row, layer, c] = HOST
                 self._sidecar_valid[row, layer, c] = False
+                if self._pq_valid is not None:
+                    self._pq_valid[row, layer, c] = False
                 if self._crc_state is not None:
                     self._crc_state[row, layer, c] = _CRC_NONE
                 self._disk_lost.discard((row, layer, c))
@@ -1146,6 +1261,14 @@ class TieredKVStore:
                     self._disk_scale[row, layer, c]
                 self._sidecar_valid[seq, layer, c] = \
                     self._sidecar_valid[row, layer, c]
+            if self.pq:
+                # the private copy inherits the arena chunk's codes and
+                # their validity/CRC — same bytes, same codes
+                self._pq_codes[seq, layer, c] = self._pq_codes[row, layer, c]
+                self._pq_valid[seq, layer, c] = \
+                    self._pq_valid[row, layer, c]
+                if self._pq_crc is not None:
+                    self._pq_crc[seq, layer, c] = self._pq_crc[row, layer, c]
             if self._crc is not None:
                 # the private copy inherits the arena chunk's checksum
                 # state — same bytes, same CRC
@@ -1235,6 +1358,99 @@ class TieredKVStore:
                                  self.abstract_bytes)
                 billed[seq] = n_disk * float(self.abstract_bytes)
             return km, kn, billed
+
+    @any_thread
+    def read_abstracts_pq_batch(self, layer: int,
+                                chunks_by_seq: Dict[int, Sequence[int]]
+                                ) -> Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray, np.ndarray,
+                                           np.ndarray, Dict[int, float]]:
+        """Batched PQ abstract read: codes + validity next to the min/max
+        boxes, so the engine can score valid chunks via ADC and fall back
+        to the bounds matmul BITWISE for the rest (append-dirtied, torn,
+        corrupt, or unreadable codes).  Returns ``(kmax, kmin, codes,
+        valid, codebook, billed)``; codes is (B, ncmax, chunk, Hkv, m)
+        uint8, valid (B, ncmax) bool, codebook the layer's live (m, K,
+        dsub) snapshot.  Billing per disk-tier chunk: ``pq_codes_read``
+        (code bytes) when its codes serve, ``abstract`` (min/max bytes)
+        when it degrades — degradations are observable in the ledger.
+
+        The code gather runs through the ``pq_read`` fault choke point
+        with bounded retry; exhaustion degrades the whole gather to
+        min/max (counted in ``fault_counters['pq_fallbacks']``) instead
+        of surfacing I/O errors into importance evaluation — selection
+        is an estimator, never worth failing a round over.
+        """
+        assert self.pq, "store built with abstract_kind='minmax'"
+        with self._lock:
+            B = len(chunks_by_seq)
+            ncmax = max((len(c) for c in chunks_by_seq.values()), default=0)
+            km = np.zeros((B, ncmax, self.kv_heads, self.head_dim),
+                          np.float32)
+            kn = np.zeros_like(km)
+            codes = np.zeros((B, ncmax, self.chunk, self.kv_heads,
+                              self.pq_m), np.uint8)
+            valid = np.zeros((B, ncmax), bool)
+            billed: Dict[int, float] = {}
+            for i, (seq, chunks) in enumerate(chunks_by_seq.items()):
+                idx = np.asarray(list(chunks), np.int64)
+                m = self._shared_map.get(seq)
+                rows = seq if m is None else np.asarray(
+                    [m.get(int(c), seq) for c in idx], np.int64)
+                km[i, :len(idx)] = self._abs_km[rows, layer, idx]
+                kn[i, :len(idx)] = self._abs_kn[rows, layer, idx]
+                pqv = np.array(self._pq_valid[rows, layer, idx])
+                rlist = np.broadcast_to(rows, idx.shape)
+
+                def read():
+                    self._fault_point(
+                        "pq_read",
+                        [(int(p), layer, int(c))
+                         for p, c in zip(rlist, idx)])
+                    return np.asarray(self._pq_codes[rows, layer, idx])
+
+                blk = None
+                if pqv.any():
+                    try:
+                        blk = self._with_retries(read)
+                    except DiskIOExhausted:
+                        # persistent code-read failure: every chunk of
+                        # this gather degrades to its min/max box
+                        self._count("pq_fallbacks",
+                                    int(np.count_nonzero(pqv)))
+                        pqv[:] = False
+                if blk is not None and self._pq_crc is not None:
+                    for j in np.nonzero(pqv)[0]:
+                        p, c = int(rlist[j]), int(idx[j])
+                        if self._crc32(blk[j]) != int(
+                                self._pq_crc[p, layer, c]):
+                            # silent media corruption: quarantine the
+                            # codes (min/max serves; the requant sweep
+                            # re-encodes off the replica)
+                            pqv[j] = False
+                            self._pq_valid[p, layer, c] = False
+                            key = (p, layer, c)
+                            self._requant_pending.setdefault(
+                                key, self._sweep_round)
+                            self._count("checksum_failures")
+                            self._count("pq_fallbacks")
+                if blk is not None:
+                    codes[i, :len(idx)][pqv] = blk[pqv]
+                valid[i, :len(idx)] = pqv
+                disk = np.asarray(self.tier[rows, layer, idx] == DISK)
+                n_pq = int(np.count_nonzero(disk & pqv))
+                n_mm = int(np.count_nonzero(disk & ~pqv))
+                for _ in range(n_pq):
+                    self._record(seq, DISK, HOST, "pq_codes_read",
+                                 float(self.pq_bytes))
+                for _ in range(n_mm):
+                    self._record(seq, DISK, HOST, "abstract",
+                                 self.abstract_bytes)
+                billed[seq] = (n_pq * float(self.pq_bytes)
+                               + n_mm * float(self.abstract_bytes))
+            with self._pq_lock:
+                cb = self._pq_cb[layer].copy()
+            return km, kn, codes, valid, cb, billed
 
     # ------------------------------------------------------------------
     def _promote_device(self, key: Tuple[int, int, int], kc: np.ndarray,
@@ -1867,6 +2083,13 @@ class TieredKVStore:
                 # row — reads fall back to the lossless fp16 replica until
                 # the requant sweep re-packs the chunk once it goes quiet
                 self._sidecar_valid[sq, layer, cs] = False
+            if self.pq:
+                # same staleness rule for PQ codes (I8): the appended row
+                # is not in the codes, so importance falls back to the
+                # chunk's min/max box — bitwise the minmax-path score —
+                # until the sweep re-encodes the quiet chunk
+                self._pq_valid[sq, layer, cs] = False
+            if self.disk_sidecar or self.pq:
                 for i in range(len(sq)):
                     key = (int(sq[i]), layer, int(cs[i]))
                     self._requant_pending[key] = self._sweep_round
@@ -1909,7 +2132,7 @@ class TieredKVStore:
         write-behind on that worker; a concurrent append (or slot reuse)
         bumps the chunk's version and aborts that chunk's repack.  Returns
         the number of chunks submitted for repack."""
-        if not self.disk_sidecar:
+        if not (self.disk_sidecar or self.pq):
             return 0
         # prune landed repacks so the in-flight list stays bounded on a
         # long-running server (one append per sweep otherwise), surfacing
@@ -1949,10 +2172,12 @@ class TieredKVStore:
     @worker_thread
     def _requant_chunks(self, keys: List[Tuple[int, int, int]],
                         vers: Dict[Tuple[int, int, int], int]) -> None:
-        """Re-pack the fp16 replica of each chunk into its int sidecar.
-        Quantization runs OUTSIDE the lock on private copies; the write
-        re-validates the per-chunk version under the lock so a repack can
-        never mark a sidecar valid over rows it did not see."""
+        """Re-pack the fp16 replica of each chunk into its int sidecar
+        and/or re-encode its PQ codes off the current replica bytes.
+        Quantization and the PQ encode (jax) run OUTSIDE the lock on
+        private copies; the write re-validates the per-chunk version
+        under the lock so a repack can never mark a sidecar (or codes)
+        valid over rows it did not see."""
         for seq, layer, c in keys:
             key = (seq, layer, c)
             with self._lock:
@@ -1961,39 +2186,63 @@ class TieredKVStore:
                 planes = [np.array(self._disk[seq, layer, c, pl])
                           for pl in range(self.planes)]
                 # the repack READS the fp16 replica off disk before it
-                # writes the packed sidecar back — both directions bill
+                # writes the packed sidecar / fresh codes back — both
+                # directions bill (pq-only stores pay the same read)
                 self._record(seq, DISK, HOST, "sidecar_repack_read",
                              float(self.chunk_bytes))
-            packed = [compression.quantize_chunks(p[None], self.transit_codec)
-                      for p in planes]
+            packed = None
+            if self.disk_sidecar:
+                packed = [compression.quantize_chunks(p[None],
+                                                      self.transit_codec)
+                          for p in planes]
+            pq_codes_c = None
+            if self.pq:
+                with self._pq_lock:
+                    cb = self._pq_cb[layer].copy()
+                pq_codes_c = pq_encode(
+                    planes[0].reshape(-1, self.head_dim).astype(np.float32),
+                    cb, impl=self.pq_impl).reshape(
+                        self.chunk, self.kv_heads, self.pq_m)
             # the repack already paid for reading the whole replica — use
             # it to refresh the chunk's checksums for free: the replica
             # CRC leaves append-dirtied (state 2) for valid (state 1),
-            # and the sidecar CRC covers the freshly-packed payload
+            # and the sidecar/code CRCs cover the fresh derived bytes
             rep_crc = self._crc32(np.stack(planes)) \
                 if self._crc is not None else None
             side_crc = None
-            if self._q_crc is not None:
+            if packed is not None and self._q_crc is not None:
                 side_crc = self._sidecar_crc(
                     np.stack([pd.reshape(self.chunk, -1)
                               for pd, _ in packed]),
                     np.stack([psc[0] for _, psc in packed]))
+            pq_crc_v = self._crc32(pq_codes_c) \
+                if pq_codes_c is not None and self._pq_crc is not None \
+                else None
             with self._lock:
                 if self._chunk_version[key] != vers[key]:
                     continue            # raced an append mid-repack
-                for pl, (pd, psc) in enumerate(packed):
-                    self._disk_q[seq, layer, c, pl] = pd.reshape(self.chunk,
-                                                                 -1)
-                    self._disk_scale[seq, layer, c, pl] = psc[0]
-                self._sidecar_valid[seq, layer, c] = True
+                if packed is not None:
+                    for pl, (pd, psc) in enumerate(packed):
+                        self._disk_q[seq, layer, c, pl] = \
+                            pd.reshape(self.chunk, -1)
+                        self._disk_scale[seq, layer, c, pl] = psc[0]
+                    self._sidecar_valid[seq, layer, c] = True
+                    if side_crc is not None:
+                        self._q_crc[seq, layer, c] = side_crc
+                    self.sidecar_repacks += 1
+                    self._record(seq, HOST, DISK, "sidecar_repack",
+                                 self._packed_bytes())
                 if rep_crc is not None:
                     self._crc[seq, layer, c] = rep_crc
                     self._crc_state[seq, layer, c] = _CRC_VALID
-                if side_crc is not None:
-                    self._q_crc[seq, layer, c] = side_crc
-                self.sidecar_repacks += 1
-                self._record(seq, HOST, DISK, "sidecar_repack",
-                             self._packed_bytes())
+                if pq_codes_c is not None:
+                    self._pq_codes[seq, layer, c] = pq_codes_c
+                    self._pq_valid[seq, layer, c] = True
+                    if pq_crc_v is not None:
+                        self._pq_crc[seq, layer, c] = pq_crc_v
+                    self.pq_reencodes += 1
+                    self._record(seq, HOST, DISK, "pq_codes_write",
+                                 float(self.pq_bytes))
 
     @any_thread
     def requant_fence(self) -> None:
@@ -2043,6 +2292,8 @@ class TieredKVStore:
             self.tier[seq] = HOST
             self.access[seq] = 0.0
             self._sidecar_valid[seq] = False
+            if self._pq_valid is not None:
+                self._pq_valid[seq] = False
             # retire the slot's requant state: pending entries drop and the
             # version bump aborts any in-flight repack of the old data
             for key in [k for k in self._requant_pending if k[0] == seq]:
@@ -2089,6 +2340,12 @@ class TieredKVStore:
             self._abs_km[p, layer, c] = kc.max(axis=0)
             self._abs_kn[p, layer, c] = kc.min(axis=0)
             self._sidecar_valid[p, layer, c] = False
+            if self._pq_valid is not None:
+                # restored bytes carry no fresh codes: min/max serves the
+                # chunk until the sweep lazily re-encodes it
+                self._pq_valid[p, layer, c] = False
+                self._requant_pending.setdefault((p, layer, c),
+                                                 self._sweep_round)
             # abort any in-flight repack that read the pre-restore bytes:
             # its version check fails and it never re-marks stale CRCs
             if (p, layer, c) in self._chunk_version:
@@ -2116,6 +2373,7 @@ class TieredKVStore:
         with self._lock:
             out["disk_lost"] = float(len(self._disk_lost))
             out["degraded_seqs"] = float(len(self.degraded_seqs))
+            out["pq_reencodes"] = float(self.pq_reencodes)
         return out
 
     def device_bytes(self) -> int:
@@ -2157,3 +2415,10 @@ class TieredKVStore:
         if self._q_crc is not None:
             del self._q_crc
             self._q_crc = None
+        if self._pq_codes is not None:
+            del self._pq_codes
+            del self._pq_codebook
+            self._pq_codes = self._pq_codebook = None
+        if self._pq_crc is not None:
+            del self._pq_crc
+            self._pq_crc = None

@@ -65,14 +65,15 @@ def _engine(cfg, params, *, plan=None, debug_sync=True, **ecfg_kw):
 
 
 def _drive(plan=None, *, debug_sync=True, max_new=3, scfg_kw=None,
-           req_kw=None):
+           req_kw=None, ecfg_kw=None):
     """Run 3 requests through the batched scheduler; returns
     (finished+rejected requests, engine) with the store still open so the
     caller can leak-check before close()."""
     from repro.serving.scheduler import (ContinuousBatcher, Request,
                                          SchedulerCfg)
     cfg, params, prompts = _setup()
-    eng = _engine(cfg, params, plan=plan, debug_sync=debug_sync)
+    eng = _engine(cfg, params, plan=plan, debug_sync=debug_sync,
+                  **(ecfg_kw or {}))
     kw = dict(max_active=2, chunk=16, overlap_admission=True)
     kw.update(scfg_kw or {})
     b = ContinuousBatcher(cfg=SchedulerCfg(**kw), engine=eng)
@@ -292,6 +293,72 @@ def test_failed_seq_releases_prefix_refcounts():
     assert eng.store.prefix_stats()["shared_refs"] == 0
     assert sorted(eng._free) == list(range(eng.max_seqs))
     eng.store.close()
+
+
+def _ledger_balanced(eng):
+    """Shared traffic log == Σ live seq_logs + Σ retired_logs, key by key
+    (docs/INVARIANTS.md I3 — degradation paths must keep billing exact)."""
+    from collections import defaultdict
+    want = defaultdict(float)
+    for lg in list(eng.store.seq_logs.values()) + list(eng.store.retired_logs):
+        for key, v in lg.bytes.items():
+            want[key] += v
+    got = eng.store.log.bytes
+    assert set(got) == set(want)
+    for key in want:
+        assert got[key] == pytest.approx(want[key]), key
+
+
+@pytest.mark.chaos
+def test_pq_read_io_errors_degrade_bitwise_to_minmax():
+    """Persistent ``pq_read`` io_errors exhaust the retry budget every
+    round; ADC selection degrades to the min/max bounds path (ISSUE-10 /
+    INVARIANTS I8) so the PQ engine's streams are token-identical to the
+    min/max reference engine — selection is an estimator, a dead code
+    plane never fails a request.  Degradations are billed ``abstract``,
+    with the ledger exactly balanced and zero slot leaks."""
+    ref = _reference()
+    plan = FaultPlan(schedule={"pq_read": {i: "io_error"
+                                           for i in range(4000)}})
+    reqs, b, eng = _drive(plan, ecfg_kw={"pq_abstracts": True})
+    try:
+        assert {r.rid for r in reqs} == set(ref)
+        for r in reqs:
+            assert r.error is None and not r.degraded, (r.rid, r.error)
+            assert list(r.out) == ref[r.rid], r.rid
+        fs = eng.fault_stats()
+        assert fs["pq_fallbacks"] > 0, fs
+        # every degraded disk read was billed as a min/max ``abstract``
+        # transfer, never ``pq_codes_read`` — the ledger shows the fault
+        assert eng.store.log.total(kind="pq_codes_read") == 0.0
+        _ledger_balanced(eng)
+        _assert_no_leaks(b, eng)
+    finally:
+        eng.store.close()
+
+
+@pytest.mark.chaos
+def test_pq_read_bitflips_quarantined_no_leaks():
+    """``pq_read`` bitflips corrupt stored code bytes; the CRC layer must
+    quarantine each victim chunk (min/max serves it) without failing or
+    degrading any request — PQ codes only steer selection, never values —
+    and without leaking slots, futures, or ledger bytes."""
+    plan = FaultPlan(schedule={"pq_read": {i: "bitflip"
+                                           for i in range(0, 40, 2)}})
+    reqs, b, eng = _drive(plan, ecfg_kw={"pq_abstracts": True})
+    try:
+        for r in reqs:
+            assert r.t_done is not None
+            assert r.error is None and not r.degraded, (r.rid, r.error)
+        fired = [e for e in plan.fired_events() if e.kind == "bitflip"]
+        assert fired                       # the schedule actually landed
+        fs = eng.fault_stats()
+        assert fs["checksum_failures"] > 0, fs
+        assert fs["pq_fallbacks"] > 0, fs
+        _ledger_balanced(eng)
+        _assert_no_leaks(b, eng)
+    finally:
+        eng.store.close()
 
 
 @pytest.mark.chaos

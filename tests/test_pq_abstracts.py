@@ -1,0 +1,347 @@
+"""PQ abstract plane properties (ISSUE-10 tentpole gates).
+
+Three layers of guarantees, matching how the plane is wired:
+
+* **codec** — encode/decode round-trips are nearest-centroid optimal and
+  deterministic, and the engine's ADC scoring path is EXACTLY the dot
+  product against the decoded codes (the lookup table is an identity,
+  not an approximation, given the codes);
+* **selection quality** — on cluster-structured keys whose runs are
+  shorter than a chunk (the regime the paper's min/max boxes handle
+  worst), ADC ranking recovers the exact-attention top-k at least as
+  well as the min/max upper bounds, seed for seed;
+* **staleness / fallback (I8)** — an append invalidates the chunk's
+  codes; until the requant sweep re-encodes them the store serves the
+  chunk's min/max box BITWISE (same km/kn bytes the minmax path reads,
+  so `np.where(valid, adc, ub)` reproduces the minmax score exactly),
+  billing `abstract` instead of `pq_codes_read`; after the sweep the
+  codes equal a fresh encode of the current replica.  At the engine
+  level, a PQ store whose code reads *always* fail degrades to a token
+  stream identical to the pq-disabled engine.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.pq import (adc_chunk_scores, pq_decode, pq_encode,
+                              pq_train)
+from repro.serving.faults import FaultPlan
+from repro.serving.offload import DISK, TieredKVStore
+
+
+def _clustered(rng, S, Hkv, hd, n_clusters=8, span=8, noise=0.25):
+    """Keys with cluster runs of ``span`` tokens (temporal locality
+    shorter than a chunk): min/max boxes over a chunk mix clusters and
+    go loose, while per-token PQ codes stay tight."""
+    centers = rng.randn(n_clusters, hd).astype(np.float32) * 2.0
+    assign = rng.randint(0, n_clusters, (S // span, Hkv))
+    assign = np.repeat(assign[:, None, :], span, 1).reshape(S, Hkv)
+    return centers[assign] + rng.randn(S, Hkv, hd).astype(np.float32) * noise
+
+
+def _trained(vecs, m, K):
+    cb0 = np.zeros((m, K, vecs.shape[-1] // m), np.float32)
+    cnt0 = np.zeros((m, K), np.float64)
+    return pq_train(vecs, cb0, cnt0, iters=4)
+
+
+# ---------------------------------------------------------------------------
+# codec properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4]),
+       st.sampled_from([4, 16, 64]))
+def test_pq_roundtrip_nearest_centroid_optimal(seed, m, K):
+    """decode(encode(x)) picks, per subspace, the closest centroid in the
+    trained codebook — no other code could reconstruct better — and the
+    encode is deterministic (byte-identical on a second call)."""
+    rng = np.random.RandomState(seed)
+    hd = 16
+    vecs = _clustered(rng, 64, 2, hd).reshape(-1, hd)
+    cb, cnt = _trained(vecs, m, K)
+    # running counts carry the LAST Lloyd pass: each vector lands in
+    # exactly one cluster per subspace
+    assert cnt.sum() == vecs.shape[0] * m
+    codes = pq_encode(vecs, cb)
+    assert codes.dtype == np.uint8 and codes.shape == (vecs.shape[0], m)
+    np.testing.assert_array_equal(codes, pq_encode(vecs, cb))
+    dec = pq_decode(codes, cb)
+    dsub = hd // m
+    xs = vecs.reshape(-1, m, dsub)
+    got = ((xs - dec.reshape(-1, m, dsub)) ** 2).sum(-1)       # (n, m)
+    best = ((xs[:, :, None, :] - cb[None]) ** 2).sum(-1).min(-1)
+    np.testing.assert_allclose(got, best, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_adc_scores_equal_decoded_dot(seed):
+    """The engine's ADC path (LUT + code gather + subspace sum + live-token
+    max) is exactly max over live tokens of q_sum · decode(codes)."""
+    rng = np.random.RandomState(seed)
+    B, Hkv, hd, nc, chunk, m, K = 2, 2, 16, 4, 8, 2, 16
+    cb = rng.randn(m, K, hd // m).astype(np.float32)
+    codes = rng.randint(0, K, (B, nc, chunk, Hkv, m)).astype(np.uint8)
+    q = rng.randn(B, Hkv, hd).astype(np.float32)
+    lengths = np.asarray([nc * chunk, nc * chunk - chunk // 2])
+    got = adc_chunk_scores(q, cb, codes, lengths)
+    dec = pq_decode(codes, cb)                        # (B,nc,chunk,Hkv,hd)
+    tok = np.einsum("bhd,bcshd->bhcs", q, dec)
+    pos = np.arange(nc * chunk).reshape(nc, chunk)
+    tok = np.where(pos[None, None] < lengths[:, None, None, None],
+                   tok, -np.inf)
+    np.testing.assert_allclose(got, tok.max(-1), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# selection quality: overlap@k vs exact attention ranking
+# ---------------------------------------------------------------------------
+
+def _overlaps(seed, *, S=256, chunk=16, Hkv=2, hd=16, k=4, m=2, K=16,
+              n_queries=8):
+    """(minmax, pq) overlap@k against the exact chunk ranking, mirroring
+    the engine's score convention (max over tokens, then kv heads),
+    averaged over ``n_queries`` query draws on one key layout — a single
+    overlap@4 sample only has five possible values, so the average is
+    what makes a paired per-seed comparison meaningful."""
+    rng = np.random.RandomState(seed)
+    nc = S // chunk
+    keys = _clustered(rng, S, Hkv, hd)
+    kc = keys.reshape(nc, chunk, Hkv, hd)
+    cb, _ = _trained(keys.reshape(-1, hd), m, K)
+    codes = pq_encode(keys.reshape(-1, hd), cb) \
+        .reshape(1, nc, chunk, Hkv, m)
+    ov_mm = ov_pq = 0.0
+    for _ in range(n_queries):
+        q = rng.randn(Hkv, hd).astype(np.float32)
+        tok = np.einsum("hd,shd->hs", q, keys)
+        exact = tok.reshape(Hkv, nc, chunk).max(-1).max(0)
+        ub = np.maximum(q[None] * kc.max(1), q[None] * kc.min(1)) \
+            .sum(-1).max(-1)
+        adc = adc_chunk_scores(q[None], cb, codes, np.asarray([S]))[0].max(0)
+        te = set(np.argsort(-exact)[:k])
+        ov = lambda s: len(set(np.argsort(-s)[:k]) & te) / k  # noqa: E731
+        ov_mm += ov(ub)
+        ov_pq += ov(adc)
+    return ov_mm / n_queries, ov_pq / n_queries
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_selection_overlap_pq_gated_at_minmax(seed):
+    """Seed for seed (paired: same keys, same queries), ADC top-k overlap
+    with the exact ranking matches or beats the min/max upper-bound
+    ranking on sub-chunk-clustered keys, up to ONE rank across the query
+    panel (1/(k*n_queries)) — overlap@k is quantized, so a single
+    boundary tie must not fail the property."""
+    mm, pq = _overlaps(seed)
+    assert pq >= mm - 1.0 / (4 * 8) - 1e-9, (seed, mm, pq)
+
+
+def test_selection_overlap_pq_beats_minmax_on_average():
+    """Across a fixed seed panel, ADC recovers clearly more of the exact
+    top-k than min/max — the fig14 gate's offline form."""
+    mm, pq = zip(*[_overlaps(s) for s in range(16)])
+    assert np.mean(pq) >= np.mean(mm) + 0.1, (np.mean(mm), np.mean(pq))
+    assert np.mean(pq) >= 0.6
+
+
+# ---------------------------------------------------------------------------
+# staleness / fallback through the store (I8)
+# ---------------------------------------------------------------------------
+
+def _pq_store(**kw):
+    kw.setdefault("transit_codec", None)
+    return TieredKVStore(1, 4, 8, 2, 16, n_seqs=1, abstract_kind="pq", **kw)
+
+
+def _ub_scores(q, km, kn):
+    """The engine's bounds-matmul score, max over kv heads — np mirror."""
+    return np.maximum(q[None] * km, q[None] * kn).sum(-1).max(-1)
+
+
+def test_append_invalidates_then_reencodes_bitwise():
+    rng = np.random.RandomState(3)
+    st_ = _pq_store()
+    try:
+        S, Hkv, hd = 32, 2, 16
+        k = rng.randn(S, Hkv, hd).astype(np.float32)
+        v = rng.randn(S, Hkv, hd).astype(np.float32)
+        st_.ingest(0, k, v)
+        st_.demote(0, range(4), to=DISK)
+        km0, kn0, codes0, valid0, cb0, billed0 = \
+            st_.read_abstracts_pq_batch(0, {0: [0, 1, 2, 3]})
+        assert valid0.all()
+        assert billed0[0] == 4 * st_.pq_bytes
+        # codes on disk are a fresh encode of the replica bytes
+        rep = np.asarray(st_._disk[0, 0, :, 0], np.float32)  # (4,chunk,Hkv,hd)
+        np.testing.assert_array_equal(
+            codes0[0], pq_encode(rep.reshape(-1, hd), cb0)
+            .reshape(4, st_.chunk, Hkv, st_.pq_m))
+
+        # one decode append lands in chunk 1 -> its codes go stale
+        st_.append_token(0, 8, k[8] + 1.0, v[8])
+        km1, kn1, codes1, valid1, cb1, billed1 = \
+            st_.read_abstracts_pq_batch(0, {0: [0, 1, 2, 3]})
+        assert list(valid1[0]) == [True, False, True, True]
+        assert billed1[0] == 3 * st_.pq_bytes + st_.abstract_bytes
+        # the dirty chunk's km/kn are byte-identical to the minmax path,
+        # so the engine's np.where merge reproduces the minmax score
+        km_mm, kn_mm, _ = st_.read_abstracts_batch(0, {0: [0, 1, 2, 3]})
+        np.testing.assert_array_equal(km1, km_mm)
+        np.testing.assert_array_equal(kn1, kn_mm)
+        q = rng.randn(Hkv, hd).astype(np.float32)
+        adc = adc_chunk_scores(q[None], cb1, codes1,
+                               np.asarray([32]))[0].max(0)
+        merged = np.where(valid1[0], adc, _ub_scores(q, km1[0], kn1[0]))
+        assert merged[1] == _ub_scores(q, km_mm[0], kn_mm[0])[1]
+
+        # two quiet sweep rounds re-encode the chunk off the CURRENT bytes
+        assert st_.requant_sweep() == 0      # registered this round: skip
+        assert st_.requant_sweep() == 1
+        km2, kn2, codes2, valid2, cb2, _ = \
+            st_.read_abstracts_pq_batch(0, {0: [0, 1, 2, 3]})
+        assert valid2.all() and st_.pq_reencodes == 1
+        rep1 = np.asarray(st_._disk[0, 0, 1, 0], np.float32)
+        np.testing.assert_array_equal(
+            codes2[0, 1], pq_encode(rep1.reshape(-1, hd), cb2)
+            .reshape(st_.chunk, Hkv, st_.pq_m))
+        # ledger knows both planes: codebook + 4 ingests + 1 re-encode
+        wrote = st_.log.total(kind="pq_codes_write")
+        assert wrote == 5 * st_.pq_bytes + 4.0 * st_.pq_m * \
+            st_.pq_centroids * (st_.head_dim // st_.pq_m)
+    finally:
+        st_.close()
+
+
+def test_pq_read_faults_degrade_to_minmax_billing():
+    """Persistent pq_read io_errors exhaust the retry budget and the whole
+    gather serves min/max boxes — valid all-False, `abstract` billing,
+    pq_fallbacks counted, and no error escapes the read."""
+    plan = FaultPlan(schedule={
+        "pq_read": {i: "io_error" for i in range(64)}})
+    st_ = _pq_store(faults=plan, io_retries=2, io_backoff_s=0.0)
+    try:
+        rng = np.random.RandomState(5)
+        k = rng.randn(32, 2, 16).astype(np.float32)
+        st_.ingest(0, k, k)
+        st_.demote(0, range(4), to=DISK)
+        km, kn, codes, valid, cb, billed = \
+            st_.read_abstracts_pq_batch(0, {0: [0, 1, 2, 3]})
+        assert not valid.any() and not codes.any()
+        assert billed[0] == 4 * st_.abstract_bytes
+        assert st_.fault_counters["pq_fallbacks"] == 4
+        km_mm, kn_mm, _ = st_.read_abstracts_batch(0, {0: [0, 1, 2, 3]})
+        np.testing.assert_array_equal(km, km_mm)
+        np.testing.assert_array_equal(kn, kn_mm)
+    finally:
+        st_.close()
+
+
+def test_pq_bitflip_caught_by_crc_and_requeued():
+    """A flipped code byte fails CRC: the chunk quarantines (min/max
+    serves), the sweep re-encodes it, and the next read is valid again."""
+    plan = FaultPlan(schedule={"pq_read": {0: "bitflip"}})
+    st_ = _pq_store(faults=plan, io_backoff_s=0.0)
+    try:
+        rng = np.random.RandomState(6)
+        k = rng.randn(32, 2, 16).astype(np.float32)
+        st_.ingest(0, k, k)
+        _, _, _, valid, _, _ = st_.read_abstracts_pq_batch(0, {0: [0, 1]})
+        assert list(valid[0]) == [False, True]
+        assert st_.fault_counters["checksum_failures"] == 1
+        assert st_.fault_counters["pq_fallbacks"] == 1
+        st_.requant_sweep()
+        st_.requant_sweep()
+        _, _, _, valid2, _, _ = st_.read_abstracts_pq_batch(0, {0: [0, 1]})
+        assert valid2.all() and st_.pq_reencodes == 1
+    finally:
+        st_.close()
+
+
+# ---------------------------------------------------------------------------
+# engine token identity (config gate + degraded-PQ equivalence)
+# ---------------------------------------------------------------------------
+
+_SETUP = {}
+
+
+def _setup():
+    if not _SETUP:
+        import dataclasses
+
+        import jax
+        from repro.configs import get_config
+        from repro.models import lm
+        cfg = get_config("longchat-7b-32k", smoke=True)
+        cfg = dataclasses.replace(
+            cfg, leoam=dataclasses.replace(cfg.leoam, chunk_size=16,
+                                           importance_rate=0.4,
+                                           early_rate=0.6,
+                                           min_seq_for_sparse=32))
+        _SETUP["cfg"] = cfg
+        _SETUP["params"] = lm.init(cfg, jax.random.PRNGKey(1))
+        rng = np.random.RandomState(11)
+        _SETUP["prompts"] = [rng.randint(2, cfg.vocab_size, n)
+                             for n in (48, 57)]
+    return _SETUP["cfg"], _SETUP["params"], _SETUP["prompts"]
+
+
+def _run_engine(pq, plan=None, rounds=4):
+    from repro.serving.engine import BatchedLeoAMEngine, EngineCfg
+    cfg, params, prompts = _setup()
+    eng = BatchedLeoAMEngine(
+        cfg, params,
+        EngineCfg(max_len=128, selection="tree", disk_sidecar=False,
+                  pq_abstracts=pq, fault_plan=plan, io_backoff_s=0.0),
+        max_seqs=2)
+    toks = {}
+    for p in prompts:
+        sid, tok = eng.add_sequence(p)
+        toks[sid] = tok
+    out = {sid: [] for sid in toks}
+    for _ in range(rounds):
+        toks = eng.decode_round(toks)
+        for sid, t in toks.items():
+            out[sid].append(t)
+    fs = eng.fault_stats()
+    store = eng.store
+    pq_billed = store.log.total(kind="pq_codes_read") \
+        + store.log.total(kind="pq_codes_write")
+    store.close()
+    return out, fs, pq_billed
+
+
+def test_engine_pq_disabled_is_pure_minmax():
+    """Config gate: pq_abstracts=False builds a minmax-only store — no PQ
+    arrays, no PQ billing kinds, and the run is deterministic."""
+    out0, _, billed0 = _run_engine(pq=False)
+    out1, _, billed1 = _run_engine(pq=False)
+    assert out0 == out1
+    assert billed0 == billed1 == 0.0
+
+
+def test_engine_degraded_pq_token_identical_to_minmax():
+    """With EVERY pq_read failing persistently, the PQ engine's selection
+    degrades chunk-for-chunk to the bitwise min/max score — the token
+    streams match the pq-disabled engine exactly."""
+    ref, _, _ = _run_engine(pq=False)
+    plan = FaultPlan(schedule={
+        "pq_read": {i: "io_error" for i in range(100_000)}})
+    got, fs, billed = _run_engine(pq=True, plan=plan)
+    assert got == ref
+    assert fs["pq_fallbacks"] > 0 and fs["io_retries"] > 0
+    assert billed > 0            # ingest still wrote codes + codebook
+
+
+@pytest.mark.slow
+def test_engine_pq_enabled_runs_and_reencodes():
+    """PQ-on happy path: codes serve (or re-encode after appends) and the
+    run completes with PQ write/read billing in the ledger."""
+    out, fs, billed = _run_engine(pq=True, rounds=6)
+    assert all(len(v) == 6 for v in out.values())
+    assert fs["pq_fallbacks"] == 0
+    assert billed > 0
